@@ -1,0 +1,23 @@
+"""Benchmark utilities: wall-clock timing + CSV emission."""
+import sys
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (us) of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.2f},{derived}")
+    sys.stdout.flush()

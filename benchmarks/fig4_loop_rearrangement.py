@@ -1,0 +1,58 @@
+"""Figure 4 reproduction: required memory bandwidth under Mloop vs Kloop
+for representative conv layers, against the 4.2 GB/s board limit.
+
+The paper's qualitative claims checked here:
+  * AlexNet layers (A, B) sit below the limit in either mode;
+  * ResNet50 1x1 layers (G, H) exceed the limit under Mloop and need
+    Kloop;
+  * the better mode is layer-dependent (the crossover exists).
+"""
+from repro.core import SNOWFLAKE, Dataflow, choose_matmul_dataflow
+from .common import emit
+
+# (label, H, W, k, C_in, C_out, stride, pad) — A,B from AlexNet;
+# C..F mid ResNet; G,H ResNet50-style 1x1 with many channels.
+CONVS = [
+    ("A_alexnet_conv2", 27, 27, 5, 64, 192, 1, 2),
+    ("B_alexnet_conv4", 13, 13, 3, 384, 256, 1, 1),
+    ("C_resnet_3x3_128", 28, 28, 3, 128, 128, 1, 1),
+    ("D_resnet_3x3_256", 14, 14, 3, 256, 256, 1, 1),
+    ("E_resnet_1x1_512", 7, 7, 1, 512, 2048, 1, 0),
+    ("F_resnet_3x3_512", 7, 7, 3, 512, 512, 1, 1),
+    ("G_resnet50_1x1_1024", 14, 14, 1, 1024, 2048, 2, 0),
+    ("H_resnet50_1x1_2048", 7, 7, 1, 2048, 512, 1, 0),
+]
+
+LIMIT = 4.2  # GB/s
+
+
+def run():
+    below_both, kloop_needed = [], []
+    for (label, H, W, k, cin, cout, s, p) in CONVS:
+        oh = (H + 2 * p - k) // s + 1
+        M, K, N = oh * oh, cin * k * k, cout
+        flops = 2.0 * M * K * N
+        t_compute = flops / SNOWFLAKE.peak_flops
+        dec = choose_matmul_dataflow(M, K, N, 2, SNOWFLAKE,
+                                     allow_output_stationary=False)
+        bws = {}
+        for mode, traffic in dec.alternatives.items():
+            bws[mode] = traffic / t_compute / 1e9   # GB/s needed at peak
+        chosen = dec.dataflow.value
+        emit(f"fig4/{label}", bws[chosen],
+             f"mloop_gbps={bws.get('mloop', 0):.2f};"
+             f"kloop_gbps={bws.get('kloop', 0):.2f};chosen={chosen};"
+             f"limit_gbps={LIMIT}")
+        if max(bws.values()) < LIMIT:
+            below_both.append(label)
+        if (bws.get("mloop", 0) > LIMIT
+                and bws.get("kloop", float("inf")) <= LIMIT):
+            kloop_needed.append(label)
+    emit("fig4/below_limit_both_modes", float(len(below_both)),
+         ";".join(below_both))
+    emit("fig4/kloop_required", float(len(kloop_needed)),
+         ";".join(kloop_needed) + ";paper=G,H-style 1x1 layers")
+
+
+if __name__ == "__main__":
+    run()

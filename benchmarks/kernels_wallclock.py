@@ -1,0 +1,49 @@
+"""Wall-clock sanity of the Pallas kernels (interpret mode, reduced
+shapes) against their jnp references — structural overhead check, not a
+TPU measurement (this container is CPU-only)."""
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import Dataflow
+from repro.kernels import (flash_attention, flash_ref, matmul, matmul_ref,
+                           mamba2_scan, wkv6)
+from .common import emit, time_call
+
+K0 = jax.random.PRNGKey(0)
+
+
+def run():
+    ks = jax.random.split(K0, 6)
+    a = jax.random.normal(ks[0], (512, 512), jnp.float32)
+    b = jax.random.normal(ks[1], (512, 512), jnp.float32)
+    for df in Dataflow:
+        f = jax.jit(lambda a, b, df=df: matmul(
+            a, b, impl="pallas", dataflow=df, block=(128, 128, 128),
+            interpret=True))
+        us = time_call(f, a, b)
+        emit(f"kernel/matmul512/{df.value}", us, "interpret")
+    f = jax.jit(lambda a, b: matmul_ref(a, b))
+    emit("kernel/matmul512/xla_ref", time_call(f, a, b), "")
+
+    q = jax.random.normal(ks[2], (1, 4, 512, 64), jnp.float32)
+    f = jax.jit(lambda q: flash_attention(q, q, q, causal=True,
+                                          impl="pallas", block_q=128,
+                                          block_kv=128, interpret=True))
+    emit("kernel/flash512/pallas", time_call(f, q), "interpret")
+    f = jax.jit(lambda q: flash_ref(q, q, q, causal=True, chunk=128))
+    emit("kernel/flash512/ref", time_call(f, q), "")
+
+    x = jax.random.normal(ks[3], (1, 512, 4, 32)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (1, 512, 4))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[5], (4,)))
+    B = jax.random.normal(ks[0], (1, 512, 16)) * 0.3
+    f = jax.jit(lambda x, dt, B: mamba2_scan(
+        x, dt, A, B, B, impl="pallas", chunk=128, interpret=True))
+    emit("kernel/mamba512/pallas", time_call(f, x, dt, B), "interpret")
+    f = jax.jit(lambda x, dt, B: mamba2_scan(x, dt, A, B, B,
+                                             impl="reference"))
+    emit("kernel/mamba512/ref_scan", time_call(f, x, dt, B), "")
+
+
+if __name__ == "__main__":
+    run()

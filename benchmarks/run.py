@@ -1,0 +1,40 @@
+"""Benchmark suite: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Run as
+``PYTHONPATH=src python -m benchmarks.run [--only table1]``.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module names")
+    args = ap.parse_args()
+
+    from . import (fig4_loop_rearrangement, kernels_wallclock,
+                   quant_profile, table1_auto_vs_hand, table2_models,
+                   table3_load_balance)
+    suites = [
+        ("table1", table1_auto_vs_hand),
+        ("table2", table2_models),
+        ("fig4", fig4_loop_rearrangement),
+        ("table3", table3_load_balance),
+        ("quant", quant_profile),
+        ("kernels", kernels_wallclock),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod.run()
+        except Exception as e:   # keep the suite going; record the failure
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Table 1 reproduction: compiler-generated vs hand-optimized schedules.
+
+The paper compares auto-generated instruction streams against
+hand-written assembly on four AlexNet conv layers and finds them within
+~0.5%.  Our analogue, on the same four layers and the Snowflake analytic
+timing model:
+
+  * AUTO — the schedule compiler's conv scheduling (row strips +
+    Mloop/Kloop + stall model), exactly what compile_model emits;
+  * HAND — exhaustive search over every feasible (out_rows,
+    kernels_per_tile, loop order) triple under the same per-CU buffer
+    constraints — the "patient engineer" oracle.
+
+Paper values (ms): 3.256/3.261, 1.627/1.624, 2.188/2.187, 1.462/1.458.
+"""
+from repro.core import SNOWFLAKE, conv_node
+from repro.core.schedule import _schedule_conv
+from .common import emit
+
+LAYERS = [
+    ("alexnet_conv2", 27, 27, 5, 64, 192, 1, 2, 3.256, 3.261),
+    ("alexnet_conv3", 13, 13, 3, 192, 384, 1, 1, 1.627, 1.624),
+    ("alexnet_conv4", 13, 13, 3, 384, 256, 1, 1, 2.188, 2.187),
+    ("alexnet_conv5", 13, 13, 3, 256, 256, 1, 1, 1.462, 1.458),
+]
+
+
+def _hand_best(node) -> float:
+    """Exhaustive schedule search under the same hardware constraints."""
+    hw = SNOWFLAKE
+    d = node.dims
+    H, W, cin, cout = d["H"], d["W"], d["C_in"], d["C_out"]
+    kh, kw, s, p = d["kh"], d["kw"], d["stride"], d["pad"]
+    oh = (H + 2 * p - kh) // s + 1
+    flops = node.flops()
+    maps_b = H * W * cin * 2
+    ker_b = cin * kh * kw * cout * 2
+    out_b = oh * oh * cout * 2
+    mcap = hw.maps_buffer_bytes
+    wcap = hw.weights_buffer_bytes
+    best = float("inf")
+    import math
+    for out_rows in range(1, oh + 1):
+        in_rows = min(H, (out_rows - 1) * s + kh)
+        if in_rows * W * cin * 2 * 2 > mcap:
+            break
+        max_kpt = min(cout, wcap // (cin * kh * kw * 2 * 2))
+        if max_kpt < 1:
+            break
+        for kpt in range(1, max_kpt + 1):
+            n_map = math.ceil(oh / out_rows)
+            n_ker = math.ceil(cout / kpt)
+            halo = max(0, in_rows - out_rows * s)
+            ov = 1 + (halo * (n_map - 1)) / max(H, 1)
+            for traffic in (maps_b * ov + n_map * ker_b + out_b,     # kloop
+                            n_ker * maps_b * ov + ker_b + out_b):    # mloop
+                best = min(best, hw.exec_time(flops, traffic))
+    return best
+
+
+def run():
+    total_gap = 0.0
+    for (name, H, W, k, cin, cout, s, p, hand_ms, auto_ms) in LAYERS:
+        node = conv_node(name, H, W, cin, cout, k, k, stride=s, pad=p,
+                         batch=1)
+        sched = _schedule_conv(node, SNOWFLAKE, paper_faithful=True)
+        t_auto = sched.exec_time_s * 1e3
+        t_hand = _hand_best(node) * 1e3
+        gap = (t_auto - t_hand) / t_hand * 100
+        total_gap += abs(gap)
+        emit(f"table1/{name}/auto", t_auto * 1e3,
+             f"model_ms={t_auto:.3f};paper_ms={auto_ms}")
+        emit(f"table1/{name}/hand", t_hand * 1e3,
+             f"model_ms={t_hand:.3f};paper_ms={hand_ms};gap_pct={gap:.2f}")
+    emit("table1/mean_abs_gap_pct", total_gap / len(LAYERS),
+         "paper_gap_pct<=0.5")
+
+
+if __name__ == "__main__":
+    run()

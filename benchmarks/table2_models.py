@@ -1,0 +1,40 @@
+"""Table 2 reproduction: whole-model execution time + bandwidth on the
+Snowflake analytic model, via the full compiler pipeline
+(CNNConfig -> IR -> schedule).
+
+Paper: AlexNetOWT 10.68 ms / 1.22 GB/s; ResNet18 46.77 ms / 2.25 GB/s;
+ResNet50 218.61 ms / 1.87 GB/s (conv layers; FC excluded, as the paper
+excludes FC from its timings).
+"""
+from repro.configs import CNN_REGISTRY
+from repro.core import SNOWFLAKE, compile_model
+from repro.core.ir import LayerKind
+from repro.models.cnn import to_graph
+from .common import emit
+
+PAPER = {
+    "alexnet-owt": (10.68, 1.22),
+    "resnet18": (46.77, 2.25),
+    "resnet50": (218.61, 1.87),
+}
+
+
+def run():
+    for name, (paper_ms, paper_bw) in PAPER.items():
+        g = to_graph(CNN_REGISTRY[name], batch=1, dtype_bytes=2)
+        sched = compile_model(g, SNOWFLAKE, paper_faithful=True)
+        conv_layers = [l for l in sched.layers
+                       if l.kind in (LayerKind.CONV2D,)]
+        t = sum(l.exec_time_s for l in conv_layers)
+        traffic = sum(l.traffic_bytes for l in conv_layers)
+        bw = traffic / t / 1e9 if t else 0.0
+        emit(f"table2/{name}/exec", t * 1e9 / 1e3,
+             f"model_ms={t*1e3:.2f};paper_ms={paper_ms};"
+             f"ratio={t*1e3/paper_ms:.2f}")
+        emit(f"table2/{name}/bw", bw,
+             f"model_gbps={bw:.2f};paper_gbps={paper_bw};"
+             f"imbalance_pct={sched.load_imbalance_pct:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Cross-pod int8 gradient sync demo (distributed-optimization trick).
+
+    PYTHONPATH=src python examples/crosspod_sync.py
+
+Runs on 8 forced host devices: a 2-"pod" mesh where each pod computes a
+different gradient; the pods synchronize with the int8-compressed psum
+(4x less cross-pod traffic) and error feedback keeps the long-run
+average unbiased (printed drift ~0).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+
+sys.path.insert(0, "src")
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.crosspod import compressed_psum
+
+mesh = jax.sharding.Mesh(np.asarray(jax.devices()).reshape(2, 4),
+                         ("pod", "data"))
+
+def sync(grads, err):
+    out, err = compressed_psum(grads, "pod", error=err)
+    return out / 2.0, err
+
+f = jax.jit(jax.shard_map(sync, mesh=mesh,
+                          in_specs=(P("pod", None), P("pod", None)),
+                          out_specs=(P("pod", None), P("pod", None)),
+                          axis_names={"pod"}, check_vma=False))
+
+key = jax.random.PRNGKey(0)
+g = jax.random.normal(key, (2, 4096)) * 0.01      # per-pod gradients
+err = jnp.zeros_like(g)
+acc_true = jnp.zeros((4096,))
+acc_comp = jnp.zeros_like(g)
+for step in range(50):
+    avg, err = f(g, err)
+    acc_comp = acc_comp + avg
+    acc_true = acc_true + g.mean(0)
+drift = float(jnp.abs(acc_comp[0] - acc_true).max()
+              / jnp.abs(acc_true).max())
+print(f"50 compressed syncs: relative drift {drift:.4%} "
+      f"(error feedback keeps it unbiased)")
+print(f"bytes per sync: int8 {g[0].size}B vs f32 {g[0].size*4}B (4x less)")

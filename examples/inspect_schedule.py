@@ -1,0 +1,46 @@
+"""Schedule inspection: what the compiler decided, per layer.
+
+    PYTHONPATH=src python examples/inspect_schedule.py [--model resnet18]
+
+Prints the per-layer Mloop/Kloop choices, tile shapes, traffic and the
+Fig-4-style bandwidth table for one of the paper's CNNs, then the
+distributed-level decisions for an assigned LM architecture.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import CNN_REGISTRY, get_config
+from repro.configs.base import ShapeSpec
+from repro.core import SINGLE_POD, SNOWFLAKE, compile_model
+from repro.core.ir import LayerKind
+from repro.models.cnn import to_graph
+from repro.parallel.rules import make_plan
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--model", default="resnet18")
+ap.add_argument("--arch", default="llama3-8b")
+args = ap.parse_args()
+
+g = to_graph(CNN_REGISTRY[args.model], batch=1)
+sched = compile_model(g, SNOWFLAKE, paper_faithful=True)
+print(f"== {args.model} on Snowflake "
+      f"(exec {sched.total_exec_time_s*1e3:.1f} ms, "
+      f"avg BW {sched.summary()['avg_bw_gbps']:.2f} GB/s) ==")
+print(f"{'layer':14s} {'order':6s} {'strip':>5s} {'kpt':>4s} "
+      f"{'MB moved':>9s} {'ms':>7s} {'stall':>5s}")
+for l in sched.layers:
+    if l.kind is not LayerKind.CONV2D:
+        continue
+    ct = l.conv_tiling
+    print(f"{l.name:14s} {l.dataflow.value:6s} {ct.out_rows:5d} "
+          f"{ct.kernels_per_tile:4d} {l.traffic_bytes/1e6:9.2f} "
+          f"{l.exec_time_s*1e3:7.3f} {l.notes.get('stall', 1.0):5.2f}")
+
+cfg = get_config(args.arch)
+for shape in cfg.shapes():
+    plan = make_plan(cfg, shape, SINGLE_POD, "auto")
+    keys = {k: v for k, v in plan.decisions.items()
+            if k in ("layout", "wq", "w_gate", "embed", "experts")}
+    print(f"== {args.arch} x {shape.name}: {keys}")

@@ -1,0 +1,13 @@
+"""Batched serving example: continuous batching over fixed cache slots.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch rwkv6-7b]
+
+Works with any assigned architecture (KV-cache archs get rolling
+windows; SSM archs carry O(1) state).
+"""
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch import serve as serve_driver
+
+serve_driver.main(sys.argv[1:] + ["--smoke"])

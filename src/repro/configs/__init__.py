@@ -1,0 +1,24 @@
+"""Config registry: --arch <id> -> ArchConfig / CNNConfig."""
+from .base import ArchConfig, CNNConfig, CNNLayer, LM_SHAPES, ShapeSpec
+from .archs import (ALL_ARCHS, DEEPSEEK_7B, GRANITE_MOE_1B, LLAMA3_8B,
+                    LLAMA32_VISION_11B, LLAMA4_MAVERICK, OLMO_1B, RWKV6_7B,
+                    SMOLLM_360M, WHISPER_BASE, ZAMBA2_7B)
+from .cnns import ALEXNET_OWT, ALL_CNNS, RESNET18, RESNET50
+
+REGISTRY = {c.name: c for c in ALL_ARCHS}
+CNN_REGISTRY = {c.name: c for c in ALL_CNNS}
+
+
+def get_config(name: str):
+    if name in REGISTRY:
+        return REGISTRY[name]
+    if name in CNN_REGISTRY:
+        return CNN_REGISTRY[name]
+    if name.endswith("-smoke"):
+        return REGISTRY[name[: -len("-smoke")]].smoke()
+    raise KeyError(f"unknown arch {name!r}; known: "
+                   f"{sorted(REGISTRY) + sorted(CNN_REGISTRY)}")
+
+
+__all__ = ["ArchConfig", "CNNConfig", "CNNLayer", "LM_SHAPES", "ShapeSpec",
+           "REGISTRY", "CNN_REGISTRY", "get_config", "ALL_ARCHS", "ALL_CNNS"]

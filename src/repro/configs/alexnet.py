@@ -1,0 +1,2 @@
+"""Paper-native CNN workload config."""
+from .cnns import ALEXNET_OWT as CONFIG

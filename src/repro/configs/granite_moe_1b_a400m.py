@@ -1,0 +1,4 @@
+"""--arch config module; canonical definition in archs.py."""
+from .archs import GRANITE_MOE_1B as CONFIG
+
+SMOKE = CONFIG.smoke()

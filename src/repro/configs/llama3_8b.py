@@ -1,0 +1,4 @@
+"""--arch config module; canonical definition in archs.py."""
+from .archs import LLAMA3_8B as CONFIG
+
+SMOKE = CONFIG.smoke()

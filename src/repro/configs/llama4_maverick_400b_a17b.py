@@ -1,0 +1,4 @@
+"""--arch config module; canonical definition in archs.py."""
+from .archs import LLAMA4_MAVERICK as CONFIG
+
+SMOKE = CONFIG.smoke()

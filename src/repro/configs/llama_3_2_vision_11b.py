@@ -1,0 +1,4 @@
+"""--arch config module; canonical definition in archs.py."""
+from .archs import LLAMA32_VISION_11B as CONFIG
+
+SMOKE = CONFIG.smoke()

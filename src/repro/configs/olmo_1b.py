@@ -1,0 +1,4 @@
+"""--arch config module; canonical definition in archs.py."""
+from .archs import OLMO_1B as CONFIG
+
+SMOKE = CONFIG.smoke()

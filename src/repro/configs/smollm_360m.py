@@ -1,0 +1,4 @@
+"""--arch config module; canonical definition in archs.py."""
+from .archs import SMOLLM_360M as CONFIG
+
+SMOKE = CONFIG.smoke()

@@ -1,0 +1,24 @@
+"""Core compiler: the paper's contribution generalized for TPU.
+
+Pipeline:  ModelGraph (ir) -> tiles (tiling) -> loop order (dataflow)
+        -> balance (balance) -> ModelSchedule (schedule) -> roofline.
+"""
+from .hw import (HardwareModel, MeshDescriptor, MULTI_POD, SINGLE_POD,
+                 SNOWFLAKE, TPU_V5E)
+from .ir import (DepLabel, LayerKind, LayerNode, ModelGraph, conv_node,
+                 matmul_node)
+from .tiling import (ConvTiling, MatmulTiling, select_conv_row_strips,
+                     select_matmul_tiles)
+from .dataflow import (Dataflow, DataflowDecision, DistDecision,
+                       DistStrategy, choose_dist_strategy,
+                       choose_matmul_dataflow, matmul_traffic)
+from .balance import (assign_lpt, balance_transfers, moe_capacity,
+                      percent_imbalance, split_transfer)
+from .schedule import LayerSchedule, ModelSchedule, compile_model
+from .quant import (Q5_11, Q8_8, QFormat, dequantize, int8_matmul,
+                    int8_quantize_per_channel, qmatmul, quantize,
+                    validate_layerwise)
+from .roofline import (CollectiveStats, RooflineReport,
+                       collective_stats_from_hlo, roofline_report)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

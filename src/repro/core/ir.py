@@ -1,0 +1,262 @@
+"""Layer-graph IR — the compiler's planning substrate (paper §5.1, T1).
+
+The paper's compiler parses a Torch7 model into a doubly-linked list of
+layer objects (step 1), then scans for non-sequential inter-layer
+relations — residual/parallel paths — and attaches *dependency labels*
+(step 2) that drive memory-region allocation and the fused bypass add.
+
+This module is the JAX analogue: model configs are lowered into a
+``ModelGraph`` of ``LayerNode``s.  Each node carries a workload
+descriptor (enough to compute FLOPs / bytes / tile shapes), a dependency
+label, and an optional ``bypass_of`` back-reference (the paper's
+residual-add-on-writeback).  The schedule compiler (core/schedule.py)
+consumes this graph; the models themselves execute separately and are
+*parameterized* by the resulting schedule.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Iterator
+
+__all__ = [
+    "LayerKind",
+    "DepLabel",
+    "LayerNode",
+    "ModelGraph",
+    "matmul_node",
+    "conv_node",
+]
+
+
+class LayerKind(enum.Enum):
+    MATMUL = "matmul"          # any dense projection (QKV, O, FFN, FC, lm head)
+    CONV2D = "conv2d"          # the paper's own workloads
+    ATTENTION = "attention"    # softmax attention (flash kernel)
+    SSM_SCAN = "ssm_scan"      # Mamba2 chunked scan
+    WKV = "wkv"                # RWKV6 recurrence
+    MOE = "moe"                # expert-parallel grouped matmul
+    NORM = "norm"
+    EMBED = "embed"
+    POOL = "pool"              # max/avg pool (paper's Maxpool/Avgpool)
+    ELEMENTWISE = "elementwise"
+
+
+class DepLabel(enum.Enum):
+    """Paper §5.1 step 2: how a layer relates to its neighbours.
+
+    SEQUENTIAL       — input comes only from the previous layer.
+    RESIDUAL_SOURCE  — output is additionally consumed by a later bypass.
+    RESIDUAL_SINK    — consumes a bypass; the add is fused into this
+                       layer's writeback (paper: VMOV per write-back MAC).
+    PARALLEL         — one of several layers sharing an input (GoogLeNet-
+                       style branches; cross-attn streams in the VLM).
+    """
+
+    SEQUENTIAL = "sequential"
+    RESIDUAL_SOURCE = "residual_source"
+    RESIDUAL_SINK = "residual_sink"
+    PARALLEL = "parallel"
+
+
+@dataclass
+class LayerNode:
+    name: str
+    kind: LayerKind
+    # Workload descriptor.  Keys by kind:
+    #   MATMUL: M, K, N                       (+ optional "groups" for GQA KV)
+    #   CONV2D: H, W, C_in, C_out, kh, kw, stride, pad, batch
+    #   ATTENTION: seq_q, seq_kv, heads, kv_heads, head_dim, batch, causal
+    #   SSM_SCAN: seq, heads, head_dim, state, batch
+    #   WKV: seq, heads, head_dim, batch
+    #   MOE: M (tokens), K, N, experts, top_k
+    #   NORM/ELEMENTWISE/POOL/EMBED: numel (+ EMBED: vocab, d_model)
+    dims: dict = field(default_factory=dict)
+    dtype_bytes: int = 2
+    inputs: list[str] = field(default_factory=list)
+    dep: DepLabel = DepLabel.SEQUENTIAL
+    bypass_of: str | None = None   # residual source this sink adds on writeback
+    # Epilogue ops fused into the producing kernel (paper's bias VMOV / ReLU).
+    fused_bias: bool = False
+    fused_activation: str | None = None  # "relu" | "silu" | "gelu" | None
+    meta: dict = field(default_factory=dict)
+
+    # --- workload accounting --------------------------------------------------
+    def flops(self) -> float:
+        d = self.dims
+        k = self.kind
+        if k is LayerKind.MATMUL:
+            return 2.0 * d["M"] * d["K"] * d["N"]
+        if k is LayerKind.CONV2D:
+            oh = _conv_out(d["H"], d["kh"], d["stride"], d["pad"])
+            ow = _conv_out(d["W"], d["kw"], d["stride"], d["pad"])
+            return (2.0 * d.get("batch", 1) * oh * ow * d["C_out"]
+                    * d["C_in"] * d["kh"] * d["kw"])
+        if k is LayerKind.ATTENTION:
+            b, h, hd = d["batch"], d["heads"], d["head_dim"]
+            sq, skv = d["seq_q"], d["seq_kv"]
+            causal = 0.5 if d.get("causal") and sq == skv else 1.0
+            return 2.0 * 2.0 * b * h * sq * skv * hd * causal  # QK^T + PV
+        if k is LayerKind.SSM_SCAN:
+            b, h, hd, st = d["batch"], d["heads"], d["head_dim"], d["state"]
+            return 2.0 * 3.0 * b * d["seq"] * h * hd * st      # dA, B-outer, C-contract
+        if k is LayerKind.WKV:
+            b, h, hd = d["batch"], d["heads"], d["head_dim"]
+            return 2.0 * 2.0 * b * d["seq"] * h * hd * hd       # state update + readout
+        if k is LayerKind.MOE:
+            return 2.0 * d["M"] * d["K"] * d["N"] * d["top_k"]
+        if k is LayerKind.EMBED:
+            return 0.0
+        return float(d.get("numel", 0))  # ~1 FLOP/elem for norms/elementwise
+
+    def operand_bytes(self) -> dict[str, float]:
+        """Minimum off-chip bytes per operand class (each element once)."""
+        d, k = self.dims, self.kind
+        by = self.dtype_bytes
+        if k is LayerKind.MATMUL:
+            return {"maps": d["M"] * d["K"] * by,
+                    "weights": d["K"] * d["N"] * by,
+                    "out": d["M"] * d["N"] * by}
+        if k is LayerKind.CONV2D:
+            oh = _conv_out(d["H"], d["kh"], d["stride"], d["pad"])
+            ow = _conv_out(d["W"], d["kw"], d["stride"], d["pad"])
+            b = d.get("batch", 1)
+            return {"maps": b * d["H"] * d["W"] * d["C_in"] * by,
+                    "weights": d["C_in"] * d["kh"] * d["kw"] * d["C_out"] * by,
+                    "out": b * oh * ow * d["C_out"] * by}
+        if k is LayerKind.MOE:
+            return {"maps": d["M"] * d["K"] * by * d["top_k"],
+                    "weights": d["experts"] * d["K"] * d["N"] * by,
+                    "out": d["M"] * d["N"] * by * d["top_k"]}
+        if k is LayerKind.ATTENTION:
+            b, h, hd = d["batch"], d["heads"], d["head_dim"]
+            kvh = d.get("kv_heads", h)
+            q = b * h * d["seq_q"] * hd * by
+            kv = 2 * b * kvh * d["seq_kv"] * hd * by
+            return {"maps": q + kv, "weights": 0.0, "out": q}
+        n = float(d.get("numel", 0))
+        return {"maps": n * by, "weights": 0.0, "out": n * by}
+
+    def min_bytes(self) -> float:
+        return sum(self.operand_bytes().values())
+
+    def arithmetic_intensity(self) -> float:
+        b = self.min_bytes()
+        return self.flops() / b if b else float("inf")
+
+
+def _conv_out(size: int, k: int, stride: int, pad: int) -> int:
+    return (size + 2 * pad - k) // stride + 1
+
+
+# --- graph --------------------------------------------------------------------
+@dataclass
+class ModelGraph:
+    """Ordered layer graph.  The paper's doubly-linked list + labels."""
+
+    name: str
+    nodes: list[LayerNode] = field(default_factory=list)
+
+    def add(self, node: LayerNode) -> LayerNode:
+        if node.name in self._index():
+            raise ValueError(f"duplicate layer name: {node.name}")
+        self.nodes.append(node)
+        return node
+
+    def _index(self) -> dict[str, LayerNode]:
+        return {n.name: n for n in self.nodes}
+
+    def __iter__(self) -> Iterator[LayerNode]:
+        return iter(self.nodes)
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def get(self, name: str) -> LayerNode:
+        return self._index()[name]
+
+    # --- paper step 2: dependency labelling -----------------------------------
+    def mark_residuals(self) -> None:
+        """Scan inter-layer relations and attach dependency labels.
+
+        Any node consumed by a non-adjacent later node becomes a
+        RESIDUAL_SOURCE; the consumer that lists it in ``bypass_of``
+        becomes a RESIDUAL_SINK.  Nodes sharing an input are PARALLEL.
+        """
+        idx = self._index()
+        consumers: dict[str, list[str]] = {}
+        for n in self.nodes:
+            for inp in n.inputs:
+                consumers.setdefault(inp, []).append(n.name)
+        order = {n.name: i for i, n in enumerate(self.nodes)}
+        for n in self.nodes:
+            if n.bypass_of is not None:
+                n.dep = DepLabel.RESIDUAL_SINK
+                src = idx.get(n.bypass_of)
+                if src is not None and src.dep is DepLabel.SEQUENTIAL:
+                    src.dep = DepLabel.RESIDUAL_SOURCE
+        for src, cons in consumers.items():
+            if len(cons) > 1:
+                for c in cons:
+                    node = idx[c]
+                    if node.dep is DepLabel.SEQUENTIAL:
+                        node.dep = DepLabel.PARALLEL
+                if src in idx and idx[src].dep is DepLabel.SEQUENTIAL:
+                    idx[src].dep = DepLabel.RESIDUAL_SOURCE
+        # Sanity: a sink's source must precede it.
+        for n in self.nodes:
+            if n.bypass_of and n.bypass_of in order:
+                if order[n.bypass_of] >= order[n.name]:
+                    raise ValueError(
+                        f"bypass source {n.bypass_of} does not precede {n.name}")
+
+    # --- aggregates ------------------------------------------------------------
+    def total_flops(self) -> float:
+        return sum(n.flops() for n in self.nodes)
+
+    def total_min_bytes(self) -> float:
+        return sum(n.min_bytes() for n in self.nodes)
+
+    def memory_regions(self) -> dict[str, int]:
+        """Paper §5.3: distinct activation regions needed in main memory.
+
+        Sequential chains ping-pong between two regions; every live
+        residual source holds its own region until its sink retires it.
+        """
+        regions = {"pingpong": 2}
+        live = 0
+        max_live = 0
+        sinks = {n.bypass_of for n in self.nodes if n.bypass_of}
+        for n in self.nodes:
+            if n.dep is DepLabel.RESIDUAL_SOURCE and n.name in sinks:
+                live += 1
+                max_live = max(max_live, live)
+            if n.dep is DepLabel.RESIDUAL_SINK:
+                live = max(0, live - 1)
+        regions["residual"] = max_live
+        return regions
+
+
+# --- node constructors ----------------------------------------------------------
+def matmul_node(name: str, M: int, K: int, N: int, *, dtype_bytes: int = 2,
+                inputs: list[str] | None = None, bypass_of: str | None = None,
+                fused_bias: bool = False, fused_activation: str | None = None,
+                **meta) -> LayerNode:
+    return LayerNode(
+        name=name, kind=LayerKind.MATMUL,
+        dims={"M": M, "K": K, "N": N}, dtype_bytes=dtype_bytes,
+        inputs=inputs or [], bypass_of=bypass_of, fused_bias=fused_bias,
+        fused_activation=fused_activation, meta=meta)
+
+
+def conv_node(name: str, H: int, W: int, C_in: int, C_out: int, kh: int,
+              kw: int, stride: int = 1, pad: int = 0, batch: int = 1, *,
+              dtype_bytes: int = 2, inputs: list[str] | None = None,
+              bypass_of: str | None = None, fused_bias: bool = True,
+              fused_activation: str | None = "relu", **meta) -> LayerNode:
+    return LayerNode(
+        name=name, kind=LayerKind.CONV2D,
+        dims={"H": H, "W": W, "C_in": C_in, "C_out": C_out, "kh": kh,
+              "kw": kw, "stride": stride, "pad": pad, "batch": batch},
+        dtype_bytes=dtype_bytes, inputs=inputs or [], bypass_of=bypass_of,
+        fused_bias=fused_bias, fused_activation=fused_activation, meta=meta)

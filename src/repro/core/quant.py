@@ -1,0 +1,125 @@
+"""Fixed-point simulation + int8 quantization (paper §5.3, T6).
+
+The paper validates hardware results layer-by-layer against a Q8.8
+software oracle and reports Q8.8 / Q5.11 ImageNet accuracy.  Q(m).(f) is
+a 16-bit signed fixed-point format with ``f`` fractional bits.  We keep
+that oracle (bit-accurate int arithmetic in JAX) for validation, and add
+a per-channel int8 path as the deployable TPU quantization.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QFormat",
+    "Q8_8",
+    "Q5_11",
+    "quantize",
+    "dequantize",
+    "qmatmul",
+    "validate_layerwise",
+    "int8_quantize_per_channel",
+    "int8_matmul",
+]
+
+
+@dataclass(frozen=True)
+class QFormat:
+    """Signed fixed point with ``int_bits`` integer and ``frac_bits``
+    fractional bits (total = 1 sign + int + frac = 16 for the paper)."""
+
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.total_bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.total_bits - 1)) - 1
+
+
+Q8_8 = QFormat(int_bits=7, frac_bits=8)     # the paper's "Q8.8"
+Q5_11 = QFormat(int_bits=4, frac_bits=11)   # the paper's "Q5.11"
+
+
+def quantize(x: jax.Array, fmt: QFormat = Q8_8) -> jax.Array:
+    """float -> int16 fixed point with saturation (round-to-nearest)."""
+    q = jnp.round(x * fmt.scale)
+    q = jnp.clip(q, fmt.qmin, fmt.qmax)
+    return q.astype(jnp.int16 if fmt.total_bits <= 16 else jnp.int32)
+
+
+def dequantize(q: jax.Array, fmt: QFormat = Q8_8) -> jax.Array:
+    return q.astype(jnp.float32) / fmt.scale
+
+
+def qmatmul(a_q: jax.Array, b_q: jax.Array, fmt: QFormat = Q8_8,
+            bias_q: jax.Array | None = None,
+            relu: bool = False) -> jax.Array:
+    """Bit-accurate fixed-point matmul as Snowflake's MACs execute it:
+    int16 x int16 -> int32 accumulate, then a single arithmetic right
+    shift by ``frac_bits`` with saturation back to int16.
+
+    This is the 'software implementation ... using Q8.8 to simulate
+    Snowflake's compute operations' the paper uses for result checking.
+    """
+    acc = jnp.matmul(a_q.astype(jnp.int32), b_q.astype(jnp.int32))
+    if bias_q is not None:
+        acc = acc + (bias_q.astype(jnp.int32) << fmt.frac_bits)
+    out = acc >> fmt.frac_bits          # arithmetic shift (floor)
+    if relu:
+        out = jnp.maximum(out, 0)
+    out = jnp.clip(out, fmt.qmin, fmt.qmax)
+    return out.astype(jnp.int16)
+
+
+def validate_layerwise(float_outs: list[jax.Array],
+                       quant_outs: list[jax.Array],
+                       fmt: QFormat = Q8_8) -> list[dict]:
+    """Layer-by-layer result checking (paper §5.3): compare the float
+    reference against the dequantized fixed-point path; report max-abs
+    and RMS error per layer in units of one LSB."""
+    report = []
+    lsb = 1.0 / fmt.scale
+    for i, (f, q) in enumerate(zip(float_outs, quant_outs)):
+        deq = dequantize(q, fmt) if jnp.issubdtype(q.dtype, jnp.integer) else q
+        err = jnp.abs(f.astype(jnp.float32) - deq)
+        report.append({
+            "layer": i,
+            "max_abs_err_lsb": float(jnp.max(err) / lsb),
+            "rms_err_lsb": float(jnp.sqrt(jnp.mean(err ** 2)) / lsb),
+        })
+    return report
+
+
+# --- int8 (deployable TPU quantization) ------------------------------------------
+def int8_quantize_per_channel(w: jax.Array, axis: int = 0
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-output-channel int8 weight quantization."""
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array
+                ) -> jax.Array:
+    """bf16 activations x int8 weights, dequantized on the fly — the
+    bandwidth-saving inference path (halves the Mloop/Kloop weight-bytes
+    term, which the dataflow cost model sees through dtype_bytes=1)."""
+    acc = jnp.matmul(x.astype(jnp.float32),
+                     w_q.astype(jnp.float32) * w_scale)
+    return acc.astype(x.dtype)

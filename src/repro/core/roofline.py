@@ -1,0 +1,225 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+Per (arch x shape x mesh):
+
+    compute_s    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory_s     = HLO_bytes / (chips * HBM_bw)
+    collective_s = sum(per-chip collective link bytes) / link_bw
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO
+text and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops, converting each to per-chip link
+bytes with the standard ring-algorithm factors.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from .hw import HardwareModel, TPU_V5E
+
+__all__ = [
+    "CollectiveStats",
+    "collective_stats_from_hlo",
+    "RooflineReport",
+    "roofline_report",
+    "DTYPE_BYTES",
+]
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# op name -> per-chip link-bytes factor as a function of (bytes, group)
+# using ring-algorithm accounting:
+#   all-gather: output bytes * (g-1)/g leave/enter each chip
+#   reduce-scatter: input bytes * (g-1)/g
+#   all-reduce: 2 * (g-1)/g * bytes (RS + AG)
+#   all-to-all: bytes * (g-1)/g
+#   collective-permute: full operand bytes
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*(?:\}[^}]*)*?)\}\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """bytes of one 'dtype[d0,d1,...]' shape string."""
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0.0
+    dt, dims = m.groups()
+    b = DTYPE_BYTES.get(dt, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return float(n * b)
+
+
+def _result_bytes(line: str) -> float:
+    """Sum bytes of the result shape(s) on an HLO instruction line."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0.0
+    rhs = lhs[1]
+    # result type precedes the op name: 'bf16[8,128]{1,0} all-gather(...)'
+    # tuples: '(bf16[8,128], bf16[8,128]) all-gather(...)'
+    head = rhs.split("(", 1)[0] if rhs.startswith("(") else rhs
+    if rhs.startswith("("):
+        # tuple result: take everything up to the matching ')'
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    head = rhs[: i + 1]
+                    break
+    total = 0.0
+    for m in _SHAPE_RE.finditer(head):
+        total += _shape_bytes(m.group(0))
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        total, groups_shape = int(m.group(1)), int(m.group(2))
+        # iota format [N]<=[N] with dims: group size = N / num_groups; the
+        # simple '[a,b]' form means a groups of b? Actually format is
+        # replica_groups=[G,S]<=[...] : G groups of size S.
+        return groups_shape if groups_shape > 0 else default
+    m2 = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m2:
+        first = m2.group(1)
+        return max(1, len([x for x in first.split(",") if x.strip() != ""]))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)        # op -> count
+    op_bytes: dict = field(default_factory=dict)      # op -> raw result bytes
+    link_bytes_per_chip: float = 0.0                  # ring-accounted
+
+    def total_raw_bytes(self) -> float:
+        return sum(self.op_bytes.values())
+
+
+def collective_stats_from_hlo(hlo_text: str, n_chips: int) -> CollectiveStats:
+    """Parse optimized HLO and accumulate collective traffic."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        opm = None
+        for op in _COLL_OPS:
+            # match ' op(' or ' op-start(' / ' op-done('
+            if re.search(rf"\s{op}(-start|-done)?\(", s):
+                opm = op
+                break
+        if opm is None:
+            continue
+        if f"{opm}-done" in s:
+            continue  # counted at -start
+        raw = _result_bytes(s)
+        if raw == 0.0:
+            continue
+        g = _group_size(s, n_chips)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if opm == "all-reduce":
+            link = 2.0 * frac * raw
+        elif opm == "collective-permute":
+            link = raw
+        else:
+            link = frac * raw
+        stats.counts[opm] = stats.counts.get(opm, 0) + 1
+        stats.op_bytes[opm] = stats.op_bytes.get(opm, 0.0) + raw
+        stats.link_bytes_per_chip += link
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float            # total across chips
+    hlo_bytes: float
+    coll_link_bytes: float      # per chip
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    coll_counts: dict
+    step_time_s: float = 0.0
+    notes: str = ""
+
+    def as_row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.n_chips,
+            "compute_ms": self.compute_s * 1e3,
+            "memory_ms": self.memory_s * 1e3,
+            "collective_ms": self.collective_s * 1e3,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "coll": dict(self.coll_counts),
+        }
+
+
+def roofline_report(*, arch: str, shape: str, mesh_name: str, n_chips: int,
+                    cost_analysis: dict | None, hlo_text: str,
+                    model_flops: float, hw: HardwareModel = TPU_V5E,
+                    analytic_flops: float | None = None,
+                    analytic_bytes: float | None = None) -> RooflineReport:
+    """Build the three-term report for one dry-run cell.
+
+    FLOPs/bytes/collective traffic come from the while-loop-aware HLO
+    analyzer (core/hlo_analysis.py); ``cost_analysis`` is recorded for
+    cross-checking only (it counts each scan body once).
+    """
+    from .hlo_analysis import analyze_hlo_text
+    st = analyze_hlo_text(hlo_text, n_chips)
+    notes = []
+    flops = st.flops * n_chips            # per-device HLO -> cluster total
+    byts = st.hbm_bytes * n_chips
+    if flops <= 0 and analytic_flops:
+        flops = analytic_flops
+        notes.append("flops=analytic")
+    ca = cost_analysis or {}
+    ca_flops = float(ca.get("flops", 0.0) or 0.0)
+    if ca_flops:
+        notes.append(f"cost_analysis_flops_per_dev={ca_flops:.3g}")
+
+    link_bw = hw.ici_bandwidth * max(hw.ici_links_per_axis, 1)
+    compute_s = flops / (n_chips * hw.peak_flops)
+    memory_s = byts / (n_chips * hw.hbm_bandwidth)
+    collective_s = st.coll_link_bytes / link_bw
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=lambda k: terms[k])
+    useful = model_flops / flops if flops > 0 else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_link_bytes=st.coll_link_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        coll_counts={k: round(v, 1) for k, v in st.coll_counts.items()},
+        step_time_s=max(compute_s, memory_s, collective_s),
+        notes=";".join(notes))

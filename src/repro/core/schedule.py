@@ -1,0 +1,264 @@
+"""Schedule emission — the compiler's "instruction generation" (paper §5.2, T5).
+
+Snowflake's compiler walks the parsed layer objects and emits an
+instruction stream: per-tile MAC/MAX loops with loads interleaved,
+double-buffered instruction banks, bias/bypass VMOVs fused into the
+writeback, and loop-vs-unroll decisions bounded by how much bookkeeping
+hides under the vector-instruction latency.
+
+The XLA analogue of the instruction stream is the compiled program; what
+remains *ours* to decide is the schedule that parameterizes it.  This
+module walks the ModelGraph and emits a ``LayerSchedule`` per node:
+
+* tiling + dataflow (T2/T3, from tiling.py / dataflow.py),
+* fusion flags — bias, activation, residual bypass folded into the
+  producing kernel's epilogue (the paper's VMOV-on-writeback),
+* a *bookkeeping ratio* check: epilogue work per tile relative to the
+  MAC work of that tile.  The paper breaks/unrolls loops when scalar
+  overhead can't hide under MAC latency; we grow the k-block (longer
+  traces) when the ratio is too high,
+* the distributed strategy + collective chunking (T3/T4),
+* a remat (activation checkpoint) policy decided by the memory plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .balance import balance_transfers, percent_imbalance
+from .dataflow import (Dataflow, DataflowDecision, DistDecision,
+                       choose_dist_strategy, choose_matmul_dataflow)
+from .hw import HardwareModel, MeshDescriptor, TPU_V5E
+from .ir import DepLabel, LayerKind, LayerNode, ModelGraph
+from .tiling import ConvTiling, select_conv_row_strips
+
+__all__ = ["LayerSchedule", "ModelSchedule", "compile_model"]
+
+
+@dataclass(frozen=True)
+class LayerSchedule:
+    name: str
+    kind: LayerKind
+    dataflow: Dataflow | None            # None for non-matmul-like layers
+    block: tuple[int, int, int] | None   # (bm, bk, bn) for matmul-like
+    conv_tiling: ConvTiling | None
+    fuse_bias: bool
+    fuse_activation: str | None
+    fuse_bypass: bool                    # residual add on writeback
+    dist: DistDecision | None
+    traffic_bytes: float
+    flops: float
+    bookkeeping_ratio: float             # epilogue ops / MAC ops per tile
+    exec_time_s: float                   # hw.exec_time on this layer
+    notes: dict = field(default_factory=dict)
+
+
+@dataclass
+class ModelSchedule:
+    name: str
+    layers: list[LayerSchedule]
+    hw_name: str
+    mesh: MeshDescriptor | None
+    total_flops: float
+    total_traffic_bytes: float
+    total_exec_time_s: float
+    memory_regions: dict
+    load_imbalance_pct: float            # after T4 balancing
+    remat_policy: str
+
+    def layer(self, name: str) -> LayerSchedule:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def summary(self) -> dict:
+        return {
+            "name": self.name,
+            "layers": len(self.layers),
+            "gflops": self.total_flops / 1e9,
+            "traffic_gb": self.total_traffic_bytes / 1e9,
+            "exec_time_ms": self.total_exec_time_s * 1e3,
+            "avg_bw_gbps": (self.total_traffic_bytes
+                            / max(self.total_exec_time_s, 1e-12) / 1e9),
+            "load_imbalance_pct": self.load_imbalance_pct,
+            "remat": self.remat_policy,
+        }
+
+
+def _epilogue_slots(node: LayerNode) -> int:
+    """Count of per-output-element epilogue ops — the paper's bookkeeping
+    instructions that must hide under MAC latency."""
+    slots = 0
+    if node.fused_bias:
+        slots += 1
+    if node.fused_activation:
+        slots += 1
+    if node.dep is DepLabel.RESIDUAL_SINK:
+        slots += 2   # VMOV load of bypass + add (paper: VMOV per writeback MAC)
+    return slots
+
+
+def _schedule_matmul(node: LayerNode, hw: HardwareModel,
+                     mesh: MeshDescriptor | None,
+                     paper_faithful: bool) -> LayerSchedule:
+    d = node.dims
+    M, K, N = d["M"], d["K"], d["N"]
+    dec: DataflowDecision = choose_matmul_dataflow(
+        M, K, N, node.dtype_bytes, hw,
+        allow_output_stationary=not paper_faithful)
+    t = dec.tiling
+    # Bookkeeping check (paper §5.2): epilogue work per tile vs MAC work.
+    # MAC ops per output element along the trace = 2*bk; epilogue slots
+    # are per element.  Grow traces (bk) if the ratio exceeds ~1/16.
+    slots = _epilogue_slots(node)
+    ratio = (slots * hw.epilogue_slot_flops) / max(2.0 * t.bk, 1.0)
+    notes = dict(dec.alternatives)
+    if ratio > 1.0 / 16.0 and t.bk < K:
+        notes["bookkeeping"] = f"ratio {ratio:.3f} high; prefer larger bk"
+
+    dist = None
+    if mesh is not None and mesh.model > 1:
+        dist = choose_dist_strategy(
+            M_local=max(1, M // max(mesh.data, 1)), K=K, N=N,
+            dtype_bytes=node.dtype_bytes, mesh=mesh, hw=hw,
+            overlappable_flops=2.0 * (M / max(mesh.data, 1)) * K * N
+            / max(mesh.model, 1))
+
+    flops = node.flops()
+    return LayerSchedule(
+        name=node.name, kind=node.kind, dataflow=dec.dataflow,
+        block=(t.bm, t.bk, t.bn), conv_tiling=None,
+        fuse_bias=node.fused_bias, fuse_activation=node.fused_activation,
+        fuse_bypass=node.dep is DepLabel.RESIDUAL_SINK, dist=dist,
+        traffic_bytes=dec.traffic_bytes, flops=flops,
+        bookkeeping_ratio=ratio,
+        exec_time_s=hw.exec_time(flops, dec.traffic_bytes), notes=notes)
+
+
+def _schedule_conv(node: LayerNode, hw: HardwareModel,
+                   paper_faithful: bool) -> LayerSchedule:
+    d = node.dims
+    ct = select_conv_row_strips(d["H"], d["W"], d["C_in"], d["C_out"],
+                                d["kh"], d["kw"], d["stride"], d["pad"],
+                                node.dtype_bytes, hw,
+                                batch=d.get("batch", 1))
+    ob = node.operand_bytes()
+    # Mloop/Kloop on the strip grid: maps-resident repeats kernel bytes per
+    # maps tile; weights-resident repeats maps (incl. halo overlap).
+    kloop = (ob["maps"] * (1 + ct.overlap_frac)
+             + ct.n_map_tiles * ob["weights"] + ob["out"])
+    mloop = (ct.n_kernel_tiles * ob["maps"] * (1 + ct.overlap_frac)
+             + ob["weights"] + ob["out"])
+    if kloop <= mloop:
+        df, traffic = Dataflow.MAPS_RESIDENT, kloop
+    else:
+        df, traffic = Dataflow.WEIGHTS_RESIDENT, mloop
+    slots = _epilogue_slots(node)
+    trace = d["C_in"] * d["kh"] * d["kw"]     # the paper's "trace" length
+    ratio = (slots * hw.epilogue_slot_flops) / max(2.0 * trace, 1.0)
+    flops = node.flops()
+    # Paper §5.2 stall model: bookkeeping (loop control, loads, bias /
+    # bypass VMOVs) must hide under the vector-MAC latency (trace/width
+    # cycles); short traces with fused bypass stall the CUs — "the last
+    # 1x1 CONVs of ResNet18 and ResNet50".
+    stall = 1.0
+    if hw.epilogue_slot_flops:
+        mac_cycles = max(trace / hw.mxu_dim, 1.0)
+        bookkeeping = (6.0 + (6.0 if node.dep is DepLabel.RESIDUAL_SINK
+                              else 0.0) + (2.0 if node.fused_bias else 0.0))
+        stall = max(1.0, bookkeeping / mac_cycles)
+    t_exec = max(hw.compute_time(flops) * stall, hw.memory_time(traffic))
+    return LayerSchedule(
+        name=node.name, kind=node.kind, dataflow=df, block=None,
+        conv_tiling=ct, fuse_bias=node.fused_bias,
+        fuse_activation=node.fused_activation,
+        fuse_bypass=node.dep is DepLabel.RESIDUAL_SINK, dist=None,
+        traffic_bytes=traffic, flops=flops, bookkeeping_ratio=ratio,
+        exec_time_s=t_exec,
+        notes={"kloop": kloop, "mloop": mloop, "stall": stall})
+
+
+def _schedule_other(node: LayerNode, hw: HardwareModel) -> LayerSchedule:
+    flops = node.flops()
+    traffic = node.min_bytes()
+    return LayerSchedule(
+        name=node.name, kind=node.kind, dataflow=None, block=None,
+        conv_tiling=None, fuse_bias=node.fused_bias,
+        fuse_activation=node.fused_activation,
+        fuse_bypass=node.dep is DepLabel.RESIDUAL_SINK, dist=None,
+        traffic_bytes=traffic, flops=flops, bookkeeping_ratio=0.0,
+        exec_time_s=hw.exec_time(flops, traffic))
+
+
+def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
+                  mesh: MeshDescriptor | None = None,
+                  paper_faithful: bool = False,
+                  hbm_activation_budget: float | None = None
+                  ) -> ModelSchedule:
+    """Walk the graph and emit the full model schedule.
+
+    ``paper_faithful=True`` restricts dataflows to the paper's two loop
+    orders (Mloop/Kloop) — used as the reproduction baseline; the default
+    additionally considers the output-stationary generalization.
+    """
+    graph.mark_residuals()
+    layers: list[LayerSchedule] = []
+    for node in graph:
+        if node.kind in (LayerKind.MATMUL, LayerKind.MOE):
+            if node.kind is LayerKind.MOE:
+                # Schedule one expert matmul; dispatch handled by T4.
+                mm = LayerNode(name=node.name, kind=LayerKind.MATMUL,
+                               dims={"M": node.dims["M"] * node.dims["top_k"]
+                                     // max(node.dims["experts"], 1) or 1,
+                                     "K": node.dims["K"],
+                                     "N": node.dims["N"]},
+                               dtype_bytes=node.dtype_bytes,
+                               fused_bias=node.fused_bias,
+                               fused_activation=node.fused_activation,
+                               bypass_of=node.bypass_of, dep=node.dep)
+                s = _schedule_matmul(mm, hw, mesh, paper_faithful)
+                # Account all experts' weights + routed tokens.
+                ob = node.operand_bytes()
+                traffic = ob["maps"] + ob["weights"] + ob["out"]
+                s = LayerSchedule(**{**s.__dict__,
+                                     "kind": LayerKind.MOE,
+                                     "flops": node.flops(),
+                                     "traffic_bytes": traffic,
+                                     "exec_time_s": hw.exec_time(node.flops(), traffic)})
+                layers.append(s)
+            else:
+                layers.append(_schedule_matmul(node, hw, mesh, paper_faithful))
+        elif node.kind is LayerKind.CONV2D:
+            layers.append(_schedule_conv(node, hw, paper_faithful))
+        else:
+            layers.append(_schedule_other(node, hw))
+
+    # T4: balance each layer's tile transfers across load units and report
+    # the residual imbalance (drives the Table 3 reproduction).
+    imb = []
+    for ls in layers:
+        if ls.kind in (LayerKind.MATMUL, LayerKind.CONV2D, LayerKind.MOE):
+            n = max(1, hw.load_units)
+            # transfers: weights stream + maps stream per tile (coarse).
+            w = ls.traffic_bytes * 0.5
+            m = ls.traffic_bytes * 0.5
+            res = balance_transfers([int(m), int(w)], n)
+            imb.append(res.imbalance_after)
+    avg_imb = sum(imb) / len(imb) if imb else 0.0
+
+    # Remat policy from a coarse activation-memory plan.
+    total_act = sum(l.traffic_bytes for l in layers
+                    if l.kind is not LayerKind.EMBED) * 0.25
+    budget = hbm_activation_budget or hw.hbm_bytes * 0.3
+    if mesh is not None:
+        budget *= mesh.n_chips
+    remat = "none" if total_act < budget else (
+        "block" if total_act < 4 * budget else "full")
+
+    return ModelSchedule(
+        name=graph.name, layers=layers, hw_name=hw.name, mesh=mesh,
+        total_flops=sum(l.flops for l in layers),
+        total_traffic_bytes=sum(l.traffic_bytes for l in layers),
+        total_exec_time_s=sum(l.exec_time_s for l in layers),
+        memory_regions=graph.memory_regions(),
+        load_imbalance_pct=avg_imb, remat_policy=remat)

@@ -1,0 +1,211 @@
+"""Tile selection (paper §5.1 steps 3-4, T2).
+
+The paper decomposes maps into output-row-strip tiles and kernels into
+single-kernel tiles sized to the on-chip buffers, double buffered.  On
+TPU the on-chip buffer is VMEM and the tile shape *is* the Pallas
+BlockSpec; the pipeline emitter provides the double buffering, so the
+tiler charges 2x for every streamed operand.
+
+Key constraints carried over from the paper:
+* tiles must fit the buffer (VMEM budget, incl. double-buffer factor);
+* compute-unit alignment — the paper pads to the 16-wide vMAC; we pad
+  matmul dims to the 128-wide MXU (``hw.mxu_dim``) and the (8,128)
+  sublane/lane layout;
+* bigger tiles amortize "bookkeeping" (here: fewer grid steps, better
+  pipeline efficiency) but raise the buffer footprint and the overlap
+  waste for convolutions (halo rows re-loaded per strip).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .hw import HardwareModel
+
+__all__ = [
+    "round_up",
+    "round_down_multiple",
+    "pow2_candidates",
+    "MatmulTiling",
+    "select_matmul_tiles",
+    "ConvTiling",
+    "select_conv_row_strips",
+]
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def round_down_multiple(x: int, m: int) -> int:
+    return max(m, (x // m) * m)
+
+
+def pow2_candidates(limit: int, base: int) -> list[int]:
+    """base, 2*base, 4*base ... <= limit (always at least [base])."""
+    out = [base]
+    while out[-1] * 2 <= limit:
+        out.append(out[-1] * 2)
+    return out
+
+
+# --- matmul ---------------------------------------------------------------------
+@dataclass(frozen=True)
+class MatmulTiling:
+    bm: int
+    bk: int
+    bn: int
+    vmem_bytes: int          # working set incl. double buffering + accumulator
+    grid: tuple[int, int, int]   # (m, n, k) tile counts
+
+    @property
+    def tiles(self) -> int:
+        m, n, k = self.grid
+        return m * n * k
+
+
+def matmul_vmem_bytes(bm: int, bk: int, bn: int, dtype_bytes: int,
+                      *, stream_a: bool = True, stream_b: bool = True,
+                      acc_bytes: int = 4) -> int:
+    """VMEM working set for one grid step.
+
+    Streamed operands are double buffered (x2) by the Pallas pipeline;
+    resident operands are held once.  The accumulator lives in VMEM at
+    f32 (``acc_bytes``).
+    """
+    a = bm * bk * dtype_bytes * (2 if stream_a else 1)
+    b = bk * bn * dtype_bytes * (2 if stream_b else 1)
+    c = bm * bn * max(acc_bytes, dtype_bytes) * 2   # out is always streamed
+    return a + b + c
+
+
+def select_matmul_tiles(M: int, K: int, N: int, dtype_bytes: int,
+                        hw: HardwareModel, *,
+                        favor: str = "balanced") -> MatmulTiling:
+    """Pick (bm, bk, bn) for an output-stationary tiled matmul.
+
+    ``favor`` skews the VMEM split between the maps (A) and weights (B)
+    operands — the within-kernel face of the paper's Mloop/Kloop dial:
+
+    * ``"maps"``   — large bm (A-tile reuse; kernels streamed more: Kloop)
+    * ``"weights"``— large bn (B-tile reuse; maps streamed more: Mloop)
+    * ``"balanced"`` — minimize refetch traffic (N/bn)*A + (M/bm)*B.
+    """
+    base = hw.mxu_dim
+    budget = hw.vmem_budget()
+    Mp, Kp, Np = (round_up(max(d, 1), base) for d in (M, K, N))
+
+    mcap = hw.maps_buffer_bytes or budget
+    wcap = hw.weights_buffer_bytes or budget
+    best: tuple[float, MatmulTiling] | None = None
+    for bm in pow2_candidates(min(Mp, 2048), base):
+        for bn in pow2_candidates(min(Np, 2048), base):
+            for bk in pow2_candidates(min(Kp, 4096), base):
+                vmem = matmul_vmem_bytes(bm, bk, bn, dtype_bytes)
+                if vmem > budget:
+                    continue
+                if (2 * bm * bk * dtype_bytes > mcap
+                        or 2 * bk * bn * dtype_bytes > wcap):
+                    continue
+                grid = (math.ceil(Mp / bm), math.ceil(Np / bn),
+                        math.ceil(Kp / bk))
+                # Refetch traffic for output-stationary order (k innermost).
+                a_bytes = Mp * Kp * dtype_bytes
+                b_bytes = Kp * Np * dtype_bytes
+                traffic = grid[1] * a_bytes + grid[0] * b_bytes
+                if favor == "maps":
+                    cost = grid[0] * b_bytes + 1e-6 * traffic
+                elif favor == "weights":
+                    cost = grid[1] * a_bytes + 1e-6 * traffic
+                else:
+                    cost = traffic
+                # Prefer fewer grid steps on ties (pipeline efficiency);
+                # prefer larger bk (longer traces, the paper's MAC-latency
+                # hiding: more MAC work per bookkeeping slot).
+                cost += grid[0] * grid[1] * grid[2] * 1e-3
+                cost -= bk * 1e-6
+                cand = MatmulTiling(bm, bk, bn, vmem, grid)
+                if best is None or cost < best[0]:
+                    best = (cost, cand)
+    assert best is not None, "no feasible tiling (VMEM too small?)"
+    return best[1]
+
+
+# --- conv row strips --------------------------------------------------------------
+@dataclass(frozen=True)
+class ConvTiling:
+    out_rows: int            # output rows per maps tile (paper: row granularity)
+    in_rows: int             # input rows needed incl. halo
+    kernels_per_tile: int    # output channels per kernel tile
+    vmem_bytes: int
+    n_map_tiles: int
+    n_kernel_tiles: int
+    overlap_frac: float      # fraction of maps bytes re-loaded due to halos
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.n_map_tiles, self.n_kernel_tiles)
+
+
+def select_conv_row_strips(H: int, W: int, C_in: int, C_out: int, kh: int,
+                           kw: int, stride: int, pad: int,
+                           dtype_bytes: int, hw: HardwareModel,
+                           batch: int = 1) -> ConvTiling:
+    """Row-strip, channel-major conv tiling (paper §2: strips lower the
+    replicated-overlap bytes vs 2D block tiles).
+
+    A maps tile holds ``in_rows`` full-width input rows across all input
+    channels; a kernel tile holds ``kernels_per_tile`` complete kernels
+    (single-kernel granularity, as in the paper).  Output strip is
+    accumulated in VMEM.
+    """
+    oh = (H + 2 * pad - kh) // stride + 1
+    ow = (W + 2 * pad - kw) // stride + 1
+    budget = hw.vmem_budget()
+    mcap = hw.maps_buffer_bytes or budget
+    wcap = hw.weights_buffer_bytes or budget
+    kernel_bytes_each = C_in * kh * kw * dtype_bytes
+
+    best: ConvTiling | None = None
+    for out_rows in range(1, oh + 1):
+        in_rows = min(H, (out_rows - 1) * stride + kh)
+        maps_bytes = in_rows * W * C_in * dtype_bytes * 2          # dbl buf
+        if maps_bytes > mcap:
+            break  # strips only grow from here
+        remaining = min(budget - maps_bytes, wcap)
+        if remaining <= kernel_bytes_each * 2:
+            break
+        kpt = min(C_out, remaining // (kernel_bytes_each * 2))
+        kpt = max(1, min(kpt, C_out))
+        # Align kernel-tile width to the compute unit when possible.
+        if kpt >= hw.mxu_dim:
+            kpt = round_down_multiple(kpt, hw.mxu_dim)
+        # Shrink the kernel tile until the f32 output strip also fits.
+        while kpt > 1:
+            out_acc = out_rows * ow * kpt * 4
+            if maps_bytes + kpt * kernel_bytes_each * 2 + out_acc <= budget:
+                break
+            kpt = max(1, kpt // 2)
+        out_acc = out_rows * ow * kpt * 4
+        vmem = maps_bytes + kpt * kernel_bytes_each * 2 + out_acc
+        if vmem > budget:
+            continue
+        n_map = math.ceil(oh / out_rows) * batch
+        n_ker = math.ceil(C_out / kpt)
+        halo = max(0, in_rows - out_rows * stride)
+        overlap = (halo * (math.ceil(oh / out_rows) - 1)) / max(H, 1)
+        cand = ConvTiling(out_rows, in_rows, kpt, vmem, n_map, n_ker, overlap)
+        # Objective: fewest total tile-loads weighted by overlap waste.
+        def cost(t: ConvTiling) -> float:
+            return (t.n_map_tiles * t.n_kernel_tiles
+                    + t.overlap_frac * t.n_map_tiles * 10.0)
+        if best is None or cost(cand) < cost(best):
+            best = cand
+    if best is None:
+        # Degenerate: single output row at a time, one kernel each.
+        in_rows = min(H, kh)
+        best = ConvTiling(1, in_rows, 1,
+                          in_rows * W * C_in * dtype_bytes * 2
+                          + kernel_bytes_each * 2 + ow * 4,
+                          oh * batch, C_out, 0.0)
+    return best

@@ -1,0 +1,75 @@
+"""Shared kernel utilities: padding, epilogue math, compiler params."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params: name moved across jax versions.
+    from jax.experimental.pallas import tpu as pltpu
+    _CompilerParams = getattr(pltpu, "CompilerParams",
+                              getattr(pltpu, "TPUCompilerParams", None))
+except ImportError:  # pragma: no cover
+    pltpu = None
+    _CompilerParams = None
+
+__all__ = ["pltpu", "compiler_params", "pad_to", "unpad", "apply_activation",
+           "ACTIVATIONS", "vmem_scratch", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Pallas runs in interpret mode off-TPU (this container is CPU)."""
+    return jax.default_backend() != "tpu"
+
+
+def compiler_params(dimension_semantics: tuple[str, ...],
+                    interpret: bool):
+    """Mosaic compiler params; omitted in interpret mode."""
+    if interpret or _CompilerParams is None:
+        return None
+    return _CompilerParams(dimension_semantics=dimension_semantics)
+
+
+def pad_to(x: jax.Array, multiples: tuple[int, ...]) -> jax.Array:
+    """Zero-pad trailing dims of ``x`` up to the given multiples."""
+    pads = []
+    for dim, m in zip(x.shape[-len(multiples):], multiples):
+        target = ((dim + m - 1) // m) * m
+        pads.append((0, target - dim))
+    full = [(0, 0)] * (x.ndim - len(multiples)) + pads
+    if all(p == (0, 0) for p in full):
+        return x
+    return jnp.pad(x, full)
+
+
+def unpad(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    if tuple(x.shape) == tuple(shape):
+        return x
+    return x[tuple(slice(0, s) for s in shape)]
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+ACTIVATIONS = {
+    None: lambda x: x,
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0),
+    "silu": _silu,
+    "swish": _silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=True),
+    "tanh": jnp.tanh,
+}
+
+
+def apply_activation(x: jax.Array, name: str | None) -> jax.Array:
+    return ACTIVATIONS[name](x)
+
+
+def vmem_scratch(shape, dtype):
+    """VMEM scratch shape (works in interpret mode too)."""
+    assert pltpu is not None, "pallas tpu backend required"
+    return pltpu.VMEM(shape, dtype)

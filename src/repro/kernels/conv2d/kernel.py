@@ -1,0 +1,128 @@
+"""Row-strip implicit-GEMM conv2d Pallas kernel — the paper's own
+workload, scheduled the paper's way.
+
+Maps are tiled at *output-row-strip* granularity (T2): ops.py
+materializes halo-augmented input strips in HBM (the paper stores
+overlapped regions in DRAM for single-DMA loads), and the kernel
+consumes one (in_rows, W, Cin) strip per grid row.  Kernels (weights)
+are tiled at whole-kernel granularity, ``kpt`` output channels per tile.
+
+The Mloop/Kloop choice (T3) is the grid order:
+  * MAPS_RESIDENT  (Kloop): grid (strip, ktile) — the strip block index
+    ignores ktile, so the strip stays resident while kernel tiles stream.
+  * WEIGHTS_RESIDENT (Mloop): grid (ktile, strip) — the weight tile
+    stays resident while strips stream.
+
+The conv itself is implicit GEMM: for each (dy, dx) tap, a strided
+patch of the strip is contracted with w[dy, dx] on the MXU and
+accumulated in f32.  Epilogue fuses bias + ReLU + residual bypass (the
+paper's VMOV-on-writeback for ResNet).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import apply_activation, compiler_params, default_interpret
+from ...core.dataflow import Dataflow
+
+__all__ = ["conv2d_strips_pallas"]
+
+
+def _body(x_ref, w_ref, *rest, out_rows, OW, stride, kh, kw,
+          activation, out_dtype, has_bias, has_bypass,
+          bypass_first=False):
+    refs = list(rest)
+    bias_ref = refs.pop(0) if has_bias else None
+    byp_ref = refs.pop(0) if has_bypass else None
+    o_ref = refs.pop(0)
+
+    x = x_ref[0]                                   # (in_rows, Wp, Cin)
+    Cin = x.shape[-1]
+    kpt = o_ref.shape[-1]
+    acc = jnp.zeros((out_rows * OW, kpt), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = jax.lax.slice(
+                x, (dy, dx, 0),
+                (dy + (out_rows - 1) * stride + 1,
+                 dx + (OW - 1) * stride + 1, Cin),
+                (stride, stride, 1))               # (out_rows, OW, Cin)
+            acc += jax.lax.dot_general(
+                patch.reshape(out_rows * OW, Cin).astype(jnp.float32),
+                w_ref[dy, dx].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    acc = acc.reshape(out_rows, OW, kpt)
+    if bias_ref is not None:
+        acc = acc + bias_ref[...].astype(jnp.float32)
+    if byp_ref is not None and bypass_first:   # ResNet: add, then ReLU
+        acc = acc + byp_ref[0].astype(jnp.float32)
+    acc = apply_activation(acc, activation)
+    if byp_ref is not None and not bypass_first:
+        acc = acc + byp_ref[0].astype(jnp.float32)
+    o_ref[0] = acc.astype(out_dtype)
+
+
+def conv2d_strips_pallas(strips, w, *, out_rows: int, OW: int, stride: int,
+                         kpt: int, bias=None, activation: str | None = None,
+                         bypass=None, bypass_first: bool = False,
+                         out_dtype=None,
+                         dataflow: Dataflow = Dataflow.MAPS_RESIDENT,
+                         interpret: bool | None = None) -> jax.Array:
+    """strips: (NS, in_rows, Wp, Cin) halo-augmented row strips;
+    w: (kh, kw, Cin, Cout); bypass: (NS, out_rows, OW, Cout) or None.
+    Returns (NS, out_rows, OW, Cout)."""
+    if interpret is None:
+        interpret = default_interpret()
+    NS, in_rows, Wp, Cin = strips.shape
+    kh, kw, _, Cout = w.shape
+    assert Cout % kpt == 0, (Cout, kpt)
+    NK = Cout // kpt
+    out_dtype = out_dtype or strips.dtype
+    has_bias = bias is not None
+    has_bypass = bypass is not None
+
+    if dataflow is Dataflow.WEIGHTS_RESIDENT:
+        grid = (NK, NS)                      # weight tile resident (Mloop)
+        s_idx = lambda kt, st: (st, 0, 0, 0)
+        w_idx = lambda kt, st: (0, 0, 0, kt)
+        o_idx = lambda kt, st: (st, 0, 0, kt)
+        b_idx = lambda kt, st: (0, kt)
+    else:                                    # maps resident (Kloop)
+        grid = (NS, NK)
+        s_idx = lambda st, kt: (st, 0, 0, 0)
+        w_idx = lambda st, kt: (0, 0, 0, kt)
+        o_idx = lambda st, kt: (st, 0, 0, kt)
+        b_idx = lambda st, kt: (0, kt)
+
+    in_specs = [
+        pl.BlockSpec((1, in_rows, Wp, Cin), s_idx),
+        pl.BlockSpec((kh, kw, Cin, kpt), w_idx),
+    ]
+    operands = [strips, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, kpt), b_idx))
+        operands.append(bias.reshape(1, Cout))
+    if has_bypass:
+        in_specs.append(pl.BlockSpec((1, out_rows, OW, kpt), o_idx))
+        operands.append(bypass)
+
+    body = functools.partial(
+        _body, out_rows=out_rows, OW=OW, stride=stride, kh=kh, kw=kw,
+        activation=activation, out_dtype=out_dtype, has_bias=has_bias,
+        has_bypass=has_bypass, bypass_first=bypass_first)
+    params = compiler_params(("arbitrary", "arbitrary"), interpret)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    return pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, out_rows, OW, kpt), o_idx),
+        out_shape=jax.ShapeDtypeStruct((NS, out_rows, OW, Cout), out_dtype),
+        interpret=interpret,
+        **kwargs,
+    )(*operands)

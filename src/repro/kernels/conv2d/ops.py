@@ -1,0 +1,86 @@
+"""Public conv2d wrapper: schedule lookup, halo-strip materialization
+(the paper's augmented tiles in DRAM), dispatch, and shape restore."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ...core.dataflow import Dataflow
+from ...core.hw import TPU_V5E, HardwareModel
+from ...core.tiling import select_conv_row_strips
+from .kernel import conv2d_strips_pallas
+from .ref import conv2d_ref
+
+__all__ = ["conv2d"]
+
+
+def _make_strips(xp, n_strips, out_rows, in_rows, stride):
+    """Gather halo-augmented row strips: (B, H, W, C) -> (B*NS, in_rows, W, C)."""
+    B, Hp, Wp, C = xp.shape
+    starts = jnp.arange(n_strips) * out_rows * stride
+    def one(start):
+        return jax.lax.dynamic_slice(xp, (0, start, 0, 0),
+                                     (B, in_rows, Wp, C))
+    strips = jax.vmap(one)(starts)                   # (NS, B, in_rows, Wp, C)
+    strips = jnp.moveaxis(strips, 1, 0)              # (B, NS, ...)
+    return strips.reshape(B * n_strips, in_rows, Wp, C)
+
+
+def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
+           activation: str | None = None, bypass=None,
+           bypass_first: bool = False, out_dtype=None,
+           impl: str = "auto", dataflow: Dataflow | None = None,
+           hw: HardwareModel = TPU_V5E,
+           interpret: bool | None = None) -> jax.Array:
+    """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout); bypass broadcastable to
+    the output (B, OH, OW, Cout)."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "reference":
+        return conv2d_ref(x, w, stride=stride, pad=pad, bias=bias,
+                          activation=activation, bypass=bypass,
+                          bypass_first=bypass_first, out_dtype=out_dtype)
+
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    OH = (H + 2 * pad - kh) // stride + 1
+    OW = (W + 2 * pad - kw) // stride + 1
+    ct = select_conv_row_strips(H, W, Cin, Cout, kh, kw, stride, pad,
+                                x.dtype.itemsize, hw, batch=B)
+    out_rows, kpt = ct.out_rows, ct.kernels_per_tile
+    in_rows = (out_rows - 1) * stride + kh   # full window (pad supplies halo)
+    while Cout % kpt != 0:
+        kpt -= 1
+    n_strips = math.ceil(OH / out_rows)
+
+    if dataflow is None:
+        # T3 on the strip grid (same formulas as core/schedule.py).
+        maps_b = H * W * Cin
+        ker_b = Cin * kh * kw * Cout
+        kloop = maps_b + n_strips * ker_b
+        mloop = (Cout // kpt) * maps_b + ker_b
+        dataflow = (Dataflow.MAPS_RESIDENT if kloop <= mloop
+                    else Dataflow.WEIGHTS_RESIDENT)
+
+    # Pad: spatial conv padding + bottom rows so every strip is full.
+    Hp_needed = (n_strips - 1) * out_rows * stride + in_rows
+    xp = jnp.pad(x, ((0, 0), (pad, max(pad, Hp_needed - H - pad)),
+                     (pad, pad), (0, 0)))
+    strips = _make_strips(xp, n_strips, out_rows, in_rows, stride)
+
+    byp = None
+    if bypass is not None:
+        byp = jnp.broadcast_to(bypass, (B, OH, OW, Cout))
+        pad_oh = n_strips * out_rows - OH
+        byp = jnp.pad(byp, ((0, 0), (0, pad_oh), (0, 0), (0, 0)))
+        byp = byp.reshape(B * n_strips, out_rows, OW, Cout)
+
+    out = conv2d_strips_pallas(
+        strips, w, out_rows=out_rows, OW=OW, stride=stride, kpt=kpt,
+        bias=bias, activation=activation, bypass=byp,
+        bypass_first=bypass_first, out_dtype=out_dtype or x.dtype,
+        dataflow=dataflow, interpret=interpret)
+    out = out.reshape(B, n_strips * out_rows, OW, Cout)
+    return out[:, :OH]

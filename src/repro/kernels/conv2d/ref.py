@@ -1,0 +1,44 @@
+"""Oracle for 2D convolution with fused epilogue (NHWC / HWIO)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import apply_activation
+
+__all__ = ["conv2d_ref", "maxpool2d_ref", "avgpool2d_ref"]
+
+
+def conv2d_ref(x, w, *, stride: int = 1, pad: int = 0,
+               bias=None, activation: str | None = None,
+               bypass=None, bypass_first: bool = False,
+               out_dtype=None) -> jax.Array:
+    """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    if bypass is not None and bypass_first:
+        out = out + bypass.astype(jnp.float32)
+    out = apply_activation(out, activation)
+    if bypass is not None and not bypass_first:
+        out = out + bypass.astype(jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def maxpool2d_ref(x, *, window: int, stride: int, pad: int = 0) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype.type(-(2**15)),
+        jax.lax.max, (1, window, window, 1), (1, stride, stride, 1),
+        ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+
+
+def avgpool2d_ref(x, *, window: int, stride: int, pad: int = 0) -> jax.Array:
+    s = jax.lax.reduce_window(
+        x.astype(jnp.float32), 0.0, jax.lax.add,
+        (1, window, window, 1), (1, stride, stride, 1),
+        ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    return (s / (window * window)).astype(x.dtype)

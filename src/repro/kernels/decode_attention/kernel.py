@@ -1,0 +1,108 @@
+"""KV-cache decode attention Pallas kernel.
+
+One new query token per sequence against a long KV cache — the
+bandwidth-bound serving hot spot (every cache byte is read once per
+step, arithmetic intensity ~= 1 MAC/byte).  The schedule compiler's job
+here is purely T2/T4: size the kv block to VMEM and keep the streams
+busy; there is no loop-order freedom (the cache is the only big
+operand).
+
+Grid: (B * Hq, S / bkv), kv innermost with running-softmax scratch.
+GQA folded into the KV index map as in flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import compiler_params, default_interpret, vmem_scratch
+
+__all__ = ["decode_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _body(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+          scale, bkv):
+    kb = pl.program_id(1)
+    nkv = pl.num_programs(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    sk0 = kb * bkv
+
+    @pl.when(sk0 < kv_len)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (1, D)
+        k = k_ref[0].astype(jnp.float32)            # (bkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ki = sk0 + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+        s = jnp.where(ki < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+        p = jnp.exp(s - m_new[:, :1])
+        l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+            p.sum(-1, keepdims=True), l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, kv_len, *, scale: float,
+                            block_kv: int = 1024,
+                            interpret: bool | None = None) -> jax.Array:
+    """q: (B, Hq, D); k, v: (B, Hkv, S, D); kv_len: (B,) int32."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    bkv = min(block_kv, S)
+    assert S % bkv == 0
+
+    qf = q.reshape(B * Hq, 1, D)
+    kf = k.reshape(B * Hkv, S, D)
+    vf = v.reshape(B * Hkv, S, D)
+    lenf = kv_len.astype(jnp.int32)
+
+    def kv_map(h, kb):
+        return ((h // Hq) * Hkv + (h % Hq) // group, kb, 0)
+
+    grid = (B * Hq, S // bkv)
+    body = functools.partial(_body, scale=scale, bkv=bkv)
+    params = compiler_params(("parallel", "arbitrary"), interpret)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1,), lambda h, kb: (h // Hq,)),
+                  pl.BlockSpec((1, 1, D), lambda h, kb: (h, 0, 0)),
+                  pl.BlockSpec((1, bkv, D), kv_map),
+                  pl.BlockSpec((1, bkv, D), kv_map)],
+        out_specs=pl.BlockSpec((1, 1, D), lambda h, kb: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, 1, D), q.dtype),
+        scratch_shapes=[vmem_scratch((1, 128), jnp.float32),
+                        vmem_scratch((1, 128), jnp.float32),
+                        vmem_scratch((1, D), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(lenf, qf, kf, vf)
+    return out.reshape(B, Hq, D)

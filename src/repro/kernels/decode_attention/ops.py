@@ -1,0 +1,41 @@
+"""Public decode-attention wrapper with pallas/reference dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.hw import TPU_V5E, HardwareModel
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+__all__ = ["decode_attention"]
+
+
+def decode_attention(q, k, v, *, kv_len=None, scale: float | None = None,
+                     impl: str = "auto", block_kv: int | None = None,
+                     hw: HardwareModel = TPU_V5E,
+                     interpret: bool | None = None) -> jax.Array:
+    """Single-token decode: q (B,Hq,D) vs cache (B,Hkv,S,D)."""
+    B, Hq, D = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    if kv_len is None:
+        kv_len = jnp.full((B,), S, jnp.int32)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "reference":
+        return decode_attention_ref(q, k, v, kv_len=kv_len, scale=scale)
+    if block_kv is None:
+        # T2: cache block sized to stream at full bandwidth; k+v double
+        # buffered.  Cap the block at the cache length.
+        budget = hw.vmem_budget()
+        block_kv = 128
+        for b in (256, 512, 1024, 2048, 4096):
+            if b <= S and 4 * b * D * k.dtype.itemsize <= budget:
+                block_kv = b
+    pad = (-S) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return decode_attention_pallas(q, k, v, kv_len, scale=scale,
+                                   block_kv=block_kv, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Oracle for single-token KV-cache decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, *, kv_len=None,
+                         scale: float | None = None) -> jax.Array:
+    """q: (B, Hq, D) one new token; k, v: (B, Hkv, S, D) cache;
+    kv_len: (B,) valid lengths (int) or None for full cache."""
+    B, Hq, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32)) * scale
+    if kv_len is not None:
+        mask = jnp.arange(S)[None, :] < kv_len[:, None]      # (B, S)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,6 @@
+from .ops import flash_attention, attention_block_sizes
+from .ref import attention_ref, flash_ref
+from .kernel import flash_attention_pallas
+
+__all__ = ["flash_attention", "attention_block_sizes", "attention_ref",
+           "flash_ref", "flash_attention_pallas"]

@@ -1,0 +1,168 @@
+"""Attention oracles.
+
+* ``attention_ref``  — naive quadratic softmax attention (small tests).
+* ``flash_ref``      — chunked, memory-safe flash attention in pure jnp
+  with a custom VJP that recomputes per chunk (O(Sq*chunk) live bytes).
+  This is the model-path implementation wherever Mosaic is unavailable
+  (CPU dry-run) and the oracle for the Pallas kernel.
+
+Layout: q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D) with Hq % Hkv == 0
+(GQA handled by grouping, never by materializing repeated KV).
+Supports causal masking and a causal sliding window of size W
+(query i attends keys in (i-W, i]).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "flash_ref"]
+
+NEG_INF = -1e30
+
+
+def _mask(sq0: int, sk0, bq: int, bk: int, causal: bool,
+          window: int | None, kv_len: int | None):
+    """(bq, bk) additive mask for a tile at (sq0, sk0) global offset."""
+    qi = sq0 + jnp.arange(bq)[:, None]
+    ki = sk0 + jnp.arange(bk)[None, :]
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= ki <= qi
+    if window is not None:
+        ok &= ki > qi - window
+    if kv_len is not None:
+        ok &= ki < kv_len
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_ref(q, k, v, *, scale: float | None = None,
+                  causal: bool = False, window: int | None = None,
+                  kv_len=None):
+    """Naive O(Sq*Skv) oracle."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    Skv = k.shape[2]
+    m = _mask(0, 0, Sq, Skv, causal, window, kv_len)
+    s = s + m[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+# --- chunked flash with custom VJP ------------------------------------------------
+def _fwd_scan(q, k, v, scale, causal, window, kv_len, chunk):
+    """Returns (out_unnormalized -> normalized out, lse)."""
+    B, Hkv, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    n_chunks = Skv // chunk
+
+    def step(carry, j):
+        m, l, acc = carry
+        sk0 = j * chunk
+        kj = jax.lax.dynamic_slice_in_dim(k, sk0, chunk, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(v, sk0, chunk, axis=2)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q, kj.astype(jnp.float32)) * scale
+        s = s + _mask(0, sk0, Sq, chunk, causal, window, kv_len)[None, None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  jnp.arange(n_chunks))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 7))
+def _flash(q, k, v, scale, causal, window, kv_len, chunk):
+    out, _ = _flash_fwd(q, k, v, scale, causal, window, kv_len, chunk)[0], None
+    return out
+
+
+def _flash_fwd(q, k, v, scale, causal, window, kv_len, chunk):
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    out, lse = _fwd_scan(qg, k, v, scale, causal, window, kv_len, chunk)
+    o = out.reshape(B, Hq, Sq, D).astype(q.dtype)
+    return o, (q, k, v, o, lse, kv_len)
+
+
+def _flash_bwd(scale, causal, window, chunk, res, do):
+    q, k, v, o, lse, kv_len = res
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    Skv = k.shape[2]
+    qg = q.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    dog = do.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    og = o.reshape(B, Hkv, G, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    delta = jnp.sum(dog * og, axis=-1)                      # (B,Hkv,G,Sq)
+    n_chunks = Skv // chunk
+
+    def step(carry, j):
+        dq, dk, dv = carry
+        sk0 = j * chunk
+        kj = jax.lax.dynamic_slice_in_dim(kf, sk0, chunk, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(vf, sk0, chunk, axis=2)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kj) * scale
+        s = s + _mask(0, sk0, Sq, chunk, causal, window, kv_len)[None, None, None]
+        p = jnp.exp(s - lse[..., None])                     # (B,Hkv,G,Sq,c)
+        dvj = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vj)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kj)
+        dkj = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qg)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            dk, dkj.astype(dk.dtype), sk0, axis=2)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            dv, dvj.astype(dv.dtype), sk0, axis=2)
+        return (dq, dk, dv), None
+
+    dq0 = jnp.zeros_like(qg)
+    dk0 = jnp.zeros((B, Hkv, Skv, D), jnp.float32)
+    dv0 = jnp.zeros((B, Hkv, Skv, D), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0),
+                                   jnp.arange(n_chunks))
+    return (dq.reshape(B, Hq, Sq, D).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype), None)
+
+
+_flash.defvjp(lambda q, k, v, scale, causal, window, kv_len, chunk:
+              _flash_fwd(q, k, v, scale, causal, window, kv_len, chunk),
+              _flash_bwd)
+
+
+def flash_ref(q, k, v, *, scale: float | None = None, causal: bool = False,
+              window: int | None = None, kv_len=None,
+              chunk: int = 512) -> jax.Array:
+    """Memory-safe chunked flash attention (pure jnp, differentiable)."""
+    D = q.shape[-1]
+    Skv = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    chunk = min(chunk, Skv)
+    if Skv % chunk != 0:
+        pad = chunk - Skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_len = kv_len if kv_len is not None else Skv
+    return _flash(q, k, v, scale, causal, window, kv_len, chunk)

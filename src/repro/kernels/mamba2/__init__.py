@@ -1,0 +1,4 @@
+from .ops import mamba2_scan, mamba2_decode_step
+from .ref import mamba2_scan_chunked, mamba2_scan_ref
+from .kernel import mamba2_scan_pallas
+__all__ = ["mamba2_scan", "mamba2_decode_step", "mamba2_scan_ref", "mamba2_scan_chunked", "mamba2_scan_pallas"]

@@ -1,0 +1,122 @@
+"""Chunked Mamba2 SSD scan Pallas kernel.
+
+TPU adaptation of the SSD block decomposition: the sequence is split
+into chunks of Q steps; within a chunk the recurrence is a masked-decay
+matmul (MXU work), across chunks a small (N, P) state is carried in VMEM
+scratch — the grid's chunk axis is sequential, so scratch persists.
+This turns a length-L scan into L/Q matmul tiles, which is exactly the
+paper's T2 move: batch enough contiguous MAC work ("traces") per tile to
+hide the bookkeeping.
+
+Numerically safe: A < 0 and dt >= 0 make every exponent non-positive.
+
+Grid: (B*H, L/Q).  B/C are shared across heads (single group) and
+indexed through bh -> batch maps, so they stream once per batch, not per
+head — the Mloop/Kloop reasoning applied to the SSM operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import compiler_params, default_interpret, vmem_scratch
+
+__all__ = ["mamba2_scan_pallas"]
+
+
+def _body(x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,
+          y_ref, hout_ref, h_ref, *, Q, H):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (Q,)
+    A = a_ref[0].astype(jnp.float32)          # scalar
+    Bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (Q, N)
+
+    a = A * dt                                # (Q,) <= 0
+    cum = jnp.cumsum(a)                       # inclusive
+    total = cum[-1]
+
+    # Intra-chunk: masked decay attention on the MXU.
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    t_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    s_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    dec = jnp.exp(cum[:, None] - cum[None, :])
+    S = jnp.where(s_i <= t_i, CB * dec, 0.0) * dt[None, :]
+    y = jax.lax.dot_general(S, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # Inter-chunk: contribution of the carried state.
+    h_prev = h_ref[...]                       # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # State update.
+    w = (jnp.exp(total - cum) * dt)[:, None]  # (Q, 1)
+    h_ref[...] = h_prev * jnp.exp(total) + jax.lax.dot_general(
+        Bm * w, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        hout_ref[0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def mamba2_scan_pallas(x, dt, A, B, C, *, h0=None, chunk: int = 256,
+                       interpret: bool | None = None):
+    """x: (Bt, L, H, P); dt: (Bt, L, H); A: (H,); B, C: (Bt, L, N).
+    Returns (y (Bt, L, H, P), h_final (Bt, H, N, P))."""
+    if interpret is None:
+        interpret = default_interpret()
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+
+    xf = jnp.moveaxis(x, 2, 1).reshape(Bt * H, L, P)
+    dtf = jnp.moveaxis(dt, 2, 1).reshape(Bt * H, L)
+    h0f = (h0.reshape(Bt * H, N, P) if h0 is not None
+           else jnp.zeros((Bt * H, N, P), jnp.float32))
+
+    grid = (Bt * H, L // Q)
+    body = functools.partial(_body, Q=Q, H=H)
+    params = compiler_params(("parallel", "arbitrary"), interpret)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    y, h_fin = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, Q), lambda bh, c: (bh, c)),
+            pl.BlockSpec((1,), lambda bh, c: (bh % H,)),
+            pl.BlockSpec((1, Q, N), lambda bh, c: (bh // H, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, c: (bh // H, c, 0)),
+            pl.BlockSpec((1, N, P), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, N, P), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt * H, L, P), x.dtype),
+            jax.ShapeDtypeStruct((Bt * H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[vmem_scratch((N, P), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(xf, dtf, A, B, C, h0f)
+    y = jnp.moveaxis(y.reshape(Bt, H, L, P), 1, 2)
+    return y, h_fin.reshape(Bt, H, N, P)

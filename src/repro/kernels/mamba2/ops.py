@@ -1,0 +1,55 @@
+"""Public Mamba2 scan wrapper: dispatch, D-skip fusion, decode step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mamba2_scan_pallas
+from .ref import mamba2_scan_chunked, mamba2_scan_ref
+
+__all__ = ["mamba2_scan", "mamba2_decode_step"]
+
+
+def mamba2_scan(x, dt, A, B, C, *, D_skip=None, h0=None,
+                return_state: bool = False, impl: str = "auto",
+                chunk: int = 256, interpret: bool | None = None):
+    """Selective state-space scan.  Shapes as in ref.py."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "sequential":
+        return mamba2_scan_ref(x, dt, A, B, C, D_skip=D_skip, h0=h0,
+                               return_state=return_state)
+    if impl == "reference":
+        # block-parallel form: Q-times less state traffic than the
+        # sequential scan (EXPERIMENTS.md §Perf H1)
+        return mamba2_scan_chunked(x, dt, A, B, C, D_skip=D_skip, h0=h0,
+                                   return_state=return_state,
+                                   chunk=min(chunk, 256))
+    L = x.shape[1]
+    ch = min(chunk, L)
+    while L % ch != 0:
+        ch //= 2
+    y, h_fin = mamba2_scan_pallas(x, dt, A, B, C, h0=h0, chunk=max(ch, 1),
+                                  interpret=interpret)
+    if D_skip is not None:
+        y = y + (D_skip.astype(jnp.float32)[None, None, :, None]
+                 * x.astype(jnp.float32)).astype(y.dtype)
+    if return_state:
+        return y, h_fin
+    return y
+
+
+def mamba2_decode_step(h, x_t, dt_t, A, B_t, C_t, *, D_skip=None):
+    """One recurrence step for serving.  h: (Bt, H, N, P); x_t: (Bt, H, P);
+    dt_t: (Bt, H); B_t, C_t: (Bt, N).  Returns (y_t, h_new)."""
+    hf = h.astype(jnp.float32)
+    xf = x_t.astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    decay = jnp.exp(A.astype(jnp.float32)[None, :] * dtf)      # (Bt, H)
+    dBx = jnp.einsum("bn,bhp->bhnp", B_t.astype(jnp.float32),
+                     xf * dtf[..., None])
+    h_new = hf * decay[..., None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), h_new)
+    if D_skip is not None:
+        y = y + D_skip.astype(jnp.float32)[None, :, None] * xf
+    return y.astype(x_t.dtype), h_new

@@ -1,0 +1,112 @@
+"""Oracle for the Mamba2 selective state-space scan (SSD).
+
+Per head: state h (N, P); per step t
+    h_t = exp(A * dt_t) * h_{t-1} + B_t^T (dt_t * x_t)     (outer product)
+    y_t = C_t h_t + D_skip * x_t
+A is a negative scalar per head; B_t, C_t are shared across heads
+(single group); x (B, L, H, P); dt (B, L, H); B/C (B, L, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mamba2_scan_ref"]
+
+
+def mamba2_scan_ref(x, dt, A, B, C, *, D_skip=None, h0=None,
+                    return_state: bool = False):
+    """x: (Bt, L, H, P); dt: (Bt, L, H); A: (H,); B, C: (Bt, L, N).
+    Returns y (Bt, L, H, P) [and final state (Bt, H, N, P)]."""
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt_, Ct_ = inp          # (Bt,H,P), (Bt,H), (Bt,N), (Bt,N)
+        decay = jnp.exp(Af[None, :] * dtt)                  # (Bt, H)
+        dBx = jnp.einsum("bn,bhp->bhnp", Bt_, xt * dtt[..., None])
+        h = h * decay[..., None, None] + dBx                # (Bt,H,N,P)
+        y = jnp.einsum("bn,bhnp->bhp", Ct_, h)
+        return h, y
+
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((Bt, H, N, P), jnp.float32))
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    h_fin, ys = jax.lax.scan(step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1)                              # (Bt, L, H, P)
+    if D_skip is not None:
+        y = y + D_skip.astype(jnp.float32)[None, None, :, None] * xf
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, h_fin
+    return y
+
+
+def mamba2_scan_chunked(x, dt, A, B, C, *, D_skip=None, h0=None,
+                        return_state: bool = False, chunk: int = 64):
+    """Block-parallel SSD in pure jnp — the Pallas kernel's chunk
+    decomposition without Mosaic, used as the model path off-TPU.
+
+    Replaces the L-step sequential scan (state re-read every step, the
+    dominant memory term in the baseline zamba2 roofline) with L/Q chunk
+    steps of masked-decay matmuls; state traffic drops by Q (§Perf H1).
+    All exponents are <= 0, so the form is numerically safe.
+    """
+    Bt, L, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, L)
+    while L % Q != 0:
+        Q //= 2
+    nc = L // Q
+    # Big activations stay in the input dtype (bf16 on the model path —
+    # upcasting them doubled the dominant memory term, §Perf H1 iter 6);
+    # only the small per-head cumsums / state run in f32.
+    xr = x.reshape(Bt, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bt, nc, Q, H)
+    Br = B.reshape(Bt, nc, Q, N)
+    Cr = C.reshape(Bt, nc, Q, N)
+    Af = A.astype(jnp.float32)
+    cdt = x.dtype
+
+    def step(h, inp):
+        xc, dtc, Bc, Cc = inp        # (Bt,Q,H,P) (Bt,Q,H) (Bt,Q,N) (Bt,Q,N)
+        a = Af[None, None] * dtc                       # (Bt,Q,H) <= 0
+        cum = jnp.cumsum(a, axis=1)
+        total = cum[:, -1]                             # (Bt,H)
+        CB = jnp.einsum("bqn,bsn->bqs", Cc, Bc,
+                        preferred_element_type=jnp.float32)
+        dec = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (Bt,Q,S,H)
+        t_i = jnp.arange(Q)
+        mask = (t_i[:, None] >= t_i[None, :])[None, :, :, None]
+        M = jnp.where(mask, CB[..., None] * dec, 0.0) \
+            * dtc[:, None, :, :]                       # (Bt,Q,S,H) f32
+        y = jnp.einsum("bqsh,bshp->bqhp", M.astype(cdt), xc,
+                       preferred_element_type=jnp.float32)
+        y = y + jnp.exp(cum)[..., None] * jnp.einsum(
+            "bqn,bhnp->bqhp", Cc.astype(jnp.float32), h)
+        w = (jnp.exp(total[:, None] - cum) * dtc)      # (Bt,Q,H) f32
+        h = (h * jnp.exp(total)[..., None, None]
+             + jnp.einsum("bsh,bsn,bshp->bhnp",
+                          w, Bc.astype(jnp.float32),
+                          xc.astype(jnp.float32)))
+        return h, y.astype(cdt)
+
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((Bt, H, N, P), jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xr, dtf, Br, Cr))
+    # Rematerialize the O(Q^2 H) decay tensor in the backward pass
+    # instead of saving it per chunk — saving it was the dominant memory
+    # term of the whole zamba2 train step (§Perf H1 iter 7).
+    h_fin, ys = jax.lax.scan(jax.checkpoint(step), h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bt, L, H, P)
+    if D_skip is not None:
+        y = y + (D_skip.astype(cdt)[None, None, :, None] * x)
+    if return_state:
+        return y, h_fin
+    return y

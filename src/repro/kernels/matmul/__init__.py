@@ -1,0 +1,5 @@
+from .ops import matmul, scheduled_matmul
+from .ref import matmul_ref
+from .kernel import matmul_pallas
+
+__all__ = ["matmul", "scheduled_matmul", "matmul_ref", "matmul_pallas"]

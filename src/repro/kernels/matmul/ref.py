@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the scheduled matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import apply_activation
+
+__all__ = ["matmul_ref"]
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, *,
+               bias: jax.Array | None = None,
+               activation: str | None = None,
+               bypass: jax.Array | None = None,
+               out_dtype=None) -> jax.Array:
+    """C = epilogue(A @ B):  f32 accumulation, optional bias add,
+    activation and residual-bypass add (the paper's fused writeback)."""
+    acc = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    acc = apply_activation(acc, activation)
+    if bypass is not None:
+        acc = acc + bypass.astype(jnp.float32)
+    return acc.astype(out_dtype or a.dtype)

@@ -1,0 +1,94 @@
+"""RWKV6 WKV recurrence Pallas kernel.
+
+The recurrence is elementwise-decay + rank-1 update — inherently
+sequential in t with O(D^2) state.  The TPU-native version keeps the
+(D, D) state resident in VMEM for a whole (batch, head) stream and
+walks the sequence in chunks: the chunk's r/k/v/w tiles are loaded once
+(T2), the time loop runs entirely out of VMEM/VREGs.  This is the
+bandwidth-optimal layout — every HBM byte is touched exactly once —
+which is what matters for an op with arithmetic intensity ~2 FLOP/byte.
+
+(A chunked matmul reformulation that shifts work onto the MXU is the
+§Perf extension; see EXPERIMENTS.md.)
+
+Grid: (B*H, L/Q), sequential chunk axis, state in scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import compiler_params, default_interpret, vmem_scratch
+
+__all__ = ["wkv6_pallas"]
+
+
+def _body(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+          s_ref, *, Q):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                       # (D,)
+
+    def step(t, S):
+        rt = r_ref[0, t].astype(jnp.float32)               # (D,)
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                     # (D, D)
+        y = jnp.einsum("i,ij->j", rt, S + u[:, None] * kv)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return wt[:, None] * S + kv
+
+    S = jax.lax.fori_loop(0, Q, step, s_ref[...])
+    s_ref[...] = S
+
+    @pl.when(c == nc - 1)
+    def _emit():
+        sout_ref[0] = S.astype(sout_ref.dtype)
+
+
+def wkv6_pallas(r, k, v, w, u, *, s0=None, chunk: int = 128,
+                interpret: bool | None = None):
+    """r,k,v,w: (B, L, H, D); u: (H, D).  Returns (y, final_state)."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, L, H, D = r.shape
+    Q = min(chunk, L)
+    assert L % Q == 0
+
+    def fold(a):
+        return jnp.moveaxis(a, 2, 1).reshape(B * H, L, D)
+
+    rf, kf, vf, wf = fold(r), fold(k), fold(v), fold(w)
+    s0f = (s0.reshape(B * H, D, D) if s0 is not None
+           else jnp.zeros((B * H, D, D), jnp.float32))
+
+    grid = (B * H, L // Q)
+    body = functools.partial(_body, Q=Q)
+    params = compiler_params(("parallel", "arbitrary"), interpret)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    seq_spec = pl.BlockSpec((1, Q, D), lambda bh, c: (bh, c, 0))
+    y, s_fin = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, D), lambda bh, c: (bh % H, 0)),
+                  pl.BlockSpec((1, D, D), lambda bh, c: (bh, 0, 0))],
+        out_specs=[seq_spec,
+                   pl.BlockSpec((1, D, D), lambda bh, c: (bh, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B * H, L, D), r.dtype),
+                   jax.ShapeDtypeStruct((B * H, D, D), jnp.float32)],
+        scratch_shapes=[vmem_scratch((D, D), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(rf, kf, vf, wf, u, s0f)
+    y = jnp.moveaxis(y.reshape(B, H, L, D), 1, 2)
+    return y, s_fin.reshape(B, H, D, D)

@@ -1,0 +1,44 @@
+"""Public WKV6 wrapper + decode step."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_pallas
+from .ref import wkv6_chunked, wkv6_ref
+
+__all__ = ["wkv6", "wkv6_decode_step"]
+
+
+def wkv6(r, k, v, w, u, *, s0=None, return_state: bool = False,
+         impl: str = "auto", chunk: int = 128,
+         interpret: bool | None = None):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "sequential":
+        return wkv6_ref(r, k, v, w, u, s0=s0, return_state=return_state)
+    if impl == "reference":
+        # block-parallel form (see §Perf H1); sequential oracle retained
+        return wkv6_chunked(r, k, v, w, u, s0=s0,
+                            return_state=return_state)
+    L = r.shape[1]
+    ch = min(chunk, L)
+    while L % ch != 0:
+        ch //= 2
+    y, s_fin = wkv6_pallas(r, k, v, w, u, s0=s0, chunk=max(ch, 1),
+                           interpret=interpret)
+    if return_state:
+        return y, s_fin
+    return y
+
+
+def wkv6_decode_step(S, r_t, k_t, v_t, w_t, u):
+    """One step for serving.  S: (B, H, D, D); r/k/v/w_t: (B, H, D);
+    u: (H, D).  Returns (y_t, S_new)."""
+    Sf = S.astype(jnp.float32)
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r_t, k_t, v_t, w_t))
+    kv = kf[..., :, None] * vf[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj",
+                   rf, Sf + u.astype(jnp.float32)[None, :, :, None] * kv)
+    S_new = wf[..., :, None] * Sf + kv
+    return y.astype(r_t.dtype), S_new

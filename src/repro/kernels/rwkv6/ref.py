@@ -1,0 +1,96 @@
+"""Oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head with head dim D and state S (D_k x D_v):
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with data-dependent per-channel decay w_t in (0, 1) (the model computes
+w_t = exp(-exp(w_raw_t))) and a per-channel bonus u for the current
+token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv6_ref"]
+
+
+def wkv6_ref(r, k, v, w, u, *, s0=None, return_state: bool = False):
+    """r,k,v,w: (B, L, H, D); u: (H, D).  Returns y (B, L, H, D)
+    [and final state (B, H, D, D)]."""
+    B, L, H, D = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp              # (B,H,D) each
+        kv = kt[..., :, None] * vt[..., None, :]           # (B,H,D,D)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    S0 = (s0.astype(jnp.float32) if s0 is not None
+          else jnp.zeros((B, H, D, D), jnp.float32))
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+    if return_state:
+        return y, S_fin
+    return y
+
+
+def wkv6_chunked(r, k, v, w, u, *, s0=None, return_state: bool = False,
+                 chunk: int = 16):
+    """Block-parallel WKV6 (model path off-TPU): L/Q chunk steps instead
+    of L sequential state updates — the same T2 move as the Mamba2
+    chunked form (§Perf H1).
+
+    Within a chunk, pair weights exp(cum_{t-1} - cum_s) are factored as
+    (r ∘ e^{cum_prev - m})(k ∘ e^{m - cum}) with the per-channel center
+    m = cum at mid-chunk, which keeps both factors within e^{±Q/2·|log w|}
+    — safe in f32 for Q <= 16 with realistic decay magnitudes.
+    """
+    B, L, H, D = r.shape
+    Q = min(chunk, L)
+    while L % Q != 0:
+        Q //= 2
+    nc = L // Q
+    uf = u.astype(jnp.float32)
+
+    def resh(a):
+        return a.reshape(B, nc, Q, H, D)
+
+    rr, kk, vv, ww = (resh(a) for a in (r, k, v, w))
+
+    @jax.checkpoint
+    def step(S, inp):
+        rc, kc, vc, wc = (a.astype(jnp.float32) for a in inp)  # (B,Q,H,D)
+        lw = jnp.log(jnp.maximum(wc, 1e-30))                   # <= 0
+        cum = jnp.cumsum(lw, axis=1)                           # inclusive
+        cum_prev = cum - lw                                    # exclusive
+        m = cum[:, Q // 2][:, None]                            # center
+        r_t = rc * jnp.exp(cum_prev - m)
+        k_t = kc * jnp.exp(m - cum)
+        A = jnp.einsum("bqhd,bshd->bqsh", r_t, k_t)            # (B,Q,S,H)
+        t_i = jnp.arange(Q)
+        mask = (t_i[:, None] > t_i[None, :])[None, :, :, None]
+        diag = jnp.einsum("bqhd,bqhd->bqh", rc * uf[None, None], kc)
+        y = jnp.einsum("bqsh,bshd->bqhd", jnp.where(mask, A, 0.0), vc)
+        y = y + diag[..., None] * vc
+        # inter-chunk: carried state read out with decayed r
+        y = y + jnp.einsum("bqhi,bhij->bqhj", rc * jnp.exp(cum_prev), S)
+        # state update
+        total = cum[:, -1][:, None]                            # (B,1,H,D)
+        k_s = kc * jnp.exp(total - cum)
+        S = (S * jnp.exp(total[:, 0])[..., None]
+             + jnp.einsum("bqhi,bqhj->bhij", k_s, vc))
+        return S, y.astype(r.dtype)
+
+    S0 = (s0.astype(jnp.float32) if s0 is not None
+          else jnp.zeros((B, H, D, D), jnp.float32))
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rr, kk, vv, ww))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, H, D)
+    if return_state:
+        return y, S_fin
+    return y

@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be executed as a script / module entry (``python -m
+repro.launch.dryrun``) so the XLA_FLAGS above take effect before jax
+initializes its backends.  For each cell this:
+
+  1. builds the production mesh (16x16 single-pod, 2x16x16 multi-pod),
+  2. builds the jitted step via launch/steps.py with full shardings,
+  3. ``.lower()`` on ShapeDtypeStruct operands (zero allocation),
+  4. ``.compile()`` — sharding mismatches / unsupported collectives fail
+     here, which is the point,
+  5. records memory_analysis / cost_analysis / per-collective bytes
+     parsed from the optimized HLO -> roofline terms (core/roofline.py),
+  6. appends one JSON record per cell to the output file.
+
+Cells are compiled in-process; kernels run impl="reference" (Mosaic is
+unavailable off-TPU; the collective/sharding structure under test is
+kernel-choice independent).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import REGISTRY, get_config
+from ..core.hw import TPU_V5E
+from ..core.roofline import roofline_report
+from ..optim import AdamW
+from ..parallel.rules import make_plan
+from .mesh import descriptor_for, make_production_mesh
+from .steps import build_step
+
+# Serving-memory adaptations per cell (EXPERIMENTS.md §Dry-run notes):
+# fp8 KV caches for the large dense/MoE decode cells.
+F8_DECODE_ARCHS = {"llama3-8b", "deepseek-7b", "olmo-1b",
+                   "llama4-maverick-400b-a17b", "llama-3.2-vision-11b"}
+
+
+def analytic_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference steps."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch          # one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             strategy: str = "auto", optimizer_bits: int = 32,
+             hw=TPU_V5E) -> dict:
+    cfg = get_config(arch)
+    shape = {s.name: s for s in cfg.shapes()}[shape_name]
+    if shape.kind == "decode" and arch in F8_DECODE_ARCHS:
+        cfg = dataclasses.replace(cfg, kv_dtype="float8")
+    desc = descriptor_for(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan(cfg, shape, desc, strategy)
+    optimizer = AdamW(state_bits=optimizer_bits)
+
+    t0 = time.time()
+    with mesh:
+        bundle = build_step(cfg, shape, plan, mesh, optimizer=optimizer)
+        lowered = bundle.fn.lower(*bundle.args)
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        try:
+            cost = compiled.cost_analysis()
+        except Exception:
+            cost = None
+        hlo = compiled.as_text()
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rep = roofline_report(
+        arch=arch, shape=shape_name, mesh_name=mesh_name,
+        n_chips=desc.n_chips,
+        cost_analysis=cost, hlo_text=hlo,
+        model_flops=analytic_flops(cfg, shape), hw=hw,
+        analytic_flops=analytic_flops(cfg, shape))
+    mem_fields = {}
+    if mem is not None:
+        for f in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "generated_code_size_in_bytes"):
+            mem_fields[f] = getattr(mem, f, None)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "strategy": plan.strategy, "kind": shape.kind,
+        "chips": desc.n_chips,
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_fields,
+        "hlo_flops": rep.hlo_flops, "hlo_bytes": rep.hlo_bytes,
+        "coll_link_bytes_per_chip": rep.coll_link_bytes,
+        "coll_counts": rep.coll_counts,
+        "compute_ms": rep.compute_s * 1e3,
+        "memory_ms": rep.memory_s * 1e3,
+        "collective_ms": rep.collective_s * 1e3,
+        "dominant": rep.dominant,
+        "model_flops": rep.model_flops,
+        "useful_ratio": rep.useful_ratio,
+        "notes": rep.notes,
+        "decisions": plan.decisions,
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--strategy", default="auto")
+    ap.add_argument("--optimizer-bits", type=int, default=32)
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(REGISTRY) if args.arch == "all" else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("strategy", "auto")))
+                except Exception:
+                    pass
+
+    with open(args.out, "a") as out:
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = ([s.name for s in cfg.shapes()]
+                      if args.shape == "all" else [args.shape])
+            for shape_name in shapes:
+                for multi in meshes:
+                    mesh_name = "2x16x16" if multi else "16x16"
+                    key = (arch, shape_name, mesh_name, args.strategy)
+                    if key in done:
+                        continue
+                    # big MoE training: 8-bit optimizer states to fit
+                    bits = args.optimizer_bits
+                    if (arch == "llama4-maverick-400b-a17b"
+                            and shape_name == "train_4k"):
+                        bits = 8
+                    tag = f"{arch} x {shape_name} x {mesh_name}"
+                    print(f"=== {tag}", flush=True)
+                    try:
+                        rec = run_cell(arch, shape_name, multi_pod=multi,
+                                       strategy=args.strategy,
+                                       optimizer_bits=bits)
+                        print(f"    ok compile={rec['compile_s']}s "
+                              f"dominant={rec['dominant']} "
+                              f"compute={rec['compute_ms']:.2f}ms "
+                              f"memory={rec['memory_ms']:.2f}ms "
+                              f"coll={rec['collective_ms']:.2f}ms",
+                              flush=True)
+                        print(f"    memory_analysis={rec['memory_analysis']}",
+                              flush=True)
+                    except Exception as e:
+                        rec = {"arch": arch, "shape": shape_name,
+                               "mesh": mesh_name, "strategy": args.strategy,
+                               "error": f"{type(e).__name__}: {e}",
+                               "traceback": traceback.format_exc()[-2000:]}
+                        print(f"    FAILED: {type(e).__name__}: {e}",
+                              flush=True)
+                    out.write(json.dumps(rec) + "\n")
+                    out.flush()
+        # record the spec-mandated skips
+        for arch in archs:
+            cfg = get_config(arch)
+            for sk in cfg.skipped_shapes():
+                out.write(json.dumps({
+                    "arch": arch, "shape": sk, "skipped": True,
+                    "reason": "pure full-attention arch; long_500k "
+                              "requires sub-quadratic mixing "
+                              "(DESIGN.md §4)"}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import, and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.hw import MULTI_POD, SINGLE_POD, MeshDescriptor
+
+__all__ = ["make_production_mesh", "make_mesh_from_descriptor",
+           "descriptor_for"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before importing jax")
+    import numpy as np
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def descriptor_for(*, multi_pod: bool = False) -> MeshDescriptor:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_mesh_from_descriptor(desc: MeshDescriptor):
+    import numpy as np
+    devices = jax.devices()
+    if len(devices) < desc.n_chips:
+        raise RuntimeError(f"need {desc.n_chips} devices, have "
+                           f"{len(devices)}")
+    dev = np.asarray(devices[:desc.n_chips]).reshape(desc.shape)
+    return jax.sharding.Mesh(dev, desc.axes)
+
+
+def make_smoke_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for CPU integration tests (8 host devices)."""
+    return make_mesh_from_descriptor(MeshDescriptor(shape, axes))

@@ -1,0 +1,297 @@
+"""Step builders: train / prefill / decode, with full sharding trees.
+
+Everything here is mesh- and allocation-agnostic: ``input_specs`` and
+``abstract_*`` return ShapeDtypeStructs, and the jitted steps take
+in/out shardings from the ShardingPlan — the same builders serve the
+real launcher (concrete arrays) and the dry-run (.lower().compile()).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..core.hw import MeshDescriptor
+from ..models import (abstract_params, cross_entropy_loss, get_model,
+                      param_pspecs)
+from ..models.losses import chunked_cross_entropy
+from ..optim import AdamW
+from ..parallel.act_sharding import activation_rules
+from ..parallel.rules import ShardingPlan
+
+__all__ = ["StepBundle", "input_specs", "batch_pspecs", "cache_pspecs",
+           "abstract_train_state", "abstract_cache", "build_step",
+           "opt_state_pspecs"]
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# --- input specs ------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    GB, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((GB, S), i32),
+                 "labels": jax.ShapeDtypeStruct((GB, S), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((GB, S), i32)}
+    else:  # decode: one new token each; the cache is a separate operand
+        specs = {"tokens": jax.ShapeDtypeStruct((GB,), i32)}
+    api = get_model(cfg)
+    if api.extra_input == "vision_embeds" and shape.kind != "decode":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (GB, cfg.n_vision_tokens, cfg.d_model), cfg.jdtype)
+    if api.extra_input == "encoder_frames" and shape.kind != "decode":
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (GB, cfg.encoder_seq, cfg.d_model), cfg.jdtype)
+    return specs
+
+
+def _axis_total(mesh_sizes: dict, entry) -> int:
+    names = (entry,) if isinstance(entry, str) else tuple(entry or ())
+    total = 1
+    for n in names:
+        total *= mesh_sizes.get(n, 1)
+    return total
+
+
+def _fit(shape: tuple, mesh_sizes: dict, *entries) -> P:
+    """Divisibility-checked spec: non-dividing entries fall to None;
+    each mesh axis used at most once."""
+    used: set[str] = set()
+    fixed = []
+    for dim, e in zip(shape, entries):
+        names = (e,) if isinstance(e, str) else tuple(e or ())
+        total = _axis_total(mesh_sizes, e)
+        if not names or dim % total != 0 or any(n in used for n in names):
+            fixed.append(None)
+        else:
+            used.update(names)
+            fixed.append(e)
+    return P(*fixed)
+
+
+def _batch_candidates(dp) -> list:
+    """Fallback chain for the batch axis: the full dp spec, then every
+    contiguous sub-tuple by decreasing coverage (e.g. 256-batch on a
+    512-chip flat axis falls back to (data, model))."""
+    if isinstance(dp, str) or dp is None:
+        return [dp]
+    cands = []
+    n = len(dp)
+    for size in range(n, 0, -1):
+        for start in range(0, n - size + 1):
+            cands.append(tuple(dp[start:start + size]))
+    return cands
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeSpec, plan: ShardingPlan,
+                 mesh_sizes: dict) -> dict:
+    dp = plan.batch_spec[0]
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        spec = P(*([None] * len(v.shape)))
+        for cand in _batch_candidates(dp):
+            trial = _fit(v.shape, mesh_sizes, cand,
+                         *([None] * (len(v.shape) - 1)))
+            if trial[0] is not None:
+                spec = trial
+                break
+        out[k] = spec
+    return out
+
+
+def cache_pspecs(cache_abstract: dict, plan: ShardingPlan,
+                 mesh_sizes: dict) -> dict:
+    """Per-key cache sharding: batch over dp, heads over model, with
+    divisibility-aware fallback (kv_heads < model axis -> shard head_dim;
+    batch=1 long-context -> shard heads over the data axes too)."""
+    dp = plan.batch_spec[0]
+    specs = {}
+    for k, v in cache_abstract.items():
+        sh = v.shape
+        nd = len(sh)
+        if k == "pos":
+            specs[k] = _fit(sh, mesh_sizes, dp)
+        elif k in ("k", "v", "cross_k", "cross_v", "attn_k", "attn_v"):
+            # (L, B, KV, S, hd): prefer heads on model, else head_dim.
+            s = _fit(sh, mesh_sizes, None, dp, "model", None, None)
+            if s[2] is None:
+                s = _fit(sh, mesh_sizes, None, dp, None, None, "model")
+            if s[1] is None:   # batch not shardable: spread heads wider
+                s2 = _fit(sh, mesh_sizes, None, None, (dp, "model")
+                          if isinstance(dp, str) else tuple(dp) + ("model",),
+                          None, None)
+                if s2[2] is not None:
+                    s = s2
+            specs[k] = s
+        elif k in ("ssm", "wkv"):            # (L, B, H, N, P)
+            s = _fit(sh, mesh_sizes, None, dp, "model", None, None)
+            if s[2] is None:
+                s = _fit(sh, mesh_sizes, None, dp, None, None, "model")
+            specs[k] = s
+        elif k == "conv":                    # (L, B, K, C)
+            specs[k] = _fit(sh, mesh_sizes, None, dp, None, "model")
+        elif k in ("shift_t", "shift_c"):    # (L, B, D)
+            specs[k] = _fit(sh, mesh_sizes, None, dp, "model")
+        else:
+            specs[k] = P(*([None] * nd))
+    return specs
+
+
+def opt_state_pspecs(param_specs: dict, state_bits: int) -> dict:
+    """Optimizer-state specs mirror the (ZeRO-sharded) param specs.
+
+    8-bit moments: Q8State(q like the param, scale with the last axis
+    unsharded — it is reduced to length 1)."""
+    if state_bits == 8:
+        from ..optim.adamw import Q8State
+
+        def expand(spec):
+            entries = list(spec)
+            scale_entries = entries[:-1] + [None] if entries else []
+            return Q8State(q=spec, scale=P(*scale_entries))
+        m = jax.tree.map(expand, param_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+        return {"m": m, "v": m, "step": P()}
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+# --- abstract state ---------------------------------------------------------------
+def abstract_train_state(cfg: ArchConfig, optimizer: AdamW):
+    api = get_model(cfg)
+    defs = api.param_defs(cfg)
+    params = abstract_params(defs)
+    opt_state = jax.eval_shape(optimizer.init, params)
+    return params, opt_state, defs
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    api = get_model(cfg)
+    return jax.eval_shape(
+        functools.partial(api.init_cache, cfg, batch, max_len))
+
+
+# --- step builders ----------------------------------------------------------------
+@dataclass
+class StepBundle:
+    fn: Any                      # the jitted step
+    args: tuple                  # abstract operands in call order
+    donate: tuple = ()
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_step(cfg: ArchConfig, shape: ShapeSpec, plan: ShardingPlan,
+               mesh, *, optimizer: AdamW | None = None,
+               impl: str = "auto", remat: bool | None = None
+               ) -> StepBundle:
+    """Build the jitted step for one (arch x shape) cell with shardings."""
+    api = get_model(cfg)
+    defs = api.param_defs(cfg)
+    mesh_sizes = dict(mesh.shape)
+    p_specs = param_pspecs(defs, plan.rules, plan.overrides,
+                           axis_sizes=mesh_sizes)
+    params_abs = abstract_params(defs)
+    act_rules = plan.activation_rules(mesh)
+    b_specs = batch_pspecs(cfg, shape, plan, mesh_sizes)
+    batch_abs = input_specs(cfg, shape)
+    if remat is None:
+        remat = shape.kind == "train" and cfg.n_layers >= 16
+
+    extra_key = api.extra_input if api.extra_input in batch_abs else None
+
+    if shape.kind == "train":
+        optimizer = optimizer or AdamW()
+        opt_abs = jax.eval_shape(optimizer.init, params_abs)
+        o_specs = opt_state_pspecs(p_specs, optimizer.state_bits)
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                kw = {extra_key: batch[extra_key]} if extra_key else {}
+                with activation_rules(act_rules):
+                    out = api.forward(p, batch["tokens"], cfg, impl=impl,
+                                      remat=remat, return_hidden=True, **kw)
+                    head = (p["embed"].T if cfg.tie_embeddings
+                            else p["lm_head"])
+                    loss = chunked_cross_entropy(out["hidden"], head,
+                                                 batch["labels"])
+                aux = out.get("aux", {})
+                if "lb_loss" in aux:
+                    loss = loss + AUX_LOSS_WEIGHT * aux["lb_loss"]
+                return loss, aux
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            params, opt_state, om = optimizer.update(grads, opt_state,
+                                                     params)
+            metrics = {"loss": loss, **om}
+            if "imbalance_pct" in aux:
+                metrics["moe_imbalance_pct"] = aux["imbalance_pct"]
+            return params, opt_state, metrics
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(_named(p_specs, mesh), _named(o_specs, mesh),
+                          _named(b_specs, mesh)),
+            out_shardings=(_named(p_specs, mesh), _named(o_specs, mesh),
+                           None),
+            donate_argnums=(0, 1))
+        return StepBundle(fn, (params_abs, opt_abs, batch_abs))
+
+    if shape.kind == "prefill":
+        cache_abs = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        c_specs = cache_pspecs(cache_abs, plan, mesh_sizes)
+
+        def prefill_step(params, batch):
+            kw = {extra_key: batch[extra_key]} if extra_key else {}
+            with activation_rules(act_rules):
+                out = api.forward(params, batch["tokens"], cfg, impl=impl,
+                                  return_cache=True, return_hidden=True,
+                                  cache_len=shape.seq_len, **kw)
+                # head applied to the last position only — never
+                # materializes (B, S, V) logits during prefill.
+                head = (params["embed"].T if cfg.tie_embeddings
+                        else params["lm_head"])
+                logits = out["hidden"][:, -1] @ head
+            return logits, out["cache"]
+
+        logits_out = _fit((shape.global_batch, cfg.vocab), mesh_sizes,
+                          plan.batch_spec[0], "model")
+        fn = jax.jit(
+            prefill_step,
+            in_shardings=(_named(p_specs, mesh), _named(b_specs, mesh)),
+            out_shardings=(NamedSharding(mesh, logits_out),
+                           _named(c_specs, mesh)))
+        return StepBundle(fn, (params_abs, batch_abs))
+
+    # decode
+    cache_abs = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_specs = cache_pspecs(cache_abs, plan, mesh_sizes)
+
+    def serve_step(params, cache, batch):
+        with activation_rules(act_rules):
+            logits, cache = api.decode_step(params, cache, batch["tokens"],
+                                            cfg, impl=impl)
+        return logits, cache
+
+    logits_out = _fit((shape.global_batch, cfg.vocab), mesh_sizes,
+                      plan.batch_spec[0], "model")
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(_named(p_specs, mesh), _named(c_specs, mesh),
+                      _named(b_specs, mesh)),
+        out_shardings=(NamedSharding(mesh, logits_out),
+                       _named(c_specs, mesh)),
+        donate_argnums=(1,))
+    return StepBundle(fn, (params_abs, cache_abs, batch_abs),
+                      donate=(1,))

@@ -1,0 +1,8 @@
+"""Model zoo: pure-pytree params + functional apply, schedule-driven kernels."""
+from .common import (ParamDef, abstract_params, count_params,
+                     cross_entropy_loss, init_params, param_pspecs)
+from .registry import FAMILIES, ModelApi, get_model
+
+__all__ = ["ParamDef", "abstract_params", "count_params",
+           "cross_entropy_loss", "init_params", "param_pspecs",
+           "FAMILIES", "ModelApi", "get_model"]

@@ -1,0 +1,133 @@
+"""CNN models — the paper's own workloads (AlexNetOWT, ResNet18/50).
+
+Layer-list driven (CNNConfig); convs run through kernels/conv2d with
+the schedule compiler choosing strips + Mloop/Kloop per layer, residual
+bypass fused into the consuming conv's epilogue exactly as the paper
+fuses the VMOV add into the writeback.  ``input_of`` allows parallel
+paths (projection shortcuts); ``to_graph`` lowers a CNNConfig to the
+compiler IR for the benchmark reproductions (Tables 1-3, Fig 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import CNNConfig
+from ..core.ir import LayerKind, LayerNode, ModelGraph, conv_node, matmul_node
+from ..kernels.conv2d import avgpool2d_ref, conv2d, maxpool2d_ref
+from .common import ParamDef
+
+__all__ = ["param_defs", "forward", "to_graph", "trace_shapes"]
+
+
+def trace_shapes(cfg: CNNConfig) -> list[tuple[int, int, int]]:
+    """(H, W, C) entering each layer; final output shape appended."""
+    outs: list[tuple[int, int, int]] = []       # output shape per layer
+    ins: list[tuple[int, int, int]] = []
+    cur = (cfg.input_hw, cfg.input_hw, cfg.input_ch)
+    for i, layer in enumerate(cfg.layers):
+        src = outs[layer.input_of] if layer.input_of is not None else cur
+        ins.append(src)
+        h, w, c = src
+        if layer.kind == "conv":
+            h = (h + 2 * layer.pad - layer.k) // layer.stride + 1
+            w = (w + 2 * layer.pad - layer.k) // layer.stride + 1
+            c = layer.c_out
+        elif layer.kind in ("maxpool", "avgpool"):
+            h = (h + 2 * layer.pad - layer.k) // layer.stride + 1
+            w = (w + 2 * layer.pad - layer.k) // layer.stride + 1
+        elif layer.kind == "fc":
+            h = w = 1
+            c = layer.c_out
+        cur = (h, w, c)
+        outs.append(cur)
+    return ins + [cur]
+
+
+def param_defs(cfg: CNNConfig) -> dict:
+    dt = cfg.jdtype
+    shapes = trace_shapes(cfg)
+    defs = {}
+    for i, layer in enumerate(cfg.layers):
+        h, w, c = shapes[i]
+        if layer.kind == "conv":
+            defs[f"layer_{i:02d}"] = {
+                "w": ParamDef((layer.k, layer.k, c, layer.c_out),
+                              (None, None, "embed", "ff"), dt),
+                "b": ParamDef((layer.c_out,), ("ff",), dt, "zeros"),
+            }
+        elif layer.kind == "fc":
+            defs[f"layer_{i:02d}"] = {
+                "w": ParamDef((h * w * c, layer.c_out), ("embed", "ff"), dt),
+                "b": ParamDef((layer.c_out,), ("ff",), dt, "zeros"),
+            }
+    return defs
+
+
+def forward(params, x, cfg: CNNConfig, *, impl: str = "auto"):
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    outputs: dict[int, jax.Array] = {}
+    needed = {l.bypass_of for l in cfg.layers if l.bypass_of is not None}
+    needed |= {l.input_of for l in cfg.layers if l.input_of is not None}
+    h = x.astype(cfg.jdtype)
+    for i, layer in enumerate(cfg.layers):
+        src = outputs[layer.input_of] if layer.input_of is not None else h
+        if layer.kind == "conv":
+            p = params[f"layer_{i:02d}"]
+            bypass = outputs.get(layer.bypass_of) \
+                if layer.bypass_of is not None else None
+            h = conv2d(src, p["w"], stride=layer.stride, pad=layer.pad,
+                       bias=p["b"], activation=layer.activation,
+                       bypass=bypass, bypass_first=layer.bypass_first,
+                       impl=impl)
+        elif layer.kind == "maxpool":
+            h = maxpool2d_ref(src, window=layer.k, stride=layer.stride,
+                              pad=layer.pad)
+        elif layer.kind == "avgpool":
+            h = avgpool2d_ref(src, window=layer.k, stride=layer.stride,
+                              pad=layer.pad)
+        elif layer.kind == "fc":
+            p = params[f"layer_{i:02d}"]
+            B = src.shape[0]
+            h = src.reshape(B, -1) @ p["w"] + p["b"]
+            if layer.activation == "relu":
+                h = jax.nn.relu(h)
+        if i in needed:
+            outputs[i] = h
+    return h
+
+
+def to_graph(cfg: CNNConfig, batch: int = 1,
+             dtype_bytes: int = 2) -> ModelGraph:
+    """Lower to the compiler IR (paper §5.1 steps 1-2)."""
+    g = ModelGraph(cfg.name)
+    shapes = trace_shapes(cfg)
+    prev_name = None
+    names: dict[int, str] = {}
+    for i, layer in enumerate(cfg.layers):
+        h, w, c = shapes[i]
+        name = f"{layer.kind}_{i:02d}"
+        inp = (names[layer.input_of] if layer.input_of is not None
+               else (prev_name or ""))
+        inputs = [inp] if inp else []
+        if layer.kind == "conv":
+            g.add(conv_node(
+                name, h, w, c, layer.c_out, layer.k, layer.k,
+                stride=layer.stride, pad=layer.pad, batch=batch,
+                dtype_bytes=dtype_bytes, inputs=inputs,
+                bypass_of=names.get(layer.bypass_of)
+                if layer.bypass_of is not None else None,
+                fused_activation=layer.activation))
+        elif layer.kind in ("maxpool", "avgpool"):
+            oh = (h + 2 * layer.pad - layer.k) // layer.stride + 1
+            g.add(LayerNode(name=name, kind=LayerKind.POOL,
+                            dims={"numel": batch * oh * oh * c},
+                            dtype_bytes=dtype_bytes, inputs=inputs))
+        elif layer.kind == "fc":
+            g.add(matmul_node(name, batch, h * w * c, layer.c_out,
+                              dtype_bytes=dtype_bytes, inputs=inputs,
+                              fused_bias=True))
+        names[i] = name
+        prev_name = name
+    g.mark_residuals()
+    return g

@@ -1,0 +1,55 @@
+"""Memory-efficient losses.
+
+``chunked_cross_entropy`` never materializes the full (B, S, V) logits:
+the head matmul + log-softmax run per sequence chunk under
+``jax.checkpoint``, so the backward pass recomputes each chunk's logits
+instead of saving them.  With a vocab-sharded head the live buffer is
+(B, chunk, V/model) — the difference between a 47 GB and a 1.5 GB
+training step for the 50k-200k-vocab archs (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_cross_entropy"]
+
+
+def chunked_cross_entropy(h: jax.Array, head_w: jax.Array,
+                          labels: jax.Array, *, chunk: int = 512,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean token CE of ``h @ head_w`` against ``labels``.
+
+    h: (B, S, D); head_w: (D, V); labels: (B, S); mask: (B, S) or None.
+    S must not need padding: chunk is clamped to a divisor of S.
+    """
+    B, S, D = h.shape
+    V = head_w.shape[-1]
+    c = min(chunk, S)
+    while S % c != 0:
+        c //= 2
+    n_chunks = S // c
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    hc = h.reshape(B, n_chunks, c, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, c).transpose(1, 0, 2)
+    mc = mask.reshape(B, n_chunks, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(hi, li, mi):
+        logits = (hi @ head_w).astype(jnp.float32)      # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mi)
+
+    def body(acc, xs):
+        hi, li, mi = xs
+        return acc + one(hi, li, mi), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (hc, lc, mc))
+    return total / jnp.maximum(mask.sum(), 1.0)

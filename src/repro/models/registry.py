@@ -1,0 +1,42 @@
+"""Uniform model API: family -> (param_defs, forward, init_cache,
+decode_step).  Launchers, tests and the dry-run all go through this."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from ..configs.base import ArchConfig
+from . import rwkv, transformer, whisper, zamba2
+
+__all__ = ["ModelApi", "get_model", "FAMILIES"]
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    param_defs: Callable[[ArchConfig], dict]
+    forward: Callable[..., dict]
+    init_cache: Callable[..., dict]
+    decode_step: Callable[..., tuple]
+    extra_input: str | None = None   # "vision_embeds" | "encoder_frames"
+
+
+FAMILIES: dict[str, ModelApi] = {
+    "dense": ModelApi(transformer.param_defs, transformer.forward,
+                      transformer.init_cache, transformer.decode_step),
+    "moe": ModelApi(transformer.param_defs, transformer.forward,
+                    transformer.init_cache, transformer.decode_step),
+    "vlm": ModelApi(transformer.param_defs, transformer.forward,
+                    transformer.init_cache, transformer.decode_step,
+                    extra_input="vision_embeds"),
+    "audio": ModelApi(whisper.param_defs, whisper.forward,
+                      whisper.init_cache, whisper.decode_step,
+                      extra_input="encoder_frames"),
+    "hybrid": ModelApi(zamba2.param_defs, zamba2.forward,
+                       zamba2.init_cache, zamba2.decode_step),
+    "ssm": ModelApi(rwkv.param_defs, rwkv.forward, rwkv.init_cache,
+                    rwkv.decode_step),
+}
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    return FAMILIES[cfg.family]

@@ -1,0 +1,226 @@
+"""RWKV6 (Finch) — attention-free LM with data-dependent per-channel
+decay.  Time-mix (WKV recurrence via kernels/rwkv6) + channel-mix
+blocks, token-shift interpolation, LoRA-generated decay.
+
+State per layer for decode: the (H, D, D) WKV state plus the two
+token-shift vectors — O(1) in sequence length, which is why rwkv6 runs
+the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.rwkv6 import wkv6, wkv6_decode_step
+from ..parallel.act_sharding import shard_act
+from .common import ParamDef, layer_norm, rms_norm
+
+__all__ = ["param_defs", "forward", "init_cache", "decode_step"]
+
+_LORA = 64
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    dt = cfg.jdtype
+    L, D, F = cfg.n_layers, cfg.d_model, cfg.d_ff
+    H = D // cfg.hd
+
+    def p(shape, axes, init="normal"):
+        return ParamDef((L,) + shape, ("layers",) + axes, dt, init)
+
+    blocks = {
+        "ln1": p((D,), ("embed",), "ones"),
+        "ln1_b": p((D,), ("embed",), "zeros"),
+        "ln2": p((D,), ("embed",), "ones"),
+        "ln2_b": p((D,), ("embed",), "zeros"),
+        # time mix
+        "mu_r": p((D,), ("embed",), "zeros"),
+        "mu_k": p((D,), ("embed",), "zeros"),
+        "mu_v": p((D,), ("embed",), "zeros"),
+        "mu_w": p((D,), ("embed",), "zeros"),
+        "mu_g": p((D,), ("embed",), "zeros"),
+        "w_base": p((D,), ("embed",), "zeros"),
+        "w_lora_a": p((D, _LORA), ("embed", None)),
+        "w_lora_b": p((_LORA, D), (None, "embed")),
+        "u": p((H, cfg.hd), (None, None), "zeros"),
+        "wr": p((D, D), ("embed", "heads")),
+        "wk": p((D, D), ("embed", "heads")),
+        "wv": p((D, D), ("embed", "heads")),
+        "wg": p((D, D), ("embed", "heads")),
+        "wo": p((D, D), ("heads", "embed")),
+        "ln_x": p((D,), ("embed",), "ones"),
+        # channel mix
+        "mu_ck": p((D,), ("embed",), "zeros"),
+        "mu_cr": p((D,), ("embed",), "zeros"),
+        "wc_r": p((D, D), ("embed", "ff")),
+        "wc_in": p((D, F), ("embed", "ff")),
+        "wc_out": p((F, D), ("ff", "embed")),
+    }
+    return {
+        "embed": ParamDef((cfg.vocab, D), ("vocab", "embed"), dt, "embed"),
+        "ln_in": ParamDef((D,), ("embed",), dt, "ones"),
+        "ln_in_b": ParamDef((D,), ("embed",), dt, "zeros"),
+        "blocks": blocks,
+        "final_norm": ParamDef((D,), ("embed",), dt, "ones"),
+        "final_norm_b": ParamDef((D,), ("embed",), dt, "zeros"),
+        "lm_head": ParamDef((D, cfg.vocab), ("embed", "vocab"), dt),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros or carried state at t=0)."""
+    prev = x[:, :-1]
+    first = (jnp.zeros_like(x[:, :1]) if last is None else last[:, None])
+    return jnp.concatenate([first, prev], axis=1)
+
+
+def _lerp(x, xx, mu):
+    return x + (xx - x) * mu[None, None]
+
+
+def _time_mix(h, p, cfg, *, impl, wkv_state=None, shift_state=None,
+              return_state=False):
+    B, S, D = h.shape
+    H, hd = D // cfg.hd, cfg.hd
+    xx = _shift(h, shift_state)
+    r = _lerp(h, xx, p["mu_r"]) @ p["wr"]
+    k = _lerp(h, xx, p["mu_k"]) @ p["wk"]
+    v = _lerp(h, xx, p["mu_v"]) @ p["wv"]
+    g = jax.nn.silu((_lerp(h, xx, p["mu_g"]) @ p["wg"]).astype(jnp.float32))
+    xw = _lerp(h, xx, p["mu_w"])
+    w_log = (p["w_base"][None, None].astype(jnp.float32)
+             + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(
+                 jnp.float32)) @ p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log))                       # (B, S, D) in (0,1)
+
+    def heads(a):
+        return a.reshape(B, S, H, hd)
+
+    y, s_new = wkv6(heads(r), heads(k), heads(v),
+                    heads(w.astype(h.dtype)), p["u"], s0=wkv_state,
+                    return_state=True, impl=impl)
+    y = y.reshape(B, S, D)
+    y = rms_norm(y, p["ln_x"])                         # per-channel norm
+    out = (y.astype(jnp.float32) * g).astype(h.dtype) @ p["wo"]
+    if return_state:
+        return out, s_new, h[:, -1]
+    return out
+
+
+def _channel_mix(h, p, *, shift_state=None, return_state=False):
+    xx = _shift(h, shift_state)
+    kx = _lerp(h, xx, p["mu_ck"]) @ p["wc_in"]
+    k = jnp.square(jnp.maximum(kx.astype(jnp.float32), 0.0))
+    r = jax.nn.sigmoid((_lerp(h, xx, p["mu_cr"]) @ p["wc_r"]
+                        ).astype(jnp.float32))
+    out = (r * (k.astype(h.dtype) @ p["wc_out"]).astype(jnp.float32)
+           ).astype(h.dtype)
+    if return_state:
+        return out, h[:, -1]
+    return out
+
+
+def forward(params, tokens, cfg: ArchConfig, *, impl: str = "auto",
+            return_cache: bool = False, cache_len: int | None = None,
+            remat: bool = False, return_hidden: bool = False):
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    h = layer_norm(h, params["ln_in"], params["ln_in_b"])
+    h = shard_act(h, "hidden")
+
+    def body(carry, p_i):
+        a_in = layer_norm(carry, p_i["ln1"], p_i["ln1_b"])
+        if return_cache:
+            a, s_new, sh1 = _time_mix(a_in, p_i, cfg, impl=impl,
+                                      return_state=True)
+        else:
+            a = _time_mix(a_in, p_i, cfg, impl=impl)
+            s_new = sh1 = None
+        carry = carry + a
+        c_in = layer_norm(carry, p_i["ln2"], p_i["ln2_b"])
+        if return_cache:
+            c, sh2 = _channel_mix(c_in, p_i, return_state=True)
+        else:
+            c = _channel_mix(c_in, p_i)
+            sh2 = None
+        carry = shard_act(carry + c, "hidden")
+        ys = (s_new, sh1, sh2) if return_cache else None
+        return carry, ys
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    h, ys = jax.lax.scan(body, h, params["blocks"])
+    h = layer_norm(h, params["final_norm"], params["final_norm_b"])
+    logits = (None if return_hidden
+              else shard_act(h @ params["lm_head"], "logits"))
+    out = {"logits": logits, "aux": {}}
+    if return_hidden:
+        out["hidden"] = h
+    if return_cache:
+        s_stack, sh1_stack, sh2_stack = ys
+        out["cache"] = {"wkv": s_stack, "shift_t": sh1_stack,
+                        "shift_c": sh2_stack,
+                        "pos": jnp.full((B,), S, jnp.int32)}
+    return out
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    D = cfg.d_model
+    H, hd = D // cfg.hd, cfg.hd
+    L = cfg.n_layers
+    return {
+        "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((L, batch, D), cfg.jdtype),
+        "shift_c": jnp.zeros((L, batch, D), cfg.jdtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, *,
+                impl: str = "auto"):
+    B = tokens.shape[0]
+    D = cfg.d_model
+    H, hd = D // cfg.hd, cfg.hd
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    h = layer_norm(h, params["ln_in"], params["ln_in_b"])
+
+    def body(carry, xs):
+        p_i, s_i, sh1_i, sh2_i = xs
+        x1 = layer_norm(carry, p_i["ln1"], p_i["ln1_b"])
+        xx = sh1_i
+        def mix(mu):
+            return x1 + (xx - x1) * mu[None]
+        r = (mix(p_i["mu_r"]) @ p_i["wr"]).reshape(B, H, hd)
+        k = (mix(p_i["mu_k"]) @ p_i["wk"]).reshape(B, H, hd)
+        v = (mix(p_i["mu_v"]) @ p_i["wv"]).reshape(B, H, hd)
+        g = jax.nn.silu((mix(p_i["mu_g"]) @ p_i["wg"]).astype(jnp.float32))
+        w_log = (p_i["w_base"][None].astype(jnp.float32)
+                 + jnp.tanh(mix(p_i["mu_w"]).astype(jnp.float32)
+                            @ p_i["w_lora_a"].astype(jnp.float32))
+                 @ p_i["w_lora_b"].astype(jnp.float32))
+        w = jnp.exp(-jnp.exp(w_log)).reshape(B, H, hd)
+        y, s_new = wkv6_decode_step(s_i, r, k, v.astype(jnp.float32), w,
+                                    p_i["u"])
+        y = rms_norm(y.reshape(B, D), p_i["ln_x"])
+        carry = carry + (y.astype(jnp.float32) * g).astype(carry.dtype) \
+            @ p_i["wo"]
+        x2 = layer_norm(carry, p_i["ln2"], p_i["ln2_b"])
+        xx2 = sh2_i
+        kx = (x2 + (xx2 - x2) * p_i["mu_ck"][None]) @ p_i["wc_in"]
+        kk = jnp.square(jnp.maximum(kx.astype(jnp.float32), 0.0))
+        rr = jax.nn.sigmoid(((x2 + (xx2 - x2) * p_i["mu_cr"][None])
+                             @ p_i["wc_r"]).astype(jnp.float32))
+        carry = carry + (rr * (kk.astype(carry.dtype) @ p_i["wc_out"]
+                               ).astype(jnp.float32)).astype(carry.dtype)
+        return carry, (s_new, x1, x2)
+
+    h, (s_new, sh1_new, sh2_new) = jax.lax.scan(
+        body, h, (params["blocks"], cache["wkv"], cache["shift_t"],
+                  cache["shift_c"]))
+    h = layer_norm(h, params["final_norm"], params["final_norm_b"])
+    logits = h @ params["lm_head"]
+    new_cache = {"wkv": s_new, "shift_t": sh1_new, "shift_c": sh2_new,
+                 "pos": cache["pos"] + 1}
+    return logits, new_cache

@@ -1,0 +1,448 @@
+"""Decoder-only transformer LM: dense (llama-family), MoE, and
+cross-attention (VLM) variants — one implementation parameterized by
+``ArchConfig``.
+
+Layers are stacked on a leading "layers" axis and run under
+``jax.lax.scan`` (one-block HLO; tractable 512-device dry-run compiles).
+All matmul-shaped compute routes through kernels/ (schedule-driven
+Pallas on TPU, reference on CPU); attention through the flash /
+decode_attention kernels.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.decode_attention import decode_attention
+from ..kernels.flash_attention import flash_attention
+from ..kernels.common import apply_activation
+from ..parallel.act_sharding import shard_act
+from .common import (ParamDef, Rotary, apply_rope, layer_norm, rms_norm)
+from .moe import moe_mlp
+
+__all__ = ["param_defs", "forward", "init_cache", "decode_step"]
+
+
+# --- parameter declaration -------------------------------------------------------
+def _norm_defs(cfg: ArchConfig, L: int | None, name: str) -> dict:
+    """Norm params; nonparametric LN (OLMo) contributes none."""
+    if cfg.norm == "nonparametric":
+        return {}
+    dt = cfg.jdtype
+    shape = (L, cfg.d_model) if L else (cfg.d_model,)
+    axes = ("layers", "embed") if L else ("embed",)
+    d = {name: ParamDef(shape, axes, dt, "ones")}
+    if cfg.norm == "layernorm":
+        d[name + "_b"] = ParamDef(shape, axes, dt, "zeros")
+    return d
+
+
+def _attn_defs(cfg: ArchConfig, L: int | None) -> dict:
+    dt = cfg.jdtype
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    def p(shape, axes):
+        if L:
+            return ParamDef((L,) + shape, ("layers",) + axes, dt)
+        return ParamDef(shape, axes, dt)
+    return {
+        "wq": p((D, H * hd), ("embed", "heads")),
+        "wk": p((D, KV * hd), ("embed", "kv_heads")),
+        "wv": p((D, KV * hd), ("embed", "kv_heads")),
+        "wo": p((H * hd, D), ("heads", "embed")),
+    }
+
+
+def _mlp_defs(cfg: ArchConfig, L: int | None, moe: bool | None = None) -> dict:
+    dt = cfg.jdtype
+    D, F = cfg.d_model, cfg.d_ff
+    def p(shape, axes):
+        if L:
+            return ParamDef((L,) + shape, ("layers",) + axes, dt)
+        return ParamDef(shape, axes, dt)
+    use_moe = cfg.n_experts > 0 if moe is None else moe
+    if use_moe:
+        E = cfg.n_experts
+        d = {"router": p((D, E), ("embed", None)),
+             "w_gate": p((E, D, F), ("experts", "embed", "ff")),
+             "w_down": p((E, F, D), ("experts", "ff", "embed"))}
+        if cfg.gated_mlp:
+            d["w_up"] = p((E, D, F), ("experts", "embed", "ff"))
+        return d
+    d = {"w_gate": p((D, F), ("embed", "ff")),
+         "w_down": p((F, D), ("ff", "embed"))}
+    if cfg.gated_mlp:
+        d["w_up"] = p((D, F), ("embed", "ff"))
+    return d
+
+
+def _block_defs(cfg: ArchConfig, L: int, moe: bool | None = None) -> dict:
+    blocks = {}
+    blocks.update(_norm_defs(cfg, L, "attn_norm"))
+    blocks.update(_attn_defs(cfg, L))
+    blocks.update(_norm_defs(cfg, L, "mlp_norm"))
+    blocks.update(_mlp_defs(cfg, L, moe))
+    return blocks
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    dt = cfg.jdtype
+    L = cfg.n_layers
+    interleaved = cfg.n_experts > 0 and cfg.moe_every > 1
+    if interleaved:
+        assert L % cfg.moe_every == 0, (L, cfg.moe_every)
+        G = L // cfg.moe_every
+        defs: dict[str, Any] = {
+            "embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                              dt, "embed"),
+            "blocks": _block_defs(cfg, L - G, moe=False),
+            "moe_blocks": _block_defs(cfg, G, moe=True),
+        }
+    else:
+        defs = {
+            "embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                              dt, "embed"),
+            "blocks": _block_defs(cfg, L),
+        }
+    defs.update(_norm_defs(cfg, None, "final_norm"))
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab),
+                                   ("embed", "vocab"), dt)
+    if cfg.cross_attn_every:
+        G = cfg.n_layers // cfg.cross_attn_every
+        cross = {}
+        cross.update(_norm_defs(cfg, G, "attn_norm"))
+        cross.update({k: ParamDef((G,) + v.shape[1:], v.axes, v.dtype)
+                      for k, v in _attn_defs(cfg, L).items()})
+        cross["gate"] = ParamDef((G,), ("layers",), dt, "zeros")
+        defs["cross_blocks"] = cross
+    return defs
+
+
+# --- building blocks --------------------------------------------------------------
+def _norm(h, p, cfg, name):
+    if cfg.norm == "nonparametric":
+        return layer_norm(h)
+    if cfg.norm == "layernorm":
+        return layer_norm(h, p[name], p.get(name + "_b"))
+    return rms_norm(h, p[name])
+
+
+def _heads(x, n, hd):
+    B, S = x.shape[0], x.shape[1]
+    return x.reshape(B, S, n, hd).transpose(0, 2, 1, 3)   # (B, n, S, hd)
+
+
+def _attention(h, p, cfg, cos, sin, *, impl, causal=True, window=None,
+               kv_override=None, return_kv=False):
+    """Self- (or cross-, via kv_override) attention on (B, S, D)."""
+    B, S, D = h.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _heads(h @ p["wq"], H, hd)
+    if kv_override is None:
+        k = _heads(h @ p["wk"], KV, hd)
+        v = _heads(h @ p["wv"], KV, hd)
+        if cos is not None:
+            q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    else:
+        src = kv_override                                  # (B, Skv, D)
+        k = _heads(src @ p["wk"], KV, hd)
+        v = _heads(src @ p["wv"], KV, hd)
+        if cos is not None:
+            q = apply_rope(q, cos, sin)
+    q = shard_act(q, "attn_q")
+    # Under sequence parallelism K/V must be whole before the chunked
+    # attention scan: one small (GQA) all-gather per layer here instead
+    # of a full-score all-reduce per kv chunk (§Perf H2 iter 2).
+    k = shard_act(k, "attn_kv")
+    v = shard_act(v, "attn_kv")
+    out = flash_attention(q, k, v, causal=causal, window=window, impl=impl)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = out @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _mlp(h, p, cfg):
+    B, S, D = h.shape
+    if "router" in p:
+        out, aux = moe_mlp(h.reshape(B * S, D), p["router"], p["w_gate"],
+                           p.get("w_up", p["w_gate"]), p["w_down"],
+                           top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           activation=cfg.activation, gated=cfg.gated_mlp)
+        return out.reshape(B, S, D), aux
+    g = apply_activation(h @ p["w_gate"], cfg.activation)
+    if cfg.gated_mlp:
+        g = g * (h @ p["w_up"])
+    return g @ p["w_down"], {}
+
+
+def _block(h, p, cfg, cos, sin, *, impl, window=None, return_kv=False):
+    attn_in = _norm(h, p, cfg, "attn_norm")
+    if return_kv:
+        a, kv = _attention(attn_in, p, cfg, cos, sin, impl=impl,
+                           window=window, return_kv=True)
+    else:
+        a = _attention(attn_in, p, cfg, cos, sin, impl=impl, window=window)
+        kv = None
+    h = shard_act(h + a, "hidden")
+    m, aux = _mlp(_norm(h, p, cfg, "mlp_norm"), p, cfg)
+    h = shard_act(h + m, "hidden")
+    return (h, kv, aux) if return_kv else (h, aux)
+
+
+def _cross_block(h, p, cfg, vis, *, impl):
+    """Gated cross-attention sub-block (llama-3.2-vision style)."""
+    a = _attention(_norm(h, p, cfg, "attn_norm"), p, cfg, None, None,
+                   impl=impl, causal=False, kv_override=vis)
+    return shard_act(h + jnp.tanh(p["gate"]).astype(h.dtype) * a, "hidden")
+
+
+# --- forward ----------------------------------------------------------------------
+def forward(params, tokens, cfg: ArchConfig, *, vision_embeds=None,
+            impl: str = "auto", return_cache: bool = False,
+            cache_len: int | None = None, remat: bool = False,
+            return_hidden: bool = False):
+    """tokens (B, S) -> {"logits": (B, S, V), "aux": {...}[, "cache"]}."""
+    B, S = tokens.shape
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    h = shard_act(h, "hidden")
+    rot = Rotary(cfg.hd, cfg.rope_theta)
+    cos, sin = rot.freqs(jnp.arange(S))
+
+    def body(carry, p_i):
+        out = _block(carry, p_i, cfg, cos, sin, impl=impl,
+                     window=cfg.attn_window, return_kv=return_cache)
+        if return_cache:
+            h2, kv, aux = out
+            return h2, (kv, aux)
+        h2, aux = out
+        return h2, aux
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    interleaved = cfg.n_experts > 0 and cfg.moe_every > 1
+    if cfg.cross_attn_every:
+        G = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every
+        blocks = jax.tree.map(
+            lambda x: x.reshape((G, per) + x.shape[1:]), params["blocks"])
+        vis = vision_embeds
+        assert vis is not None, "vlm arch requires vision_embeds"
+
+        def group(carry, xs):
+            cross_p, self_p = xs
+            carry = _cross_block(carry, cross_p, cfg, vis, impl=impl)
+            carry, ys = jax.lax.scan(body, carry, self_p)
+            return carry, ys
+
+        h, ys = jax.lax.scan(group, h, (params["cross_blocks"], blocks))
+        ys = jax.tree.map(lambda x: x.reshape((cfg.n_layers,) + x.shape[2:]),
+                          ys)
+        kvs, auxs = ys if return_cache else (None, ys)
+    elif interleaved:
+        # llama4-style: (moe_every - 1) dense layers, then one MoE layer.
+        per = cfg.moe_every
+        G = cfg.n_layers // per
+        dense = jax.tree.map(
+            lambda x: x.reshape((G, per - 1) + x.shape[1:]),
+            params["blocks"])
+
+        def group(carry, xs):
+            moe_p, dense_g = xs
+            carry, ys_d = jax.lax.scan(body, carry, dense_g)
+            carry, ys_m = body(carry, moe_p)
+            return carry, (ys_d, ys_m)
+
+        h, (ys_d, ys_m) = jax.lax.scan(group, h,
+                                       (params["moe_blocks"], dense))
+        if return_cache:
+            (kv_d, aux_d), (kv_m, aux_m) = ys_d, ys_m
+            kvs = jax.tree.map(
+                lambda d, m: jnp.concatenate(
+                    [d, m[:, None]], axis=1).reshape(
+                        (cfg.n_layers,) + d.shape[2:]), kv_d, kv_m)
+            auxs = aux_m
+        else:
+            kvs, auxs = None, ys_m
+    else:
+        h, ys = jax.lax.scan(body, h, params["blocks"])
+        kvs, auxs = ys if return_cache else (None, ys)
+    h = _norm(h, params, cfg, "final_norm")
+    if return_hidden:
+        logits = None
+    else:
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = shard_act(h @ head, "logits")
+
+    aux = {}
+    if cfg.n_experts and auxs:
+        aux = {k: jnp.mean(v) for k, v in auxs.items() if v is not None}
+    out = {"logits": logits, "aux": aux}
+    if return_hidden:
+        out["hidden"] = h
+    if return_cache:
+        k_stack, v_stack = kvs               # (L, B, KV, S, hd)
+        CL = cache_len or S
+        if cfg.attn_window:
+            CL = min(CL, cfg.attn_window)
+        if CL > S:                           # room to append during decode
+            padw = ((0, 0),) * 3 + ((0, CL - S), (0, 0))
+            k_stack = jnp.pad(k_stack, padw)
+            v_stack = jnp.pad(v_stack, padw)
+        elif CL < S:                         # rolling window: keep last CL
+            idx = jnp.arange(S - CL, S) % CL
+            kw = jnp.zeros(k_stack.shape[:3] + (CL,) + k_stack.shape[4:],
+                           k_stack.dtype)
+            k_stack = kw.at[:, :, :, idx].set(k_stack[:, :, :, S - CL:])
+            v_stack = jnp.zeros_like(kw).at[:, :, :, idx].set(
+                v_stack[:, :, :, S - CL:])
+        k_stack = k_stack.astype(cfg.kv_jdtype)
+        v_stack = v_stack.astype(cfg.kv_jdtype)
+        cache = {"k": k_stack, "v": v_stack,
+                 "pos": jnp.full((B,), S, jnp.int32)}
+        if cfg.cross_attn_every:
+            cache["cross_k"], cache["cross_v"] = _cross_kv(params, cfg,
+                                                           vision_embeds)
+        out["cache"] = cache
+    return out
+
+
+def _cross_kv(params, cfg, vis):
+    """Precompute cross-attention KV for all cross blocks (decode)."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    def one(p):
+        return _heads(vis @ p["wk"], KV, hd), _heads(vis @ p["wv"], KV, hd)
+    return jax.vmap(one)(params["cross_blocks"])   # (G, B, KV, Tv, hd)
+
+
+# --- decode -----------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               n_vision: int | None = None) -> dict:
+    KV, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    dt = cfg.kv_jdtype
+    cache_len = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    cache = {
+        "k": jnp.zeros((L, batch, KV, cache_len, hd), dt),
+        "v": jnp.zeros((L, batch, KV, cache_len, hd), dt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.cross_attn_every:
+        G = cfg.n_layers // cfg.cross_attn_every
+        Tv = n_vision or cfg.n_vision_tokens
+        cache["cross_k"] = jnp.zeros((G, batch, KV, Tv, hd), dt)
+        cache["cross_v"] = jnp.zeros((G, batch, KV, Tv, hd), dt)
+    return cache
+
+
+def _write_cache(cache_k, cache_v, k_new, v_new, slot):
+    """Insert (B, KV, hd) at per-sequence slot of (B, KV, S, hd)."""
+    def upd(c, x, s):
+        return jax.lax.dynamic_update_slice_in_dim(c, x[:, None], s, axis=1)
+    k = jax.vmap(upd)(cache_k, k_new, slot)
+    v = jax.vmap(upd)(cache_v, v_new, slot)
+    return k, v
+
+
+def _attention_decode(h1, p, cfg, ck, cv, pos, cos, sin, *, impl):
+    """h1 (B, D); ck/cv (B, KV, S, hd); pos (B,).  Rolling window cache."""
+    B, D = h1.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S = ck.shape[2]
+    q = (h1 @ p["wq"]).reshape(B, H, hd)
+    k = (h1 @ p["wk"]).reshape(B, KV, hd)
+    v = (h1 @ p["wv"]).reshape(B, KV, hd)
+    if cos is not None:
+        q = apply_rope(q, cos[:, None], sin[:, None])
+        k = apply_rope(k, cos[:, None], sin[:, None])
+    slot = pos % S                                   # rolling (window) cache
+    ck, cv = _write_cache(ck, cv, k.astype(ck.dtype), v.astype(cv.dtype),
+                          slot)
+    kv_len = jnp.minimum(pos + 1, S)
+    out = decode_attention(q, ck, cv, kv_len=kv_len, impl=impl)
+    return (out.reshape(B, H * hd) @ p["wo"]), ck, cv
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, *,
+                impl: str = "auto"):
+    """tokens (B,) -> (logits (B, V), new cache).  pos advances by 1."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    rot = Rotary(cfg.hd, cfg.rope_theta)
+    cos, sin = rot.freqs(pos)                        # (B, hd/2)
+
+    def body(carry, xs):
+        p_i, ck, cv = xs
+        a_in = _norm(carry, p_i, cfg, "attn_norm")
+        a, ck, cv = _attention_decode(a_in, p_i, cfg, ck, cv, pos, cos, sin,
+                                      impl=impl)
+        carry = carry + a
+        m, _ = _mlp(_norm(carry, p_i, cfg, "mlp_norm")[:, None], p_i, cfg)
+        carry = carry + m[:, 0]
+        return carry, (ck, cv)
+
+    if cfg.cross_attn_every:
+        per = cfg.cross_attn_every
+        G = cfg.n_layers // per
+        blocks = jax.tree.map(
+            lambda x: x.reshape((G, per) + x.shape[1:]), params["blocks"])
+        kc = cache["k"].reshape((G, per) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((G, per) + cache["v"].shape[1:])
+
+        def group(carry, xs):
+            cross_p, self_p, kc_g, vc_g, xk, xv = xs
+            a_in = _norm(carry, cross_p, cfg, "attn_norm")
+            H, hd = cfg.n_heads, cfg.hd
+            q = (a_in @ cross_p["wq"]).reshape(B, H, hd)
+            a = decode_attention(q, xk, xv, impl=impl)
+            a = a.reshape(B, H * hd) @ cross_p["wo"]
+            carry = carry + jnp.tanh(cross_p["gate"]).astype(carry.dtype) * a
+            carry, ys = jax.lax.scan(body, carry, (self_p, kc_g, vc_g))
+            return carry, ys
+
+        h, (k_new, v_new) = jax.lax.scan(
+            group, h, (params["cross_blocks"], blocks, kc, vc,
+                       cache["cross_k"], cache["cross_v"]))
+        k_new = k_new.reshape(cache["k"].shape)
+        v_new = v_new.reshape(cache["v"].shape)
+    elif cfg.n_experts > 0 and cfg.moe_every > 1:
+        per = cfg.moe_every
+        G = cfg.n_layers // per
+        dense = jax.tree.map(
+            lambda x: x.reshape((G, per - 1) + x.shape[1:]),
+            params["blocks"])
+        kc = cache["k"].reshape((G, per) + cache["k"].shape[1:])
+        vc = cache["v"].reshape((G, per) + cache["v"].shape[1:])
+
+        def group(carry, xs):
+            moe_p, dense_p, kc_g, vc_g = xs
+            carry, ys_d = jax.lax.scan(
+                body, carry, (dense_p, kc_g[:per - 1], vc_g[:per - 1]))
+            carry, ys_m = body(carry, (moe_p, kc_g[per - 1], vc_g[per - 1]))
+            return carry, (ys_d, ys_m)
+
+        h, ((kd, vd), (km, vm)) = jax.lax.scan(
+            group, h, (params["moe_blocks"], dense, kc, vc))
+        k_new = jnp.concatenate([kd, km[:, None]], axis=1).reshape(
+            cache["k"].shape)
+        v_new = jnp.concatenate([vd, vm[:, None]], axis=1).reshape(
+            cache["v"].shape)
+    else:
+        h, (k_new, v_new) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"]))
+
+    h = _norm(h, params, cfg, "final_norm")
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = h @ head
+    new_cache = dict(cache)
+    new_cache.update({"k": k_new, "v": v_new, "pos": pos + 1})
+    return logits, new_cache

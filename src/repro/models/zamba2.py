@@ -1,0 +1,282 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with one *shared* attention
+block applied every ``shared_attn_every`` layers (weights reused at each
+application — the arch's signature trick).
+
+Mamba2 mixer per layer: in_proj -> [z | x | B | C | dt], short causal
+depthwise conv over (x|B|C), selective scan (kernels/mamba2), gated
+RMSNorm, out_proj.  The shared attention block is a full transformer
+block (attn + MLP) with a sliding window (``attn_window``), which is
+what makes the long_500k decode cell sub-quadratic (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.mamba2 import mamba2_decode_step, mamba2_scan
+from ..parallel.act_sharding import shard_act
+from .common import ParamDef, Rotary, rms_norm
+from .transformer import (_attention, _attention_decode, _attn_defs, _mlp,
+                          _norm)
+
+__all__ = ["param_defs", "forward", "init_cache", "decode_step"]
+
+_CONV_K = 4
+
+
+def _n_apps(cfg: ArchConfig) -> int:
+    e = cfg.shared_attn_every
+    return (cfg.n_layers + e - 1) // e
+
+
+def param_defs(cfg: ArchConfig) -> dict:
+    dt = cfg.jdtype
+    L, D = cfg.n_layers, cfg.d_model
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * N
+    blocks = {
+        "norm": ParamDef((L, D), ("layers", "embed"), dt, "ones"),
+        "in_proj": ParamDef((L, D, 2 * di + 2 * N + H),
+                            ("layers", "embed", "ff"), dt),
+        "conv_w": ParamDef((L, _CONV_K, conv_ch), ("layers", None, "ff"),
+                           dt, init_scale=0.5),
+        "A_log": ParamDef((L, H), ("layers", None), jnp.float32, "zeros"),
+        "dt_bias": ParamDef((L, H), ("layers", None), jnp.float32, "zeros"),
+        "D_skip": ParamDef((L, H), ("layers", None), jnp.float32, "ones"),
+        "gate_norm": ParamDef((L, di), ("layers", "ff"), dt, "ones"),
+        "out_proj": ParamDef((L, di, D), ("layers", "ff", "embed"), dt),
+    }
+    shared = {}
+    shared["attn_norm"] = ParamDef((D,), ("embed",), dt, "ones")
+    shared.update({k: ParamDef(v.shape[1:], v.axes[1:], v.dtype)
+                   for k, v in _attn_defs(cfg, L).items()})
+    shared["mlp_norm"] = ParamDef((D,), ("embed",), dt, "ones")
+    shared["w_gate"] = ParamDef((D, cfg.d_ff), ("embed", "ff"), dt)
+    shared["w_up"] = ParamDef((D, cfg.d_ff), ("embed", "ff"), dt)
+    shared["w_down"] = ParamDef((cfg.d_ff, D), ("ff", "embed"), dt)
+    return {
+        "embed": ParamDef((cfg.vocab, D), ("vocab", "embed"), dt, "embed"),
+        "blocks": blocks,
+        "shared": shared,
+        "final_norm": ParamDef((D,), ("embed",), dt, "ones"),
+        "lm_head": ParamDef((D, cfg.vocab), ("embed", "vocab"), dt),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w):
+    """Depthwise causal conv, kernel _CONV_K.  xBC (B, S, C); conv_w (K, C)."""
+    K = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1]] * conv_w[i][None, None]
+              for i in range(K))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _mamba_mixer(h, p, cfg, *, impl, state=None, conv_state=None):
+    """h (B, S, D) -> (out, new_ssm_state, new_conv_state)."""
+    B, S, D = h.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(h @ p["in_proj"], cfg)
+    if conv_state is not None:      # decode: roll the conv window
+        window = jnp.concatenate([conv_state, xBC], axis=1)   # (B, K-1+S, C)
+        new_conv_state = window[:, -(_CONV_K - 1):]
+        xBC = _causal_conv(window, p["conv_w"])[:, -S:]
+    else:
+        zeros = jnp.zeros((B, _CONV_K - 1, xBC.shape[-1]), xBC.dtype)
+        new_conv_state = jnp.concatenate([zeros, xBC],
+                                         axis=1)[:, -(_CONV_K - 1):]
+        xBC = _causal_conv(xBC, p["conv_w"])
+    x, Bm, Cm = xBC[..., :di], xBC[..., di:di + N], xBC[..., di + N:]
+    xh = x.reshape(B, S, H, P)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"][None, None])          # (B,S,H)
+    A = -jnp.exp(p["A_log"])
+    y, h_fin = mamba2_scan(xh, dtv, A, Bm, Cm, D_skip=p["D_skip"],
+                           h0=state, return_state=True, impl=impl)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["gate_norm"]) * jax.nn.silu(z.astype(jnp.float32)
+                                                  ).astype(y.dtype)
+    return y @ p["out_proj"], h_fin, new_conv_state
+
+
+def forward(params, tokens, cfg: ArchConfig, *, impl: str = "auto",
+            return_cache: bool = False, cache_len: int | None = None,
+            remat: bool = False, return_hidden: bool = False):
+    B, S = tokens.shape
+    e = cfg.shared_attn_every
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    h = shard_act(h, "hidden")
+    rot = Rotary(cfg.hd, cfg.rope_theta)
+    cos, sin = rot.freqs(jnp.arange(S))
+    shared = params["shared"]
+
+    def shared_block(x):
+        if return_cache:
+            a, kv = _attention(rms_norm(x, shared["attn_norm"]), shared,
+                               cfg, cos, sin, impl=impl,
+                               window=cfg.attn_window, return_kv=True)
+        else:
+            a = _attention(rms_norm(x, shared["attn_norm"]), shared, cfg,
+                           cos, sin, impl=impl, window=cfg.attn_window)
+            kv = None
+        x = x + a
+        m, _ = _mlp(rms_norm(x, shared["mlp_norm"]), shared,
+                    _DenseCfg(cfg))
+        return shard_act(x + m, "hidden"), kv
+
+    def body(carry, xs):
+        p_i, idx = xs
+        is_attn = idx % e == 0
+        if return_cache:
+            def yes(x):
+                return shared_block(x)
+            def no(x):
+                KV, hd = cfg.n_kv_heads, cfg.hd
+                zero = (jnp.zeros((B, KV, S, hd), cfg.jdtype),) * 2
+                return x, zero
+            carry, kv = jax.lax.cond(is_attn, yes, no, carry)
+        else:
+            carry = jax.lax.cond(is_attn,
+                                 lambda x: shared_block(x)[0],
+                                 lambda x: x, carry)
+            kv = None
+        mixed, s_fin, c_fin = _mamba_mixer(rms_norm(carry, p_i["norm"]),
+                                           p_i, cfg, impl=impl)
+        carry = shard_act(carry + mixed, "hidden")
+        ys = (kv, s_fin, c_fin) if return_cache else kv
+        return carry, ys
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    idxs = jnp.arange(cfg.n_layers)
+    h, ys = jax.lax.scan(body, h, (params["blocks"], idxs))
+    h = rms_norm(h, params["final_norm"])
+    logits = (None if return_hidden
+              else shard_act(h @ params["lm_head"], "logits"))
+    out = {"logits": logits, "aux": {}}
+    if return_hidden:
+        out["hidden"] = h
+    if return_cache:
+        kvs, ssm_stack, conv_stack = ys
+        # keep only the layers where the shared block actually ran
+        app_layers = jnp.arange(0, cfg.n_layers, e)
+        k_stack = kvs[0][app_layers]
+        v_stack = kvs[1][app_layers]
+        cache = _prefill_cache(cfg, k_stack, v_stack, B, S)
+        cache["ssm"] = ssm_stack
+        cache["conv"] = conv_stack
+        out["cache"] = cache
+    return out
+
+
+class _DenseCfg:
+    """Proxy hiding MoE fields so _mlp runs the dense path."""
+
+    def __init__(self, cfg):
+        object.__setattr__(self, "_c", cfg)
+
+    def __getattr__(self, k):
+        if k == "n_experts":
+            return 0
+        return getattr(self._c, k)
+
+
+def _prefill_cache(cfg, k_stack, v_stack, B, S):
+    """Convert prefill KV (full S) into the rolling window cache."""
+    W = cfg.attn_window or S
+    if S >= W:
+        # last W positions, laid out so slot = pos % W matches.
+        idx = (jnp.arange(S - W, S)) % W
+        kw = jnp.zeros(k_stack.shape[:3] + (W,) + k_stack.shape[4:],
+                       k_stack.dtype)
+        kw = kw.at[:, :, :, idx].set(k_stack[:, :, :, S - W:])
+        vw = jnp.zeros_like(kw).at[:, :, :, idx].set(
+            v_stack[:, :, :, S - W:])
+    else:
+        pad = W - S
+        kw = jnp.pad(k_stack, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        vw = jnp.pad(v_stack, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+    cache = init_cache(cfg, B, W)
+    kw = kw.astype(cfg.kv_jdtype)
+    vw = vw.astype(cfg.kv_jdtype)
+    cache.update({"attn_k": kw, "attn_v": vw,
+                  "pos": jnp.full((B,), S, jnp.int32)})
+    return cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    dt = cfg.jdtype
+    L, di, N = cfg.n_layers, cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    W = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    napp = _n_apps(cfg)
+    kdt = cfg.kv_jdtype
+    return {
+        "ssm": jnp.zeros((L, batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((L, batch, _CONV_K - 1, di + 2 * N), dt),
+        "attn_k": jnp.zeros((napp, batch, KV, W, hd), kdt),
+        "attn_v": jnp.zeros((napp, batch, KV, W, hd), kdt),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig, *,
+                impl: str = "auto"):
+    B = tokens.shape[0]
+    e = cfg.shared_attn_every
+    pos = cache["pos"]
+    h = params["embed"][tokens].astype(cfg.jdtype)
+    rot = Rotary(cfg.hd, cfg.rope_theta)
+    cos, sin = rot.freqs(pos)
+    shared = params["shared"]
+    napp = _n_apps(cfg)
+
+    # Shared attention applications, gathered outside the mamba scan so
+    # each application indexes its own rolling KV slot.
+    kc, vc = cache["attn_k"], cache["attn_v"]
+
+    def shared_apply(x, app_idx, kc, vc):
+        a_in = rms_norm(x, shared["attn_norm"])
+        a, ck, cv = _attention_decode(a_in, shared, cfg, kc[app_idx],
+                                      vc[app_idx], pos, cos, sin, impl=impl)
+        x = x + a
+        m, _ = _mlp(rms_norm(x, shared["mlp_norm"])[:, None], shared,
+                    _DenseCfg(cfg))
+        x = x + m[:, 0]
+        return x, kc.at[app_idx].set(ck), vc.at[app_idx].set(cv)
+
+    def body(carry, xs):
+        p_i, s_i, c_i, idx = xs
+        h_c, kc, vc = carry
+        def yes(args):
+            h_c, kc, vc = args
+            return shared_apply(h_c, idx // e, kc, vc)
+        h_c, kc, vc = jax.lax.cond(idx % e == 0, yes,
+                                   lambda a: a, (h_c, kc, vc))
+        mixed, s_new, c_new = _mamba_mixer(
+            rms_norm(h_c, p_i["norm"])[:, None], p_i, cfg, impl=impl,
+            state=s_i, conv_state=c_i)
+        h_c = h_c + mixed[:, 0]
+        return (h_c, kc, vc), (s_new, c_new)
+
+    idxs = jnp.arange(cfg.n_layers)
+    (h, kc, vc), (ssm_new, conv_new) = jax.lax.scan(
+        body, (h, kc, vc),
+        (params["blocks"], cache["ssm"], cache["conv"], idxs))
+    h = rms_norm(h, params["final_norm"])
+    logits = h @ params["lm_head"]
+    new_cache = {"ssm": ssm_new, "conv": conv_new, "attn_k": kc,
+                 "attn_v": vc, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,143 @@
+"""AdamW with optional 8-bit moment states and global-norm clipping.
+
+States are pytrees matching the params, so they inherit the params'
+PartitionSpecs (ZeRO-style sharding falls out of the FSDP rules: states
+shard wherever the weights shard).  The 8-bit mode stores both moments
+as int8 with per-row f32 scales — the distributed-optimization trick
+that makes the llama4-400b training cell fit 256 chips (EXPERIMENTS.md
+§Dry-run).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "Q8State", "quantize_state", "dequantize_state",
+           "global_norm", "cosine_schedule"]
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# --- 8-bit moment storage ---------------------------------------------------------
+@dataclass(frozen=True)
+class Q8State:
+    q: jax.Array          # int8
+    scale: jax.Array      # f32, per-row (last axis reduced)
+
+
+jax.tree_util.register_pytree_node(
+    Q8State, lambda s: ((s.q, s.scale), None),
+    lambda _, c: Q8State(*c))
+
+
+def quantize_state(x: jax.Array) -> Q8State:
+    if x.ndim == 0:
+        x = x[None]
+        amax = jnp.max(jnp.abs(x))[None]
+    else:
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return Q8State(q, scale)
+
+
+def dequantize_state(s: Q8State) -> jax.Array:
+    return s.q.astype(jnp.float32) * s.scale
+
+
+# --- AdamW ------------------------------------------------------------------------
+@dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float | None = 1.0
+    state_bits: int = 32          # 32 (f32 moments) or 8 (int8 + scales)
+
+    def init(self, params) -> dict:
+        def zero(p):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return quantize_state(z) if self.state_bits == 8 else z
+        return {
+            "m": jax.tree.map(zero, params),
+            # v is stored in sqrt domain when quantized: int8's 1/127
+            # relative floor is far too coarse for v directly (tiny v
+            # -> 0 -> unbounded update); sqrt halves the dynamic range.
+            "v": jax.tree.map(zero, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state, metrics)."""
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        if self.grad_clip is not None:
+            clip = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * clip, grads)
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            if self.state_bits == 8:
+                mf = dequantize_state(m)
+                vf = jnp.square(dequantize_state(v))   # sqrt-domain store
+                if g.ndim == 0:
+                    mf, vf = mf[0], vf[0]
+            else:
+                mf, vf = m, v
+            m_new = b1 * mf + (1 - b1) * g
+            v_new = b2 * vf + (1 - b2) * g * g
+            mhat = m_new / c1
+            vhat = v_new / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.state_bits == 8:
+                # Adafactor-style update clipping: int8 v can underflow
+                # to 0 for small-|g| rows, exploding m/sqrt(v); capping
+                # the update RMS at 1 bounds the damage.
+                rms = jnp.sqrt(jnp.mean(jnp.square(delta)) + 1e-30)
+                delta = delta / jnp.maximum(1.0, rms)
+            if p.ndim >= 2:   # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            if self.state_bits == 8:
+                return (p_new, quantize_state(m_new),
+                        quantize_state(jnp.sqrt(v_new)))
+            return p_new, m_new, v_new
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = {"m": tdef.unflatten([o[1] for o in out]),
+                     "v": tdef.unflatten([o[2] for o in out]),
+                     "step": step}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,9 @@
+from .act_sharding import ActivationRules, activation_rules, shard_act
+from .rules import STRATEGIES, ShardingPlan, make_plan
+from .crosspod import (apply_error_feedback, compress_int8,
+                       compressed_psum, decompress_int8)
+from .overlap import all_gather_matmul, matmul_reduce_scatter
+__all__ = ["ActivationRules", "activation_rules", "shard_act",
+           "STRATEGIES", "ShardingPlan", "make_plan",
+           "apply_error_feedback", "compress_int8", "compressed_psum",
+           "decompress_int8", "all_gather_matmul", "matmul_reduce_scatter"]

@@ -1,0 +1,74 @@
+"""Activation sharding hooks.
+
+Models call ``shard_act(x, "hidden")`` at layer boundaries; a context
+(installed by the launcher) maps logical activation names to
+PartitionSpecs and applies ``with_sharding_constraint``.  Outside any
+context (unit tests, single device) the hook is the identity, so model
+code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["shard_act", "activation_rules", "ActivationRules"]
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("act_rules",
+                                                      default=None)
+
+
+class ActivationRules:
+    """name -> PartitionSpec; unknown names pass through unsharded."""
+
+    def __init__(self, specs: dict[str, P], mesh=None):
+        self.specs = specs
+        self.mesh = mesh
+
+    def constrain(self, x: jax.Array, name: str) -> jax.Array:
+        spec = self.specs.get(name)
+        if spec is None:
+            return x
+        # Trim the spec to the array rank (specs are written for the
+        # canonical rank; reduced ranks drop trailing axes) and drop
+        # entries whose dimension the mesh axis does not divide.
+        sizes = dict(self.mesh.shape) if self.mesh is not None else {}
+        entries = list(spec)[:x.ndim]
+        while len(entries) < x.ndim:
+            entries.append(None)
+        fixed = []
+        for dim, e in zip(x.shape, entries):
+            names = (e,) if isinstance(e, str) else tuple(e or ())
+            total = 1
+            for n in names:
+                total *= sizes.get(n, 1)
+            fixed.append(e if (total and dim % total == 0) else None)
+        return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+@contextlib.contextmanager
+def activation_rules(rules: ActivationRules | None):
+    tok = _CTX.set(rules)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def shard_act(x: jax.Array, name: str) -> jax.Array:
+    rules = _CTX.get()
+    if rules is None:
+        return x
+    return rules.constrain(x, name)
+
+
+def data_shards() -> int:
+    """Product of the batch-carrying mesh axes in the active context
+    (1 outside any mesh) — the block count for hierarchical dispatch."""
+    rules = _CTX.get()
+    if rules is None or rules.mesh is None:
+        return 1
+    sizes = dict(rules.mesh.shape)
+    return sizes.get("pod", 1) * sizes.get("data", 1)

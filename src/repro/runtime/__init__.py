@@ -1,0 +1,2 @@
+from .trainer import Trainer, TrainerConfig
+__all__ = ["Trainer", "TrainerConfig"]

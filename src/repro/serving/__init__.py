@@ -1,0 +1,2 @@
+from .engine import Request, ServingEngine
+__all__ = ["Request", "ServingEngine"]

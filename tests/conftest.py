@@ -1,0 +1,18 @@
+import os
+import sys
+
+# Tests run on the single real CPU device; the dry-run sets its own
+# XLA_FLAGS in a subprocess (tests/test_dryrun_mini.py).  Kernel tests
+# use interpret=True explicitly.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,76 @@
+"""HLO analyzer correctness on single-device programs with known flops
+(scan trip multipliers, dot accounting, fusion internals)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hlo_analysis import analyze_hlo_text
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile()
+
+
+def test_plain_dot_flops():
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    c = _compile(lambda a, b: a @ b, a, b)
+    st = analyze_hlo_text(c.as_text(), 1)
+    assert abs(st.flops - 2 * 256 * 512 * 128) / st.flops < 0.01
+
+
+def test_scan_trip_multiplier():
+    a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def f(a, b):
+        def body(c, _):
+            return c @ b, None
+        out, _ = jax.lax.scan(body, a, None, length=17)
+        return out
+
+    st = analyze_hlo_text(_compile(f, a, b).as_text(), 1)
+    expect = 17 * 2 * 128 ** 3
+    assert abs(st.flops - expect) / expect < 0.01
+    assert 17.0 in st.while_trips
+
+
+def test_nested_scan_multipliers():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(a, b):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ b, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        out, _ = jax.lax.scan(outer, a, None, length=5)
+        return out
+
+    st = analyze_hlo_text(_compile(f, a, b).as_text(), 1)
+    expect = 15 * 2 * 64 ** 3
+    assert abs(st.flops - expect) / expect < 0.01
+
+
+def test_batched_dot_general():
+    a = jax.ShapeDtypeStruct((4, 8, 32, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 8, 16, 24), jnp.float32)
+    c = _compile(lambda a, b: jnp.einsum("bhij,bhjk->bhik", a, b), a, b)
+    st = analyze_hlo_text(c.as_text(), 1)
+    expect = 2 * 4 * 8 * 32 * 16 * 24
+    assert abs(st.flops - expect) / expect < 0.01
+
+
+def test_hbm_bytes_nonzero_and_scaled_by_trips():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c * 2.0 + 1.0, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    st = analyze_hlo_text(_compile(f, x).as_text(), 1)
+    # each iteration touches >= in+out = 8MB; x10 trips
+    assert st.hbm_bytes >= 10 * 2 * 1024 * 1024 * 4 * 0.9

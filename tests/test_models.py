@@ -1,0 +1,145 @@
+"""Per-arch smoke tests (reduced configs) + prefill/decode consistency.
+
+Every assigned architecture instantiates its REDUCED same-family config
+and runs one forward + one train step on CPU, asserting output shapes
+and no NaNs — the deliverable-(f) smoke contract.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNN_REGISTRY, REGISTRY, get_config
+from repro.models import (cnn, cross_entropy_loss, get_model, init_params)
+from repro.models.losses import chunked_cross_entropy
+
+ARCHS = sorted(REGISTRY)
+
+
+def _extra(cfg, api, B):
+    kw = {}
+    if api.extra_input == "vision_embeds":
+        kw["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(9), (B, cfg.n_vision_tokens, cfg.d_model),
+            jnp.float32)
+    if api.extra_input == "encoder_frames":
+        kw["encoder_frames"] = jax.random.normal(
+            jax.random.PRNGKey(9), (B, cfg.encoder_seq, cfg.d_model),
+            jnp.float32)
+    return kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).smoke()
+    api = get_model(cfg)
+    params = init_params(api.param_defs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    kw = _extra(cfg, api, B)
+    out = api.forward(params, toks, cfg, impl="reference", **kw)
+    assert out["logits"].shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(out["logits"]).any()), f"{arch}: NaN logits"
+
+    def loss_fn(p):
+        o = api.forward(p, toks, cfg, impl="reference", **kw)
+        return cross_entropy_loss(o["logits"][:, :-1], toks[:, 1:])
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, f"{arch}: degenerate grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    cfg = get_config(arch).smoke()
+    if cfg.n_experts:       # capacity drops are shape-dependent
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    api = get_model(cfg)
+    params = init_params(api.param_defs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    kw = _extra(cfg, api, B)
+    full = api.forward(params, toks, cfg, impl="reference", **kw)["logits"]
+    fkw = dict(kw)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        fkw["cache_len"] = 32
+    pre = api.forward(params, toks[:, :S - 4], cfg, impl="reference",
+                      return_cache=True, **fkw)
+    cache = pre["cache"]
+    errs = [float(jnp.abs(pre["logits"][:, -1] - full[:, S - 5]).max())]
+    for t in range(S - 4, S):
+        lg, cache = api.decode_step(params, cache, toks[:, t], cfg,
+                                    impl="reference")
+        errs.append(float(jnp.abs(lg - full[:, t]).max()))
+    assert max(errs) < 2e-2, f"{arch}: prefill/decode drift {errs}"
+
+
+@pytest.mark.parametrize("arch", ["zamba2-7b", "rwkv6-7b"])
+def test_long_context_archs_have_o1_or_windowed_state(arch):
+    """The long_500k-runnable archs must have caches independent of (or
+    bounded in) sequence length."""
+    cfg = get_config(arch).smoke()
+    api = get_model(cfg)
+    small = api.init_cache(cfg, 2, 64)
+    large = api.init_cache(cfg, 2, 4096)
+    for k in small:
+        if k == "pos":
+            continue
+        ratio = np.prod(large[k].shape) / np.prod(small[k].shape)
+        assert ratio <= (cfg.attn_window or 64) / 16 or ratio == 1.0, \
+            f"{arch}.{k} grows with context: {small[k].shape} -> {large[k].shape}"
+
+
+def test_moe_aux_stats_present():
+    cfg = get_config("granite-moe-1b-a400m").smoke()
+    api = get_model(cfg)
+    params = init_params(api.param_defs(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    out = api.forward(params, toks, cfg, impl="reference")
+    assert "lb_loss" in out["aux"] and "imbalance_pct" in out["aux"]
+    assert float(out["aux"]["lb_loss"]) > 0
+
+
+def test_chunked_ce_matches_full():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    h = jax.random.normal(ks[0], (2, 24, 32), jnp.float32)
+    w = jax.random.normal(ks[1], (32, 100), jnp.float32)
+    labels = jax.random.randint(ks[2], (2, 24), 0, 100)
+    full = cross_entropy_loss(h @ w, labels)
+    chunked = chunked_cross_entropy(h, w, labels, chunk=8)
+    np.testing.assert_allclose(float(chunked), float(full), rtol=1e-5)
+    # gradients agree too
+    g1 = jax.grad(lambda h: cross_entropy_loss(h @ w, labels))(h)
+    g2 = jax.grad(lambda h: chunked_cross_entropy(h, w, labels,
+                                                  chunk=8))(h)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(CNN_REGISTRY))
+def test_cnn_forward_and_graph(name):
+    full = CNN_REGISTRY[name]
+    # reduced config: 32px input, few channels — same topology
+    cfg = dataclasses.replace(full, input_hw=224)
+    params_defs = cnn.param_defs(cfg)
+    # smoke on a scaled-down input via the graph only; run fwd on the
+    # real topology with batch 1 at reduced dtype for speed
+    g = cnn.to_graph(cfg, batch=1)
+    assert g.total_flops() > 0
+    if name == "alexnet-owt":       # fwd-run the smallest one end-to-end
+        params = init_params(params_defs, jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 224, 224, 3),
+                              jnp.float32)
+        logits = cnn.forward(params, x, cfg, impl="reference")
+        assert logits.shape == (1, 1000)
+        assert not bool(jnp.isnan(logits).any())
+
+
+def test_resnet18_graph_residual_count():
+    g = cnn.to_graph(CNN_REGISTRY["resnet18"], batch=1)
+    sinks = [n for n in g if n.bypass_of]
+    assert len(sinks) == 8          # 2 blocks x 4 stages

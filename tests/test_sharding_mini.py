@@ -1,0 +1,64 @@
+"""Mini dry-run: lower+compile every family's three step kinds on an
+8-host-device mesh, in a subprocess (XLA device-count flags must be set
+before jax initializes, which pytest's main process already did)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from repro.configs import get_config, ShapeSpec
+from repro.core.hw import MeshDescriptor
+from repro.parallel.rules import make_plan
+from repro.launch.mesh import make_mesh_from_descriptor
+from repro.launch.steps import build_step
+from repro.optim import AdamW
+from repro.core.hlo_analysis import analyze_hlo_text
+
+results = {}
+for pod in (False, True):
+    desc = (MeshDescriptor((2, 2, 2), ("pod", "data", "model")) if pod
+            else MeshDescriptor((2, 4), ("data", "model")))
+    mesh = make_mesh_from_descriptor(desc)
+    for arch in %(archs)s:
+        cfg = get_config(arch).smoke()
+        for shape in [ShapeSpec("t", 64, 8, "train"),
+                      ShapeSpec("p", 64, 8, "prefill"),
+                      ShapeSpec("d", 64, 8, "decode")]:
+            with mesh:
+                plan = make_plan(cfg, shape, desc, "auto")
+                b = build_step(cfg, shape, plan, mesh, optimizer=AdamW())
+                compiled = b.fn.lower(*b.args).compile()
+                st = analyze_hlo_text(compiled.as_text(), desc.n_chips)
+            key = f"{arch}|{shape.kind}|{'multi' if pod else 'single'}"
+            results[key] = {"flops": st.flops, "coll": st.coll_counts}
+print("RESULTS_JSON:" + json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_mini_dryrun_all_families_compile():
+    archs = ["smollm-360m", "granite-moe-1b-a400m", "rwkv6-7b",
+             "zamba2-7b", "whisper-base", "llama-3.2-vision-11b",
+             "llama4-maverick-400b-a17b"]
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT % {"archs": repr(archs)}],
+        capture_output=True, text=True, env=env, timeout=1800)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULTS_JSON:")]
+    assert line, proc.stdout[-2000:]
+    results = json.loads(line[0][len("RESULTS_JSON:"):])
+    # every cell compiled and did real work
+    assert len(results) == len(archs) * 3 * 2
+    for key, r in results.items():
+        assert r["flops"] > 0, f"{key}: no compute found"

@@ -1,0 +1,210 @@
+"""Substrate behaviour: data, checkpointing, trainer fault tolerance,
+optimizer, quantization, compression."""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint)
+from repro.core.quant import (Q8_8, Q5_11, dequantize, qmatmul, quantize,
+                              validate_layerwise)
+from repro.data import SyntheticLM
+from repro.optim import AdamW, dequantize_state, quantize_state
+from repro.parallel.crosspod import (apply_error_feedback, compress_int8,
+                                     decompress_int8)
+
+
+# --- data --------------------------------------------------------------------------
+def test_synthetic_data_deterministic_and_host_sharded():
+    src = SyntheticLM(vocab=100, seq_len=16, global_batch=8, seed=3)
+    a = src.batch_at(5)
+    b = src.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = src.batch_at(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # two hosts each get half the batch, disjoint streams
+    h0 = src.batch_at(5, host_id=0, n_hosts=2)
+    h1 = src.batch_at(5, host_id=1, n_hosts=2)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_packed_file_dataset(tmp_path):
+    from repro.data import PackedFileDataset
+    toks = np.arange(1000, dtype=np.uint16)
+    path = tmp_path / "tokens.bin"
+    toks.tofile(path)
+    ds = PackedFileDataset(str(path), vocab=5000, seq_len=16,
+                           global_batch=4)
+    b = ds.batch_at(0)
+    assert b["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# --- checkpoint --------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    d = str(tmp_path)
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_checkpoint(d, 10, tree)
+    save_checkpoint(d, 20, tree)
+    assert latest_step(d) == 20
+    restored, step = restore_checkpoint(d, tree)
+    assert step == 20
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == np.asarray(tree["b"]["c"]).dtype
+    # an uncommitted (marker-less) directory is invisible
+    fake = os.path.join(d, "step_00000099")
+    os.makedirs(os.path.join(fake, "arrays"))
+    assert latest_step(d) == 20
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    d = str(tmp_path)
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, tree, keep=2)
+    steps = sorted(int(n[5:]) for n in os.listdir(d)
+                   if n.startswith("step_"))
+    assert steps == [4, 5]
+
+
+# --- trainer fault tolerance ---------------------------------------------------------
+def _tiny_trainer(tmp_path, total_steps, straggler=None):
+    from repro.runtime import Trainer, TrainerConfig
+    import time as _t
+    w0 = jnp.zeros((4,))
+
+    calls = {"n": 0}
+
+    def step(params, opt_state, batch):
+        calls["n"] += 1
+        if straggler is not None and calls["n"] == straggler:
+            _t.sleep(0.35)
+        p = params - 0.1 * (params - jnp.asarray(batch["tokens"][0, :4],
+                                                 jnp.float32))
+        return p, opt_state, {"loss": jnp.sum(p ** 2)}
+
+    data = SyntheticLM(vocab=10, seq_len=8, global_batch=2, seed=0)
+    tr = Trainer(step, data, TrainerConfig(
+        total_steps=total_steps, ckpt_every=5, ckpt_dir=str(tmp_path),
+        log_every=1, straggler_factor=3.0))
+    return tr, w0
+
+
+def test_trainer_checkpoint_restart(tmp_path):
+    tr, w0 = _tiny_trainer(tmp_path, 7)
+    p1, _, s1 = tr.run(w0, {})
+    assert s1 == 7
+    assert latest_step(str(tmp_path)) == 7        # final forced ckpt
+    # restart continues (not restarts) the run
+    tr2, _ = _tiny_trainer(tmp_path, 12)
+    p2, _, s2 = tr2.run(w0, {})
+    assert s2 == 12
+    assert tr2.metrics_history[0]["step"] >= 7
+
+
+def test_trainer_straggler_detection(tmp_path):
+    tr, w0 = _tiny_trainer(tmp_path, 20, straggler=15)
+    tr.run(w0, {})
+    kinds = [a["kind"] for a in tr.anomalies]
+    assert "straggler" in kinds
+
+
+def test_trainer_nan_abort(tmp_path):
+    from repro.runtime import Trainer, TrainerConfig
+
+    def bad_step(params, opt_state, batch):
+        return params, opt_state, {"loss": jnp.float32(np.nan)}
+
+    data = SyntheticLM(vocab=10, seq_len=8, global_batch=2, seed=0)
+    tr = Trainer(bad_step, data, TrainerConfig(
+        total_steps=50, ckpt_every=100, ckpt_dir=str(tmp_path),
+        max_nan_steps=3))
+    with pytest.raises(FloatingPointError):
+        tr.run(jnp.zeros(2), {})
+
+
+# --- optimizer -----------------------------------------------------------------------
+def test_adamw_8bit_tracks_fp32():
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (32, 64)) * 0.1,
+              "b": jnp.zeros((64,))}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (32, 64)),
+             "b": jnp.ones((64,)) * 0.1}
+    p32, p8 = params, params
+    o32 = AdamW(lr=1e-2, state_bits=32)
+    o8 = AdamW(lr=1e-2, state_bits=8)
+    s32, s8 = o32.init(p32), o8.init(p8)
+    for _ in range(20):
+        p32, s32, _ = o32.update(grads, s32, p32)
+        p8, s8, _ = o8.update(grads, s8, p8)
+    diff = float(jnp.abs(p32["w"] - p8["w"]).max())
+    scale = float(jnp.abs(p32["w"]).max())
+    assert diff / scale < 0.25, f"8-bit diverged: {diff/scale}"
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(-100, 100), min_size=4, max_size=64))
+def test_q8state_roundtrip_bounded(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q = quantize_state(x)
+    err = jnp.abs(dequantize_state(q).reshape(x.shape) - x)
+    bound = jnp.maximum(jnp.abs(x).max() / 127.0, 1e-6)
+    assert float(err.max()) <= float(bound) * 0.5 + 1e-6
+
+
+# --- fixed point (paper T6) -----------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100), min_size=1, max_size=32))
+def test_q88_quantize_saturates_and_bounds(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q = quantize(x, Q8_8)
+    assert q.dtype == jnp.int16
+    deq = dequantize(q, Q8_8)
+    in_range = jnp.abs(x) <= 127.0
+    err = jnp.abs(deq - x)
+    assert float(jnp.where(in_range, err, 0).max()) <= 0.5 / Q8_8.scale + 1e-6
+
+
+def test_qmatmul_matches_float_within_lsb():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    a = jax.random.uniform(ks[0], (16, 32), minval=-2, maxval=2)
+    b = jax.random.uniform(ks[1], (32, 8), minval=-1, maxval=1)
+    bias = jax.random.uniform(ks[2], (8,), minval=-1, maxval=1)
+    out_q = qmatmul(quantize(a), quantize(b), bias_q=quantize(bias),
+                    relu=True)
+    ref = jnp.maximum(a @ b + bias, 0)
+    rep = validate_layerwise([ref], [out_q])
+    # error grows with contraction length; 32-length dot stays < 1 LSB/el
+    assert rep[0]["rms_err_lsb"] < 32
+
+
+def test_q511_more_precise_than_q88_for_small_values():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 0.5
+    e88 = float(jnp.abs(dequantize(quantize(x, Q8_8), Q8_8) - x).mean())
+    e511 = float(jnp.abs(dequantize(quantize(x, Q5_11), Q5_11) - x).mean())
+    assert e511 < e88      # the paper's 89%/88% vs 84% top-5 ordering
+
+
+# --- compression ----------------------------------------------------------------------
+def test_int8_compression_error_feedback_unbiased():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (8, 128)) * 0.01
+    err = jnp.zeros_like(x)
+    acc_true = jnp.zeros_like(x)
+    acc_comp = jnp.zeros_like(x)
+    for i in range(50):
+        q, scale, err = apply_error_feedback(x, err)
+        acc_comp = acc_comp + decompress_int8(q, scale).reshape(x.shape)
+        acc_true = acc_true + x
+    rel = float(jnp.abs(acc_comp - acc_true).max()
+                / jnp.abs(acc_true).max())
+    assert rel < 0.02, f"error feedback biased: {rel}"
