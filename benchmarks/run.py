@@ -11,19 +11,27 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark module names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: modeled suites + shortened "
+                         "wallclock runs (CPU interpret mode)")
     args = ap.parse_args()
 
     from . import (fig4_loop_rearrangement, kernels_wallclock,
-                   quant_profile, table1_auto_vs_hand, table2_models,
-                   table3_load_balance)
+                   quant_profile, strip_storage, table1_auto_vs_hand,
+                   table2_models, table3_load_balance)
     suites = [
         ("table1", table1_auto_vs_hand),
         ("table2", table2_models),
         ("fig4", fig4_loop_rearrangement),
         ("table3", table3_load_balance),
+        ("strips", strip_storage),
         ("quant", quant_profile),
         ("kernels", kernels_wallclock),
     ]
+    if args.smoke:
+        strip_storage.SMOKE = True
+        # drop the wallclock-heavy suites; keep every modeled one
+        suites = [s for s in suites if s[0] not in ("kernels", "quant")]
     print("name,us_per_call,derived")
     for name, mod in suites:
         if args.only and args.only not in name:

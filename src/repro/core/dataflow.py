@@ -38,6 +38,8 @@ from .tiling import (MatmulTiling, matmul_vmem_bytes, pow2_candidates,
 __all__ = [
     "Dataflow",
     "matmul_traffic",
+    "conv_strip_traffic",
+    "choose_conv_dataflow",
     "DataflowDecision",
     "choose_matmul_dataflow",
     "DistStrategy",
@@ -69,6 +71,49 @@ def matmul_traffic(M: int, K: int, N: int, dtype_bytes: int,
     if dataflow is Dataflow.WEIGHTS_RESIDENT:
         return math.ceil(N / bn) * a + b + c
     return math.ceil(N / bn) * a + math.ceil(M / bm) * b + c
+
+
+def conv_strip_traffic(maps_bytes: float, weights_bytes: float,
+                       out_bytes: float, *, n_map_tiles: int,
+                       n_kernel_tiles: int, overlap_frac: float,
+                       strip_storage: str = "materialized"
+                       ) -> tuple[float, float]:
+    """(kloop, mloop) HBM bytes for a row-strip conv under T3.
+
+    The single source of truth for the strip-grid loop-order formulas —
+    both the schedule compiler (core/schedule.py) and the kernel wrapper
+    (kernels/conv2d/ops.py) call this; they must never drift apart.
+
+    ``strip_storage`` is the compiler's overlap decision (paper vs TPU):
+
+    * ``"materialized"`` — Snowflake's scheme: halo-augmented strips are
+      duplicated in DRAM so the DMA engine issues single-burst loads.
+      Every maps pass re-reads the ``(1 + overlap_frac)`` copy.
+    * ``"virtual"`` — zero-copy: the kernel gathers each strip from the
+      un-duplicated maps with an in-kernel dynamic slice, so maps move
+      exactly once per pass and the overlap term vanishes.
+    """
+    dup = 1.0 + (overlap_frac if strip_storage == "materialized" else 0.0)
+    kloop = maps_bytes * dup + n_map_tiles * weights_bytes + out_bytes
+    mloop = n_kernel_tiles * maps_bytes * dup + weights_bytes + out_bytes
+    return kloop, mloop
+
+
+def choose_conv_dataflow(maps_bytes: float, weights_bytes: float,
+                         out_bytes: float, *, n_map_tiles: int,
+                         n_kernel_tiles: int, overlap_frac: float,
+                         strip_storage: str = "materialized"
+                         ) -> tuple[Dataflow, float, dict[str, float]]:
+    """Pick the cheaper strip-grid loop order; returns
+    (dataflow, traffic_bytes, {"kloop": ..., "mloop": ...})."""
+    kloop, mloop = conv_strip_traffic(
+        maps_bytes, weights_bytes, out_bytes, n_map_tiles=n_map_tiles,
+        n_kernel_tiles=n_kernel_tiles, overlap_frac=overlap_frac,
+        strip_storage=strip_storage)
+    alts = {"kloop": kloop, "mloop": mloop}
+    if kloop <= mloop:
+        return Dataflow.MAPS_RESIDENT, kloop, alts
+    return Dataflow.WEIGHTS_RESIDENT, mloop, alts
 
 
 @dataclass(frozen=True)

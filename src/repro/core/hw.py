@@ -58,6 +58,12 @@ class HardwareModel:
     weights_buffer_bytes: int = 0
     # Load/store streams (the paper's 4 load units; informs chunking).
     load_units: int = 4
+    # Whether the memory system supports random (strided, in-buffer)
+    # access to a resident maps block.  Snowflake's DMA engine issues
+    # contiguous single-burst loads only, so halo overlap must be
+    # duplicated in DRAM (materialized strips); TPUs can gather
+    # virtual strips out of VMEM for free.
+    random_buffer_access: bool = True
     # Vector-instruction latency model (paper §5.2: bookkeeping must hide
     # under MAC latency).  Expressed as FLOPs one "instruction slot" of
     # epilogue work costs relative to the main loop.
@@ -130,6 +136,8 @@ SNOWFLAKE = HardwareModel(
     weights_buffer_bytes=4 * 8 * 1024,
     load_units=4,                  # the paper's 4 load/store units
     epilogue_slot_flops=2.0,
+    random_buffer_access=False,    # contiguous single-burst DMA only:
+                                   # halo strips must be materialized
 )
 
 

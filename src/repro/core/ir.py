@@ -26,6 +26,7 @@ __all__ = [
     "ModelGraph",
     "matmul_node",
     "conv_node",
+    "pool_out",
 ]
 
 
@@ -147,6 +148,13 @@ class LayerNode:
 
 def _conv_out(size: int, k: int, stride: int, pad: int) -> int:
     return (size + 2 * pad - k) // stride + 1
+
+
+def pool_out(size: int, window: int, stride: int, pad: int = 0) -> int:
+    """Pooled output extent — one definition shared by the scheduler and
+    the conv2d fused-pool path (same formula as _conv_out, named for the
+    call sites that mean pooling)."""
+    return (size + 2 * pad - window) // stride + 1
 
 
 # --- graph --------------------------------------------------------------------

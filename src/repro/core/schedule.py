@@ -26,9 +26,10 @@ from dataclasses import dataclass, field
 
 from .balance import balance_transfers, percent_imbalance
 from .dataflow import (Dataflow, DataflowDecision, DistDecision,
-                       choose_dist_strategy, choose_matmul_dataflow)
+                       choose_conv_dataflow, choose_dist_strategy,
+                       choose_matmul_dataflow)
 from .hw import HardwareModel, MeshDescriptor, TPU_V5E
-from .ir import DepLabel, LayerKind, LayerNode, ModelGraph
+from .ir import DepLabel, LayerKind, LayerNode, ModelGraph, _conv_out, pool_out
 from .tiling import ConvTiling, select_conv_row_strips
 
 __all__ = ["LayerSchedule", "ModelSchedule", "compile_model"]
@@ -142,18 +143,36 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
                                 d["kh"], d["kw"], d["stride"], d["pad"],
                                 node.dtype_bytes, hw,
                                 batch=d.get("batch", 1))
+    # Strip storage is a compiler decision (overlap duplication vs
+    # in-kernel re-fetch); the paper-faithful mode pins Snowflake's
+    # DMA-mandated materialization.
+    storage = "materialized" if paper_faithful else ct.strip_storage
     ob = node.operand_bytes()
-    # Mloop/Kloop on the strip grid: maps-resident repeats kernel bytes per
-    # maps tile; weights-resident repeats maps (incl. halo overlap).
-    kloop = (ob["maps"] * (1 + ct.overlap_frac)
-             + ct.n_map_tiles * ob["weights"] + ob["out"])
-    mloop = (ct.n_kernel_tiles * ob["maps"] * (1 + ct.overlap_frac)
-             + ob["weights"] + ob["out"])
-    if kloop <= mloop:
-        df, traffic = Dataflow.MAPS_RESIDENT, kloop
-    else:
-        df, traffic = Dataflow.WEIGHTS_RESIDENT, mloop
+    # The pool only actually fuses on the zero-copy path (ops.py runs a
+    # separate reference pool when strips are materialized), so model it
+    # only there — the pool node keeps its own traffic otherwise.
+    fp = node.meta.get("fused_pool") if storage == "virtual" else None
+    if fp:
+        # The following maxpool runs in this conv's epilogue: the conv
+        # output is pooled before writeback, shrinking the out stream.
+        oh = pool_out(_conv_out(d["H"], d["kh"], d["stride"], d["pad"]),
+                      fp["window"], fp["stride"], fp.get("pad", 0))
+        ow = pool_out(_conv_out(d["W"], d["kw"], d["stride"], d["pad"]),
+                      fp["window"], fp["stride"], fp.get("pad", 0))
+        ob["out"] = d.get("batch", 1) * oh * ow * d["C_out"] * node.dtype_bytes
+    # Mloop/Kloop on the strip grid — shared formulas (core/dataflow.py):
+    # virtual strips stop charging the (1 + overlap_frac) duplication.
+    df, traffic, alts = choose_conv_dataflow(
+        ob["maps"], ob["weights"], ob["out"],
+        n_map_tiles=ct.n_map_tiles, n_kernel_tiles=ct.n_kernel_tiles,
+        overlap_frac=ct.overlap_frac, strip_storage=storage)
+    kloop, mloop = alts["kloop"], alts["mloop"]
     slots = _epilogue_slots(node)
+    if fp:
+        # The fused pool adds window^2 compares per pooled element —
+        # ~window^2/stride^2 extra bookkeeping slots per conv output
+        # element that must hide under the MAC latency.
+        slots += fp["window"] ** 2 / float(fp["stride"] ** 2)
     trace = d["C_in"] * d["kh"] * d["kw"]     # the paper's "trace" length
     ratio = (slots * hw.epilogue_slot_flops) / max(2.0 * trace, 1.0)
     flops = node.flops()
@@ -165,22 +184,36 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
     if hw.epilogue_slot_flops:
         mac_cycles = max(trace / hw.mxu_dim, 1.0)
         bookkeeping = (6.0 + (6.0 if node.dep is DepLabel.RESIDUAL_SINK
-                              else 0.0) + (2.0 if node.fused_bias else 0.0))
+                              else 0.0) + (2.0 if node.fused_bias else 0.0)
+                       + (float(fp["window"] ** 2) if fp else 0.0))
         stall = max(1.0, bookkeeping / mac_cycles)
     t_exec = max(hw.compute_time(flops) * stall, hw.memory_time(traffic))
+    notes = {"kloop": kloop, "mloop": mloop, "stall": stall,
+             "strip_storage": storage}
+    if fp:
+        notes["fused_pool"] = fp
     return LayerSchedule(
         name=node.name, kind=node.kind, dataflow=df, block=None,
         conv_tiling=ct, fuse_bias=node.fused_bias,
         fuse_activation=node.fused_activation,
         fuse_bypass=node.dep is DepLabel.RESIDUAL_SINK, dist=None,
         traffic_bytes=traffic, flops=flops, bookkeeping_ratio=ratio,
-        exec_time_s=t_exec,
-        notes={"kloop": kloop, "mloop": mloop, "stall": stall})
+        exec_time_s=t_exec, notes=notes)
 
 
-def _schedule_other(node: LayerNode, hw: HardwareModel) -> LayerSchedule:
+def _schedule_other(node: LayerNode, hw: HardwareModel, *,
+                    fused: bool = False) -> LayerSchedule:
     flops = node.flops()
     traffic = node.min_bytes()
+    if fused:
+        # This layer (a maxpool) runs inside its producer conv's
+        # epilogue: no separate kernel launch, no HBM round trip.
+        return LayerSchedule(
+            name=node.name, kind=node.kind, dataflow=None, block=None,
+            conv_tiling=None, fuse_bias=False, fuse_activation=None,
+            fuse_bypass=False, dist=None, traffic_bytes=0.0, flops=flops,
+            bookkeeping_ratio=0.0, exec_time_s=0.0,
+            notes={"fused_into": node.meta["fused_into"]})
     return LayerSchedule(
         name=node.name, kind=node.kind, dataflow=None, block=None,
         conv_tiling=None, fuse_bias=node.fused_bias,
@@ -231,7 +264,13 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
         elif node.kind is LayerKind.CONV2D:
             layers.append(_schedule_conv(node, hw, paper_faithful))
         else:
-            layers.append(_schedule_other(node, hw))
+            # A pool is only free if its producer conv actually fused
+            # it (recorded in the conv's schedule notes — requires the
+            # zero-copy path; materialized strips pool separately).
+            src = node.meta.get("fused_into")
+            fused = any(ls.name == src and "fused_pool" in ls.notes
+                        for ls in layers) if src else False
+            layers.append(_schedule_other(node, hw, fused=fused))
 
     # T4: balance each layer's tile transfers across load units and report
     # the residual imbalance (drives the Table 3 reproduction).

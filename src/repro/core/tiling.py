@@ -17,6 +17,7 @@ Key constraints carried over from the paper:
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
@@ -30,6 +31,7 @@ __all__ = [
     "select_matmul_tiles",
     "ConvTiling",
     "select_conv_row_strips",
+    "virtual_strips_fit",
 ]
 
 
@@ -141,10 +143,40 @@ class ConvTiling:
     n_map_tiles: int
     n_kernel_tiles: int
     overlap_frac: float      # fraction of maps bytes re-loaded due to halos
+    # Compiler decision: where the halo overlap lives.  "materialized"
+    # duplicates augmented strips in HBM (Snowflake's single-burst-DMA
+    # constraint); "virtual" keeps the whole per-image maps resident in
+    # VMEM and gathers strips in-kernel — zero extra HBM copies.  Chosen
+    # by a VMEM-residency test in select_conv_row_strips.
+    strip_storage: str = "materialized"
 
     @property
     def grid(self) -> tuple[int, int]:
         return (self.n_map_tiles, self.n_kernel_tiles)
+
+
+def virtual_strips_fit(H: int, W: int, C_in: int, kh: int, stride: int,
+                       pad: int, dtype_bytes: int, hw: HardwareModel,
+                       kernel_tile_bytes: int, out_tile_bytes: int) -> bool:
+    """VMEM-residency test for zero-copy (virtual) strips.
+
+    Virtual strips hand the kernel the *whole* padded per-image maps as
+    one block (double buffered across the batch grid dimension) and
+    slice strips out in-kernel, so the hardware must support random
+    access into the resident buffer, and the full padded plane — not
+    just one strip — must fit the maps budget alongside the streamed
+    kernel tile and the f32 output accumulator.
+    """
+    if not hw.random_buffer_access:
+        return False               # contiguous-DMA hardware (Snowflake)
+    budget = hw.vmem_budget()
+    mcap = hw.maps_buffer_bytes or budget
+    Hp = H + 2 * pad + max(0, kh - stride)     # + worst-case bottom fill
+    Wp = W + 2 * pad
+    maps_bytes = Hp * Wp * C_in * dtype_bytes * 2      # dbl buf
+    if maps_bytes > mcap:
+        return False
+    return maps_bytes + kernel_tile_bytes + out_tile_bytes <= budget
 
 
 def select_conv_row_strips(H: int, W: int, C_in: int, C_out: int, kh: int,
@@ -208,4 +240,15 @@ def select_conv_row_strips(H: int, W: int, C_in: int, C_out: int, kh: int,
                           in_rows * W * C_in * dtype_bytes * 2
                           + kernel_bytes_each * 2 + ow * 4,
                           oh * batch, C_out, 0.0)
+    # Strip-storage decision (overlap re-fetch vs duplication): go
+    # zero-copy when the whole padded per-image maps is VMEM-resident.
+    ker_tile = best.kernels_per_tile * kernel_bytes_each * 2
+    out_tile = best.out_rows * ow * best.kernels_per_tile * 4
+    if virtual_strips_fit(H, W, C_in, kh, stride, pad, dtype_bytes, hw,
+                          ker_tile, out_tile):
+        Hp = H + 2 * pad + max(0, kh - stride)
+        Wp = W + 2 * pad
+        best = dataclasses.replace(
+            best, strip_storage="virtual",
+            vmem_bytes=Hp * Wp * C_in * dtype_bytes * 2 + ker_tile + out_tile)
     return best

@@ -1,4 +1,5 @@
 from .ops import conv2d
 from .ref import conv2d_ref, maxpool2d_ref, avgpool2d_ref
-from .kernel import conv2d_strips_pallas
-__all__ = ["conv2d", "conv2d_ref", "maxpool2d_ref", "avgpool2d_ref", "conv2d_strips_pallas"]
+from .kernel import conv2d_strips_pallas, conv2d_virtual_pallas
+__all__ = ["conv2d", "conv2d_ref", "maxpool2d_ref", "avgpool2d_ref",
+           "conv2d_strips_pallas", "conv2d_virtual_pallas"]

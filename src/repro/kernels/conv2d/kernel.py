@@ -1,22 +1,48 @@
-"""Row-strip implicit-GEMM conv2d Pallas kernel — the paper's own
-workload, scheduled the paper's way.
+"""Row-strip implicit-GEMM conv2d Pallas kernels — the paper's own
+workload, scheduled the paper's way, with the overlap-storage decision
+(duplicate vs re-fetch) lifted to a compiler choice.
 
-Maps are tiled at *output-row-strip* granularity (T2): ops.py
-materializes halo-augmented input strips in HBM (the paper stores
-overlapped regions in DRAM for single-DMA loads), and the kernel
-consumes one (in_rows, W, Cin) strip per grid row.  Kernels (weights)
-are tiled at whole-kernel granularity, ``kpt`` output channels per tile.
+Maps are tiled at *output-row-strip* granularity (T2).  Two kernels
+realize the same schedule with different halo storage:
 
-The Mloop/Kloop choice (T3) is the grid order:
-  * MAPS_RESIDENT  (Kloop): grid (strip, ktile) — the strip block index
-    ignores ktile, so the strip stays resident while kernel tiles stream.
-  * WEIGHTS_RESIDENT (Mloop): grid (ktile, strip) — the weight tile
-    stays resident while strips stream.
+* ``conv2d_virtual_pallas`` — **zero-copy (default)**: the kernel
+  receives the whole padded per-image maps as one VMEM-resident block
+  (grid-blocked only on batch / output channels) and gathers each
+  output-row strip *inside* the kernel body with a dynamic slice keyed
+  off the strip program id.  Strip row offsets are affine
+  (``s * out_rows * stride``); when a caller needs non-affine offsets
+  (ragged strip tables) it passes ``row_starts`` and the offsets are
+  scalar-prefetched via ``PrefetchScalarGridSpec`` so the DMA address
+  is known before the body runs.  No halo byte is ever duplicated in
+  HBM.  An optional fused maxpool epilogue (``pool=(window, stride,
+  pad)``) pools the conv output before writeback — the strip computes
+  the few extra conv rows each overlapping pool window needs, trading
+  a sliver of recompute for the pool layer's entire HBM round trip.
+
+* ``conv2d_strips_pallas`` — the paper-faithful baseline: ops.py
+  materializes halo-augmented input strips in HBM (Snowflake stores
+  overlapped regions in DRAM because its DMA engine needs contiguous
+  single-burst loads) and the kernel consumes one ``(in_rows, W, Cin)``
+  strip per grid row.  Kept for the strip-storage benchmark and for
+  hardware whose DMA truly requires contiguous strips.
+
+Kernels (weights) are tiled at whole-kernel granularity, ``kpt`` output
+channels per tile.  The Mloop/Kloop choice (T3) is the grid order:
+
+* MAPS_RESIDENT  (Kloop): strip/batch block index ignores the kernel
+  tile, so the maps block stays resident while kernel tiles stream.
+* WEIGHTS_RESIDENT (Mloop): the weight tile stays resident while
+  strips stream.
+
+Every grid dimension writes a disjoint output block and carries no
+cross-iteration state, so all dimensions are declared ``"parallel"``
+in ``compiler_params`` — Mosaic is free to double-buffer and reorder.
 
 The conv itself is implicit GEMM: for each (dy, dx) tap, a strided
 patch of the strip is contracted with w[dy, dx] on the MXU and
-accumulated in f32.  Epilogue fuses bias + ReLU + residual bypass (the
-paper's VMOV-on-writeback for ResNet).
+accumulated in f32.  Epilogue fuses bias + activation + residual
+bypass (the paper's VMOV-on-writeback for ResNet), then the optional
+maxpool.
 """
 from __future__ import annotations
 
@@ -26,12 +52,47 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..common import apply_activation, compiler_params, default_interpret
+from ..common import apply_activation, compiler_params, default_interpret, pltpu
 from ...core.dataflow import Dataflow
+from ...core.ir import pool_out
 
-__all__ = ["conv2d_strips_pallas"]
+__all__ = ["conv2d_strips_pallas", "conv2d_virtual_pallas"]
 
 
+def _implicit_gemm(x, w_ref, rows, OW, stride, kh, kw, kpt):
+    """Accumulate the (dy, dx) taps of an implicit GEMM in f32.
+
+    x: (in_rows, Wp, Cin) input window; returns (rows, OW, kpt)."""
+    Cin = x.shape[-1]
+    acc = jnp.zeros((rows * OW, kpt), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = jax.lax.slice(
+                x, (dy, dx, 0),
+                (dy + (rows - 1) * stride + 1,
+                 dx + (OW - 1) * stride + 1, Cin),
+                (stride, stride, 1))               # (rows, OW, Cin)
+            acc += jax.lax.dot_general(
+                patch.reshape(rows * OW, Cin).astype(jnp.float32),
+                w_ref[dy, dx].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    return acc.reshape(rows, OW, kpt)
+
+
+def _epilogue(acc, bias_ref, byp, activation, bypass_first):
+    """Bias + activation + residual bypass, fused on writeback."""
+    if bias_ref is not None:
+        acc = acc + bias_ref[...].astype(jnp.float32)
+    if byp is not None and bypass_first:       # ResNet: add, then ReLU
+        acc = acc + byp.astype(jnp.float32)
+    acc = apply_activation(acc, activation)
+    if byp is not None and not bypass_first:
+        acc = acc + byp.astype(jnp.float32)
+    return acc
+
+
+# --- materialized strips (paper-faithful baseline) ---------------------------------
 def _body(x_ref, w_ref, *rest, out_rows, OW, stride, kh, kw,
           activation, out_dtype, has_bias, has_bypass,
           bypass_first=False):
@@ -40,30 +101,10 @@ def _body(x_ref, w_ref, *rest, out_rows, OW, stride, kh, kw,
     byp_ref = refs.pop(0) if has_bypass else None
     o_ref = refs.pop(0)
 
-    x = x_ref[0]                                   # (in_rows, Wp, Cin)
-    Cin = x.shape[-1]
-    kpt = o_ref.shape[-1]
-    acc = jnp.zeros((out_rows * OW, kpt), jnp.float32)
-    for dy in range(kh):
-        for dx in range(kw):
-            patch = jax.lax.slice(
-                x, (dy, dx, 0),
-                (dy + (out_rows - 1) * stride + 1,
-                 dx + (OW - 1) * stride + 1, Cin),
-                (stride, stride, 1))               # (out_rows, OW, Cin)
-            acc += jax.lax.dot_general(
-                patch.reshape(out_rows * OW, Cin).astype(jnp.float32),
-                w_ref[dy, dx].astype(jnp.float32),
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-    acc = acc.reshape(out_rows, OW, kpt)
-    if bias_ref is not None:
-        acc = acc + bias_ref[...].astype(jnp.float32)
-    if byp_ref is not None and bypass_first:   # ResNet: add, then ReLU
-        acc = acc + byp_ref[0].astype(jnp.float32)
-    acc = apply_activation(acc, activation)
-    if byp_ref is not None and not bypass_first:
-        acc = acc + byp_ref[0].astype(jnp.float32)
+    acc = _implicit_gemm(x_ref[0], w_ref, out_rows, OW, stride, kh, kw,
+                         o_ref.shape[-1])
+    byp = byp_ref[0] if byp_ref is not None else None
+    acc = _epilogue(acc, bias_ref, byp, activation, bypass_first)
     o_ref[0] = acc.astype(out_dtype)
 
 
@@ -73,9 +114,9 @@ def conv2d_strips_pallas(strips, w, *, out_rows: int, OW: int, stride: int,
                          out_dtype=None,
                          dataflow: Dataflow = Dataflow.MAPS_RESIDENT,
                          interpret: bool | None = None) -> jax.Array:
-    """strips: (NS, in_rows, Wp, Cin) halo-augmented row strips;
-    w: (kh, kw, Cin, Cout); bypass: (NS, out_rows, OW, Cout) or None.
-    Returns (NS, out_rows, OW, Cout)."""
+    """strips: (NS, in_rows, Wp, Cin) halo-augmented row strips already
+    materialized in HBM; w: (kh, kw, Cin, Cout); bypass:
+    (NS, out_rows, OW, Cout) or None.  Returns (NS, out_rows, OW, Cout)."""
     if interpret is None:
         interpret = default_interpret()
     NS, in_rows, Wp, Cin = strips.shape
@@ -115,7 +156,9 @@ def conv2d_strips_pallas(strips, w, *, out_rows: int, OW: int, stride: int,
         _body, out_rows=out_rows, OW=OW, stride=stride, kh=kh, kw=kw,
         activation=activation, out_dtype=out_dtype, has_bias=has_bias,
         has_bypass=has_bypass, bypass_first=bypass_first)
-    params = compiler_params(("arbitrary", "arbitrary"), interpret)
+    # Output tiles are disjoint across both grid dims: parallel semantics
+    # let Mosaic double-buffer the streamed operand.
+    params = compiler_params(("parallel", "parallel"), interpret)
     kwargs = {"compiler_params": params} if params is not None else {}
     return pl.pallas_call(
         body,
@@ -126,3 +169,170 @@ def conv2d_strips_pallas(strips, w, *, out_rows: int, OW: int, stride: int,
         interpret=interpret,
         **kwargs,
     )(*operands)
+
+
+# --- virtual strips (zero-copy) ----------------------------------------------------
+def _virtual_body(*refs, n_prefetch, strip_axis, out_rows, OH, OW, stride,
+                  kh, kw, rows_c, pool, OWo, activation, out_dtype,
+                  has_bias, has_bypass, bypass_first):
+    refs = list(refs)
+    rs_ref = refs.pop(0) if n_prefetch else None
+    x_ref = refs.pop(0)
+    w_ref = refs.pop(0)
+    bias_ref = refs.pop(0) if has_bias else None
+    byp_ref = refs.pop(0) if has_bypass else None
+    o_ref = refs.pop(0)
+
+    s = pl.program_id(strip_axis)
+    in_rows = (rows_c - 1) * stride + kh
+    if rs_ref is not None:                     # scalar-prefetched offsets
+        r0 = rs_ref[s]
+    else:                                      # affine: s * out_rows * stride
+        r0 = pl.multiple_of(s * (out_rows * stride), stride)
+    # The zero-copy gather: slice this strip's input window out of the
+    # VMEM-resident padded maps — no HBM duplication ever existed.
+    x = x_ref[0, pl.ds(r0, in_rows), :, :]     # (in_rows, Wp, Cin)
+
+    kpt = o_ref.shape[-1]
+    acc = _implicit_gemm(x, w_ref, rows_c, OW, stride, kh, kw, kpt)
+    byp = byp_ref[0] if byp_ref is not None else None
+    acc = _epilogue(acc, bias_ref, byp, activation, bypass_first)
+
+    if pool is None:
+        o_ref[0] = acc.astype(out_dtype)
+        return
+
+    # Fused maxpool epilogue.  This strip owns pool rows
+    # [s*SR, (s+1)*SR); pool row p needs conv rows [p*ps - pp,
+    # p*ps - pp + pw), so local conv row l is global row
+    # s*out_rows - pp + l.  Rows outside [0, OH) are the pool's -inf
+    # padding (or bottom fill) — mask them before taking the max.
+    pw, ps, pp = pool
+    SR = out_rows // ps
+    neg = jnp.float32(-jnp.inf)
+    gr = (s * out_rows - pp
+          + jax.lax.broadcasted_iota(jnp.int32, (rows_c, 1, 1), 0))
+    acc = jnp.where((gr >= 0) & (gr < OH), acc, neg)
+    wpad_r = max(0, (OWo - 1) * ps + pw - OW - pp)
+    if pp or wpad_r:
+        acc = jnp.pad(acc, ((0, 0), (pp, wpad_r), (0, 0)),
+                      constant_values=neg)
+    pooled = None
+    for py in range(pw):
+        for px in range(pw):
+            tap = jax.lax.slice(
+                acc, (py, px, 0),
+                (py + (SR - 1) * ps + 1, px + (OWo - 1) * ps + 1, kpt),
+                (ps, ps, 1))
+            pooled = tap if pooled is None else jnp.maximum(pooled, tap)
+    o_ref[0] = pooled.astype(out_dtype)
+
+
+def conv2d_virtual_pallas(xp, w, *, out_rows: int, OH: int, OW: int,
+                          stride: int, kpt: int, n_strips: int, bias=None,
+                          activation: str | None = None, bypass=None,
+                          bypass_first: bool = False, out_dtype=None,
+                          dataflow: Dataflow = Dataflow.MAPS_RESIDENT,
+                          pool: tuple[int, int, int] | None = None,
+                          row_starts=None,
+                          interpret: bool | None = None) -> jax.Array:
+    """Zero-copy row-strip conv: xp is the whole padded maps
+    (B, Hp, Wp, Cin) — no strip duplication; strips are gathered
+    in-kernel.  bypass: (B, n_strips*out_rows, OW, Cout) or None (not
+    combinable with ``pool``).  pool: (window, stride, pad) maxpool
+    fused after the epilogue.  row_starts: optional (n_strips,) int32
+    per-strip *input* row offsets, scalar-prefetched so the gather
+    address is known before the body runs — for input-side offset
+    tables an affine ``s * out_rows * stride`` cannot express (e.g.
+    irregular row subsampling).  Output strips stay uniform: strip s
+    always writes output rows [s*SR, (s+1)*SR), and the pool row mask
+    is likewise derived from s, so a custom table must keep that
+    output mapping valid.  Returns (B, n_strips*SR, OWo, Cout) where
+    (SR, OWo) are the per-strip output rows / width after the
+    optional pool."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, Hp, Wp, Cin = xp.shape
+    kh, kw, _, Cout = w.shape
+    assert Cout % kpt == 0, (Cout, kpt)
+    NK = Cout // kpt
+    NS = n_strips
+    out_dtype = out_dtype or xp.dtype
+    has_bias = bias is not None
+    has_bypass = bypass is not None
+
+    if pool is None:
+        rows_c, SR, OWo = out_rows, out_rows, OW
+    else:
+        pw, ps, pp = pool
+        assert not has_bypass, "fused pool is not combinable with bypass"
+        assert out_rows % ps == 0, (out_rows, ps)
+        rows_c = out_rows + pw - ps            # extra rows: overlapping windows
+        SR = out_rows // ps
+        OWo = pool_out(OW, pw, ps, pp)
+    in_rows = (rows_c - 1) * stride + kh
+    assert (NS - 1) * out_rows * stride + in_rows <= Hp, \
+        "padded maps too short for the strip table"
+
+    if dataflow is Dataflow.WEIGHTS_RESIDENT:
+        grid = (NK, B, NS)                   # weight tile resident (Mloop)
+        strip_axis = 2
+        x_idx = lambda kt, b, st: (b, 0, 0, 0)
+        w_idx = lambda kt, b, st: (0, 0, 0, kt)
+        o_idx = lambda kt, b, st: (b, st, 0, kt)
+        b_idx = lambda kt, b, st: (0, kt)
+    else:                                    # maps resident (Kloop)
+        grid = (B, NS, NK)
+        strip_axis = 1
+        x_idx = lambda b, st, kt: (b, 0, 0, 0)
+        w_idx = lambda b, st, kt: (0, 0, 0, kt)
+        o_idx = lambda b, st, kt: (b, st, 0, kt)
+        b_idx = lambda b, st, kt: (0, kt)
+
+    n_prefetch = 0
+    if row_starts is not None:
+        if pltpu is None:
+            raise RuntimeError("row_starts requires the Pallas TPU "
+                               "backend (PrefetchScalarGridSpec); it is "
+                               "unavailable in this jax install")
+        n_prefetch = 1
+        # Index maps receive the prefetch ref as a trailing arg.
+        wrap = lambda f: (lambda *a: f(*a[:3]))
+        x_idx, w_idx, o_idx, b_idx = (wrap(f) for f in
+                                      (x_idx, w_idx, o_idx, b_idx))
+
+    in_specs = [
+        pl.BlockSpec((1, Hp, Wp, Cin), x_idx),
+        pl.BlockSpec((kh, kw, Cin, kpt), w_idx),
+    ]
+    operands = [xp, w]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, kpt), b_idx))
+        operands.append(bias.reshape(1, Cout))
+    if has_bypass:
+        in_specs.append(pl.BlockSpec((1, out_rows, OW, kpt), o_idx))
+        operands.append(bypass)
+    out_spec = pl.BlockSpec((1, SR, OWo, kpt), o_idx)
+    out_shape = jax.ShapeDtypeStruct((B, NS * SR, OWo, Cout), out_dtype)
+
+    body = functools.partial(
+        _virtual_body, n_prefetch=n_prefetch, strip_axis=strip_axis,
+        out_rows=out_rows, OH=OH, OW=OW, stride=stride, kh=kh, kw=kw,
+        rows_c=rows_c, pool=pool, OWo=OWo, activation=activation,
+        out_dtype=out_dtype, has_bias=has_bias, has_bypass=has_bypass,
+        bypass_first=bypass_first)
+    # All three grid dims write disjoint output blocks with no carried
+    # state — parallel semantics everywhere (Mosaic double-buffers).
+    params = compiler_params(("parallel",) * 3, interpret)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    if n_prefetch:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=out_spec)
+        return pl.pallas_call(body, grid_spec=grid_spec,
+                              out_shape=out_shape, interpret=interpret,
+                              **kwargs)(row_starts.astype(jnp.int32),
+                                        *operands)
+    return pl.pallas_call(body, grid=grid, in_specs=in_specs,
+                          out_specs=out_spec, out_shape=out_shape,
+                          interpret=interpret, **kwargs)(*operands)

@@ -1,5 +1,22 @@
-"""Public conv2d wrapper: schedule lookup, halo-strip materialization
-(the paper's augmented tiles in DRAM), dispatch, and shape restore."""
+"""Public conv2d wrapper: schedule lookup, strip-storage decision,
+dispatch, and shape restore.
+
+The default path is **zero-copy**: the padded maps go to the kernel
+whole (blocked only on batch / output channels) and each output-row
+strip is gathered *inside* the kernel with a dynamic slice — the halo
+rows are re-fetched from VMEM, never duplicated in HBM.  The paper's
+scheme — materializing halo-augmented strips in DRAM so Snowflake's
+DMA engine can issue contiguous single-burst loads — survives as the
+``strip_storage="materialized"`` baseline; on hardware with random
+VMEM access the overlap-duplication-vs-refetch tradeoff is a compiler
+decision (``core/tiling.py``), not a constraint.
+
+``fuse_pool=(window, stride[, pad])`` fuses a following maxpool into
+the kernel epilogue (AlexNet / ResNet stem conv→pool), eliminating the
+pool layer's HBM round trip; on the materialized/reference paths it
+degrades gracefully to a separate reference pool with identical
+numerics.
+"""
 from __future__ import annotations
 
 import math
@@ -7,17 +24,22 @@ import math
 import jax
 import jax.numpy as jnp
 
-from ...core.dataflow import Dataflow
+from ...core.dataflow import Dataflow, choose_conv_dataflow
 from ...core.hw import TPU_V5E, HardwareModel
+from ...core.ir import pool_out
 from ...core.tiling import select_conv_row_strips
-from .kernel import conv2d_strips_pallas
-from .ref import conv2d_ref
+from .kernel import conv2d_strips_pallas, conv2d_virtual_pallas
+from .ref import conv2d_ref, maxpool2d_ref
 
 __all__ = ["conv2d"]
 
 
-def _make_strips(xp, n_strips, out_rows, in_rows, stride):
-    """Gather halo-augmented row strips: (B, H, W, C) -> (B*NS, in_rows, W, C)."""
+def _materialize_strips(xp, n_strips, out_rows, in_rows, stride):
+    """Gather halo-augmented row strips into one HBM array:
+    (B, Hp, Wp, C) -> (B*NS, in_rows, Wp, C).  This duplicates
+    ``overlap_frac`` of the maps off-chip — the Snowflake baseline the
+    zero-copy path exists to kill; kept for ``strip_storage=
+    "materialized"`` and the strip-storage benchmark."""
     B, Hp, Wp, C = xp.shape
     starts = jnp.arange(n_strips) * out_rows * stride
     def one(start):
@@ -28,20 +50,51 @@ def _make_strips(xp, n_strips, out_rows, in_rows, stride):
     return strips.reshape(B * n_strips, in_rows, Wp, C)
 
 
+def _norm_pool(fuse_pool):
+    if fuse_pool is None:
+        return None
+    if len(fuse_pool) == 2:
+        return (fuse_pool[0], fuse_pool[1], 0)
+    return tuple(fuse_pool)
+
+
 def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
            activation: str | None = None, bypass=None,
            bypass_first: bool = False, out_dtype=None,
            impl: str = "auto", dataflow: Dataflow | None = None,
            hw: HardwareModel = TPU_V5E,
+           strip_storage: str = "auto",
+           fuse_pool: tuple[int, ...] | None = None,
+           strip_offsets: str = "affine",
            interpret: bool | None = None) -> jax.Array:
     """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout); bypass broadcastable to
-    the output (B, OH, OW, Cout)."""
+    the conv output (B, OH, OW, Cout).
+
+    strip_storage: "auto" (tiler's VMEM-residency decision) |
+    "virtual" (zero-copy in-kernel gather) | "materialized" (HBM halo
+    duplication, paper-faithful).  fuse_pool: (window, stride[, pad])
+    maxpool fused into the epilogue (virtual path; other paths apply an
+    equivalent reference pool).  strip_offsets: "affine" derives strip
+    row offsets from the program id; "prefetch" routes them through a
+    scalar-prefetched offset table instead.
+    """
+    if strip_storage not in ("auto", "virtual", "materialized"):
+        raise ValueError(f"strip_storage must be auto|virtual|materialized, "
+                         f"got {strip_storage!r}")
+    if strip_offsets not in ("affine", "prefetch"):
+        raise ValueError(f"strip_offsets must be affine|prefetch, "
+                         f"got {strip_offsets!r}")
+    pool = _norm_pool(fuse_pool)
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "reference"
     if impl == "reference":
-        return conv2d_ref(x, w, stride=stride, pad=pad, bias=bias,
-                          activation=activation, bypass=bypass,
-                          bypass_first=bypass_first, out_dtype=out_dtype)
+        out = conv2d_ref(x, w, stride=stride, pad=pad, bias=bias,
+                         activation=activation, bypass=bypass,
+                         bypass_first=bypass_first, out_dtype=out_dtype)
+        if pool is not None:
+            out = maxpool2d_ref(out, window=pool[0], stride=pool[1],
+                                pad=pool[2])
+        return out
 
     B, H, W, Cin = x.shape
     kh, kw, _, Cout = w.shape
@@ -49,26 +102,110 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
     OW = (W + 2 * pad - kw) // stride + 1
     ct = select_conv_row_strips(H, W, Cin, Cout, kh, kw, stride, pad,
                                 x.dtype.itemsize, hw, batch=B)
+    storage = ct.strip_storage if strip_storage == "auto" else strip_storage
     out_rows, kpt = ct.out_rows, ct.kernels_per_tile
-    in_rows = (out_rows - 1) * stride + kh   # full window (pad supplies halo)
     while Cout % kpt != 0:
         kpt -= 1
+
+    if storage != "virtual":
+        # Paper-faithful fallback: conv via materialized strips, pool
+        # (if requested) as a separate reference op.
+        out = _conv2d_materialized(
+            x, w, stride=stride, pad=pad, bias=bias, activation=activation,
+            bypass=bypass, bypass_first=bypass_first, out_dtype=out_dtype,
+            dataflow=dataflow, ct=ct, out_rows=out_rows, kpt=kpt,
+            OH=OH, OW=OW, interpret=interpret)
+        if pool is not None:
+            out = maxpool2d_ref(out, window=pool[0], stride=pool[1],
+                                pad=pool[2])
+        return out
+
+    if pool is not None and bypass is not None:
+        # The fused-pool epilogue cannot also fold a residual add; do
+        # the conv (with bypass) zero-copy and pool separately.
+        out = conv2d(x, w, stride=stride, pad=pad, bias=bias,
+                     activation=activation, bypass=bypass,
+                     bypass_first=bypass_first, out_dtype=out_dtype,
+                     impl=impl, dataflow=dataflow, hw=hw,
+                     strip_storage="virtual",
+                     strip_offsets=strip_offsets, interpret=interpret)
+        return maxpool2d_ref(out, window=pool[0], stride=pool[1],
+                             pad=pool[2])
+
+    # --- zero-copy path ------------------------------------------------------
+    top_pad = pad
+    if pool is None:
+        rows_c, SR, OHo, OWo = out_rows, out_rows, OH, OW
+        n_strips = math.ceil(OH / out_rows)
+    else:
+        pw, ps, pp = pool
+        out_rows = max(ps, (out_rows // ps) * ps)   # strips own whole windows
+        rows_c = out_rows + pw - ps
+        SR = out_rows // ps
+        OHo = pool_out(OH, pw, ps, pp)
+        OWo = pool_out(OW, pw, ps, pp)
+        if OHo < 1 or OWo < 1:
+            raise ValueError(
+                f"fuse_pool window {pw} (pad {pp}) does not fit the "
+                f"{OH}x{OW} conv output")
+        n_strips = math.ceil(OHo / SR)
+        top_pad = pad + pp * stride      # phantom rows for the pool's top pad
+    in_rows = (rows_c - 1) * stride + kh
+    Hp_needed = (n_strips - 1) * out_rows * stride + in_rows
+    xp = jnp.pad(x, ((0, 0),
+                     (top_pad, max(0, Hp_needed - H - top_pad)),
+                     (pad, pad), (0, 0)))
+
+    if dataflow is None:
+        by = x.dtype.itemsize
+        out_bytes = B * OHo * OWo * Cout * by
+        dataflow, _, _ = choose_conv_dataflow(
+            B * H * W * Cin * by, Cin * kh * kw * Cout * by, out_bytes,
+            n_map_tiles=B * n_strips, n_kernel_tiles=Cout // kpt,
+            overlap_frac=ct.overlap_frac, strip_storage="virtual")
+
+    byp = None
+    if bypass is not None:
+        byp = jnp.broadcast_to(bypass, (B, OH, OW, Cout))
+        byp = jnp.pad(byp, ((0, 0), (0, n_strips * out_rows - OH),
+                            (0, 0), (0, 0)))
+
+    row_starts = None
+    if strip_offsets == "prefetch":
+        row_starts = jnp.arange(n_strips, dtype=jnp.int32) * (
+            out_rows * stride)
+
+    out = conv2d_virtual_pallas(
+        xp, w, out_rows=out_rows, OH=OH, OW=OW, stride=stride, kpt=kpt,
+        n_strips=n_strips, bias=bias, activation=activation, bypass=byp,
+        bypass_first=bypass_first, out_dtype=out_dtype or x.dtype,
+        dataflow=dataflow, pool=pool, row_starts=row_starts,
+        interpret=interpret)
+    return out[:, :OHo]
+
+
+def _conv2d_materialized(x, w, *, stride, pad, bias, activation, bypass,
+                         bypass_first, out_dtype, dataflow, ct, out_rows,
+                         kpt, OH, OW, interpret):
+    """The paper's scheme: halo-augmented strips duplicated in HBM."""
+    B, H, W, Cin = x.shape
+    kh, kw, _, Cout = w.shape
+    in_rows = (out_rows - 1) * stride + kh   # full window (pad supplies halo)
     n_strips = math.ceil(OH / out_rows)
 
     if dataflow is None:
-        # T3 on the strip grid (same formulas as core/schedule.py).
-        maps_b = H * W * Cin
-        ker_b = Cin * kh * kw * Cout
-        kloop = maps_b + n_strips * ker_b
-        mloop = (Cout // kpt) * maps_b + ker_b
-        dataflow = (Dataflow.MAPS_RESIDENT if kloop <= mloop
-                    else Dataflow.WEIGHTS_RESIDENT)
+        by = x.dtype.itemsize
+        dataflow, _, _ = choose_conv_dataflow(
+            B * H * W * Cin * by, Cin * kh * kw * Cout * by,
+            B * OH * OW * Cout * by,
+            n_map_tiles=B * n_strips, n_kernel_tiles=Cout // kpt,
+            overlap_frac=ct.overlap_frac, strip_storage="materialized")
 
     # Pad: spatial conv padding + bottom rows so every strip is full.
     Hp_needed = (n_strips - 1) * out_rows * stride + in_rows
     xp = jnp.pad(x, ((0, 0), (pad, max(pad, Hp_needed - H - pad)),
                      (pad, pad), (0, 0)))
-    strips = _make_strips(xp, n_strips, out_rows, in_rows, stride)
+    strips = _materialize_strips(xp, n_strips, out_rows, in_rows, stride)
 
     byp = None
     if bypass is not None:

@@ -1,11 +1,15 @@
 """CNN models — the paper's own workloads (AlexNetOWT, ResNet18/50).
 
 Layer-list driven (CNNConfig); convs run through kernels/conv2d with
-the schedule compiler choosing strips + Mloop/Kloop per layer, residual
-bypass fused into the consuming conv's epilogue exactly as the paper
-fuses the VMOV add into the writeback.  ``input_of`` allows parallel
-paths (projection shortcuts); ``to_graph`` lowers a CNNConfig to the
-compiler IR for the benchmark reproductions (Tables 1-3, Fig 4).
+the schedule compiler choosing strips + Mloop/Kloop + strip storage per
+layer, residual bypass fused into the consuming conv's epilogue exactly
+as the paper fuses the VMOV add into the writeback.  A maxpool directly
+following a conv (AlexNet / ResNet stems) is fused into that conv's
+kernel epilogue, both in ``forward`` (one fused call) and in
+``to_graph`` (meta flags the scheduler uses to zero the pool's
+traffic).  ``input_of`` allows parallel paths (projection shortcuts);
+``to_graph`` lowers a CNNConfig to the compiler IR for the benchmark
+reproductions (Tables 1-3, Fig 4).
 """
 from __future__ import annotations
 
@@ -64,22 +68,54 @@ def param_defs(cfg: CNNConfig) -> dict:
     return defs
 
 
+def _fusable_pool(cfg: CNNConfig, i: int, needed: set) -> int | None:
+    """Index of a maxpool fusable into conv ``i``'s epilogue, or None.
+
+    Fusable when the next layer is a maxpool fed by this conv and the
+    raw conv output is not separately consumed (residual / parallel
+    path) — then the pool runs on-chip and its HBM round trip vanishes.
+    """
+    j = i + 1
+    if i in needed or j >= len(cfg.layers):
+        return None
+    nxt = cfg.layers[j]
+    if nxt.kind != "maxpool" or nxt.input_of not in (None, i):
+        return None
+    return j
+
+
 def forward(params, x, cfg: CNNConfig, *, impl: str = "auto"):
-    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    """x: (B, H, W, C) -> logits (B, n_classes).
+
+    conv -> maxpool pairs are executed as one fused kernel call (the
+    pool in the conv's epilogue) when the conv output has no other
+    consumer; numerics are identical to the unfused sequence.
+    """
     outputs: dict[int, jax.Array] = {}
     needed = {l.bypass_of for l in cfg.layers if l.bypass_of is not None}
     needed |= {l.input_of for l in cfg.layers if l.input_of is not None}
     h = x.astype(cfg.jdtype)
+    fused_pools: set[int] = set()
     for i, layer in enumerate(cfg.layers):
+        if i in fused_pools:
+            continue
         src = outputs[layer.input_of] if layer.input_of is not None else h
         if layer.kind == "conv":
             p = params[f"layer_{i:02d}"]
             bypass = outputs.get(layer.bypass_of) \
                 if layer.bypass_of is not None else None
+            j = _fusable_pool(cfg, i, needed)
+            fuse_pool = None
+            if j is not None:
+                pool = cfg.layers[j]
+                fuse_pool = (pool.k, pool.stride, pool.pad)
+                fused_pools.add(j)
             h = conv2d(src, p["w"], stride=layer.stride, pad=layer.pad,
                        bias=p["b"], activation=layer.activation,
                        bypass=bypass, bypass_first=layer.bypass_first,
-                       impl=impl)
+                       fuse_pool=fuse_pool, impl=impl)
+            if j is not None and j in needed:
+                outputs[j] = h
         elif layer.kind == "maxpool":
             h = maxpool2d_ref(src, window=layer.k, stride=layer.stride,
                               pad=layer.pad)
@@ -129,5 +165,20 @@ def to_graph(cfg: CNNConfig, batch: int = 1,
                               fused_bias=True))
         names[i] = name
         prev_name = name
+    # Record conv->maxpool fusion (mirrors forward()): the pool runs in
+    # the conv's epilogue, so the scheduler shrinks the conv's out
+    # stream and zeroes the pool layer's traffic.
+    needed = {l.bypass_of for l in cfg.layers if l.bypass_of is not None}
+    needed |= {l.input_of for l in cfg.layers if l.input_of is not None}
+    for i, layer in enumerate(cfg.layers):
+        if layer.kind != "conv":
+            continue
+        j = _fusable_pool(cfg, i, needed)
+        if j is None:
+            continue
+        pool = cfg.layers[j]
+        g.get(names[i]).meta["fused_pool"] = {
+            "window": pool.k, "stride": pool.stride, "pad": pool.pad}
+        g.get(names[j]).meta["fused_into"] = names[i]
     g.mark_residuals()
     return g

@@ -1,0 +1,75 @@
+"""Degraded stand-in for ``hypothesis`` when it is not installed.
+
+Implements just the surface the test suite uses — ``given``,
+``settings``, and the ``integers`` / ``floats`` / ``sampled_from`` /
+``lists`` strategies — by drawing a deterministic pseudo-random sample
+per example (seeded, so failures reproduce).  No shrinking, no edge-
+case bias: strictly weaker than real hypothesis, but the properties
+still get exercised across a few dozen inputs instead of being skipped
+wholesale.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__all__ = ["given", "settings", "st", "strategies"]
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample          # sample(rng) -> value
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 16):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda r: r.choice(elements))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_):
+        return _Strategy(
+            lambda r: [elements.sample(r)
+                       for _ in range(r.randint(min_size, max_size))])
+
+
+st = strategies = _Strategies()
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, **_):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*gargs, **gkwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            # @settings sits above @given, so the attribute lands on
+            # this wrapper — read it at call time.
+            n = getattr(run, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(0)
+            for _ in range(n):
+                pos = [g.sample(rng) for g in gargs]
+                kw = {k: g.sample(rng) for k, g in gkwargs.items()}
+                fn(*args, *pos, **{**kwargs, **kw})
+        # The strategies supply every parameter: present a zero-arg
+        # signature so pytest does not look for same-named fixtures.
+        run.__signature__ = inspect.Signature()
+        del run.__wrapped__
+        return run
+    return deco
