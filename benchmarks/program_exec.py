@@ -1,0 +1,85 @@
+"""Program-execution benchmark: the compiled Program path vs a legacy
+layer-by-layer forward.
+
+For each CNN this measures
+  * wallclock of ``runtime/executor.py`` running the compiled Program
+    (conv->pool fusion, fused bias/activation/bypass epilogues — the
+    schedule's decisions executing) vs the pre-Program forward: every
+    layer as its own reference op with its own HBM round trip;
+  * the schedule's modeled traffic for the Program (fused pools free,
+    zero-copy strips) vs the unfused per-layer minimum-bytes sum —
+    the traffic the Program path deletes on paper;
+and checks both paths agree with the oracle numerics.
+
+Smoke mode runs a reduced-depth CNN so CI stays fast; the full run
+covers AlexNetOWT and ResNet18.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import CNN_REGISTRY
+from repro.configs.base import CNNConfig, CNNLayer as C
+from repro.models import cnn, init_params
+from repro.models.cnn import reference_forward as legacy_forward
+from repro.runtime import executor
+
+from .common import emit, time_call
+
+SMOKE = False          # set by benchmarks.run --smoke
+
+# Reduced-depth stand-in with the same feature mix (fused pool,
+# residual bypass, projection shortcut, fc head) for smoke runs.
+TINY = CNNConfig(
+    name="tiny-resnet", input_hw=32, input_ch=3, n_classes=10,
+    layers=(
+        C("conv", 16, 3, 1, 1),
+        C("maxpool", k=2, stride=2),
+        C("conv", 32, 3, 2, 1, activation=None, input_of=1),
+        C("conv", 32, 3, 2, 1, input_of=1),
+        C("conv", 32, 3, 1, 1, activation="relu", bypass_of=2),
+        C("avgpool", k=8, stride=8),
+        C("fc", 10, activation=None),
+    ))
+
+
+def _unfused_traffic(cfg, batch, dtype_bytes) -> float:
+    g = cnn.to_graph(cfg, batch=batch, dtype_bytes=dtype_bytes)
+    return g.total_min_bytes()
+
+
+def run():
+    cfgs = [TINY] if SMOKE else [TINY, CNN_REGISTRY["alexnet-owt"],
+                                 CNN_REGISTRY["resnet18"]]
+    for cfg in cfgs:
+        params = init_params(cnn.param_defs(cfg), jax.random.PRNGKey(0))
+        x = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (1, cfg.input_hw, cfg.input_hw, cfg.input_ch), jnp.float32)
+
+        program = cnn.compile_program(cfg, batch=1)
+        prog_fn = executor.jitted_runner(program, impl="reference")
+        legacy_fn = jax.jit(functools.partial(legacy_forward, cfg=cfg))
+
+        err = float(jnp.abs(prog_fn(params, x)
+                            - legacy_fn(params, x)).max())
+        warmup, iters = (1, 3) if SMOKE else (2, 7)
+        t_prog = time_call(prog_fn, params, x, warmup=warmup, iters=iters)
+        t_leg = time_call(legacy_fn, params, x, warmup=warmup, iters=iters)
+
+        by = jnp.dtype(cfg.jdtype).itemsize
+        modeled = program.total_traffic_bytes
+        unfused = _unfused_traffic(cfg, 1, by)
+        emit(f"program/{cfg.name}/wallclock", t_prog,
+             f"legacy_us={t_leg:.2f};"
+             f"program_over_legacy={t_prog / max(t_leg, 1e-9):.3f};"
+             f"err={err:.2e}")
+        emit(f"program/{cfg.name}/traffic", 0.0,
+             f"program_mb={modeled/1e6:.2f};unfused_min_mb={unfused/1e6:.2f};"
+             f"ops={len(program.ops)};regions={len(program.plan.regions)};"
+             f"region_mb={program.plan.total_bytes/1e6:.3f}")
+
+
+if __name__ == "__main__":
+    run()

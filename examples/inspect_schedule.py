@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/inspect_schedule.py [--model resnet18]
 
 Prints the per-layer Mloop/Kloop choices, tile shapes, traffic and the
-Fig-4-style bandwidth table for one of the paper's CNNs, then the
-distributed-level decisions for an assigned LM architecture.
+Fig-4-style bandwidth table for one of the paper's CNNs, the executable
+Program the schedule lowers to (the paper-style instruction trace with
+§5.1 memory-region ids), then the distributed-level decisions for an
+assigned LM architecture.
 """
 import argparse
 import sys
@@ -13,9 +15,9 @@ sys.path.insert(0, "src")
 
 from repro.configs import CNN_REGISTRY, get_config
 from repro.configs.base import ShapeSpec
-from repro.core import SINGLE_POD, SNOWFLAKE, compile_model
+from repro.core import SINGLE_POD, SNOWFLAKE, TPU_V5E, compile_model
 from repro.core.ir import LayerKind
-from repro.models.cnn import to_graph
+from repro.models.cnn import compile_program, to_graph
 from repro.parallel.rules import make_plan
 
 ap = argparse.ArgumentParser()
@@ -37,6 +39,12 @@ for l in sched.layers:
     print(f"{l.name:14s} {l.dataflow.value:6s} {ct.out_rows:5d} "
           f"{ct.kernels_per_tile:4d} {l.traffic_bytes/1e6:9.2f} "
           f"{l.exec_time_s*1e3:7.3f} {l.notes.get('stall', 1.0):5.2f}")
+
+# The schedule is not a report: it lowers to the executable Program
+# (regions + instruction stream) that runtime/executor.py runs.
+print(f"\n== {args.model} Program (TPU v5e schedule) ==")
+print(compile_program(CNN_REGISTRY[args.model], batch=1,
+                      hw=TPU_V5E).listing())
 
 cfg = get_config(args.arch)
 for shape in cfg.shapes():

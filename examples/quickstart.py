@@ -5,7 +5,9 @@
 1. picks an assigned architecture config (--arch, default smollm-360m,
    reduced to its smoke size for CPU),
 2. runs the schedule compiler on an AlexNet conv layer to show the
-   paper's Mloop/Kloop decision,
+   paper's Mloop/Kloop decision, then compiles the whole AlexNet to an
+   executable Program (schedule -> regions -> instruction stream) and
+   classifies one image through runtime/executor.py,
 3. trains the LM for 60 steps on the synthetic stream (loss printed),
 4. serves two batched requests from the trained weights.
 """
@@ -41,6 +43,24 @@ print(f"[compiler] AlexNet conv2 on Snowflake: {layer.dataflow.value} "
 dec_tpu = choose_matmul_dataflow(8192, 4096, 14336, 2, TPU_V5E)
 print(f"[compiler] llama3 FFN tile on TPU v5e: {dec_tpu.dataflow.value} "
       f"blocks={dec_tpu.tiling.bm}x{dec_tpu.tiling.bk}x{dec_tpu.tiling.bn}")
+
+# -- 1b. compile-to-Program: the schedule is what executes -----------------------
+from repro.configs import CNN_REGISTRY
+from repro.models import cnn
+from repro.runtime import executor
+
+cnn_cfg = CNN_REGISTRY["alexnet-owt"]
+program = cnn.compile_program(cnn_cfg, batch=1)
+plan = program.plan
+print(f"[program] {cnn_cfg.name}: {len(program.ops)} ops, "
+      f"{plan.n_pingpong} ping-pong + {plan.n_pinned} pinned regions "
+      f"({plan.total_bytes/1e6:.2f} MB activations); first op: "
+      f"{program.ops[0].trace()}")
+cnn_params = init_params(cnn.param_defs(cnn_cfg), jax.random.PRNGKey(2))
+img = jax.random.normal(jax.random.PRNGKey(3), (1, 224, 224, 3))
+logits = executor.run(program, cnn_params, img, impl="reference")
+print(f"[program] executed via runtime/executor.py -> "
+      f"class {int(logits.argmax())}")
 
 # -- 2. train ------------------------------------------------------------------
 cfg = get_config(args.arch).smoke()

@@ -1,7 +1,8 @@
 """Core compiler: the paper's contribution generalized for TPU.
 
 Pipeline:  ModelGraph (ir) -> tiles (tiling) -> loop order (dataflow)
-        -> balance (balance) -> ModelSchedule (schedule) -> roofline.
+        -> balance (balance) -> ModelSchedule (schedule)
+        -> regions (regions) -> Program (program) -> runtime/executor.
 """
 from .hw import (HardwareModel, MeshDescriptor, MULTI_POD, SINGLE_POD,
                  SNOWFLAKE, TPU_V5E)
@@ -15,6 +16,8 @@ from .dataflow import (Dataflow, DataflowDecision, DistDecision,
 from .balance import (assign_lpt, balance_transfers, moe_capacity,
                       percent_imbalance, split_transfer)
 from .schedule import LayerSchedule, ModelSchedule, compile_model
+from .regions import Region, RegionPlan, allocate_regions
+from .program import Program, ProgramOp, lower_to_program
 from .quant import (Q5_11, Q8_8, QFormat, dequantize, int8_matmul,
                     int8_quantize_per_channel, qmatmul, quantize,
                     validate_layerwise)

@@ -38,6 +38,7 @@ from .tiling import (MatmulTiling, matmul_vmem_bytes, pow2_candidates,
 __all__ = [
     "Dataflow",
     "matmul_traffic",
+    "materialization_roundtrip",
     "conv_strip_traffic",
     "choose_conv_dataflow",
     "DataflowDecision",
@@ -73,10 +74,24 @@ def matmul_traffic(M: int, K: int, N: int, dtype_bytes: int,
     return math.ceil(N / bn) * a + math.ceil(M / bm) * b + c
 
 
+def materialization_roundtrip(maps_bytes: float,
+                              overlap_frac: float) -> float:
+    """Bytes to build the halo-augmented strip copy in DRAM: read the
+    maps once + write the ``(1 + overlap)`` augmented layout.  Zero when
+    strips don't overlap — the producer's natural output already *is*
+    the strip layout then.  The single definition shared by
+    ``conv_strip_traffic``, the schedule notes, and the strip-storage
+    benchmark."""
+    if overlap_frac <= 0.0:
+        return 0.0
+    return (2.0 + overlap_frac) * maps_bytes
+
+
 def conv_strip_traffic(maps_bytes: float, weights_bytes: float,
                        out_bytes: float, *, n_map_tiles: int,
                        n_kernel_tiles: int, overlap_frac: float,
-                       strip_storage: str = "materialized"
+                       strip_storage: str = "materialized",
+                       charge_materialization: bool = True
                        ) -> tuple[float, float]:
     """(kloop, mloop) HBM bytes for a row-strip conv under T3.
 
@@ -88,28 +103,45 @@ def conv_strip_traffic(maps_bytes: float, weights_bytes: float,
 
     * ``"materialized"`` — Snowflake's scheme: halo-augmented strips are
       duplicated in DRAM so the DMA engine issues single-burst loads.
-      Every maps pass re-reads the ``(1 + overlap_frac)`` copy.
+      Every maps pass re-reads the ``(1 + overlap_frac)`` copy, and —
+      because the augmented layout is *not* what the producing layer
+      wrote — building it costs a round trip first: read the maps once
+      and write the ``(1 + overlap_frac)`` augmented copy.  That round
+      trip, ``(2 + overlap_frac) * maps_bytes``, is charged whenever the
+      strips actually overlap; ``charge_materialization=False`` opts out
+      and reproduces the conv-loop-only accounting (the paper's Fig. 4
+      frame, which measures the conv's own streams).  Zero-overlap
+      strips need no augmentation (the producer's layout already *is*
+      the strip layout), so they are never charged.
     * ``"virtual"`` — zero-copy: the kernel gathers each strip from the
       un-duplicated maps with an in-kernel dynamic slice, so maps move
-      exactly once per pass and the overlap term vanishes.
+      exactly once per pass, and there is no materialization round trip
+      at all.
     """
     dup = 1.0 + (overlap_frac if strip_storage == "materialized" else 0.0)
-    kloop = maps_bytes * dup + n_map_tiles * weights_bytes + out_bytes
-    mloop = n_kernel_tiles * maps_bytes * dup + weights_bytes + out_bytes
+    roundtrip = 0.0
+    if strip_storage == "materialized" and charge_materialization:
+        roundtrip = materialization_roundtrip(maps_bytes, overlap_frac)
+    kloop = roundtrip + maps_bytes * dup + n_map_tiles * weights_bytes \
+        + out_bytes
+    mloop = roundtrip + n_kernel_tiles * maps_bytes * dup + weights_bytes \
+        + out_bytes
     return kloop, mloop
 
 
 def choose_conv_dataflow(maps_bytes: float, weights_bytes: float,
                          out_bytes: float, *, n_map_tiles: int,
                          n_kernel_tiles: int, overlap_frac: float,
-                         strip_storage: str = "materialized"
+                         strip_storage: str = "materialized",
+                         charge_materialization: bool = True
                          ) -> tuple[Dataflow, float, dict[str, float]]:
     """Pick the cheaper strip-grid loop order; returns
     (dataflow, traffic_bytes, {"kloop": ..., "mloop": ...})."""
     kloop, mloop = conv_strip_traffic(
         maps_bytes, weights_bytes, out_bytes, n_map_tiles=n_map_tiles,
         n_kernel_tiles=n_kernel_tiles, overlap_frac=overlap_frac,
-        strip_storage=strip_storage)
+        strip_storage=strip_storage,
+        charge_materialization=charge_materialization)
     alts = {"kloop": kloop, "mloop": mloop}
     if kloop <= mloop:
         return Dataflow.MAPS_RESIDENT, kloop, alts

@@ -183,6 +183,15 @@ class ModelGraph:
     def get(self, name: str) -> LayerNode:
         return self._index()[name]
 
+    def _consumers(self) -> dict[str, list[str]]:
+        """name -> names of nodes reading it via ``inputs`` (bypass_of
+        reads are tracked separately by the passes that care)."""
+        consumers: dict[str, list[str]] = {}
+        for n in self.nodes:
+            for inp in n.inputs:
+                consumers.setdefault(inp, []).append(n.name)
+        return consumers
+
     # --- paper step 2: dependency labelling -----------------------------------
     def mark_residuals(self) -> None:
         """Scan inter-layer relations and attach dependency labels.
@@ -192,10 +201,7 @@ class ModelGraph:
         becomes a RESIDUAL_SINK.  Nodes sharing an input are PARALLEL.
         """
         idx = self._index()
-        consumers: dict[str, list[str]] = {}
-        for n in self.nodes:
-            for inp in n.inputs:
-                consumers.setdefault(inp, []).append(n.name)
+        consumers = self._consumers()
         order = {n.name: i for i, n in enumerate(self.nodes)}
         for n in self.nodes:
             if n.bypass_of is not None:
@@ -218,31 +224,40 @@ class ModelGraph:
                     raise ValueError(
                         f"bypass source {n.bypass_of} does not precede {n.name}")
 
+    def mark_pool_fusion(self) -> None:
+        """Mark conv -> maxpool pairs fusable into the conv's epilogue.
+
+        Fusable when the pool directly follows the conv, consumes only
+        it, and the raw conv output has no other reader (no residual /
+        parallel path off it) — then the pool can run on-chip before
+        writeback and its HBM round trip vanishes.  This is a *graph*
+        property; whether the fusion actually executes is the
+        scheduler's call (it needs the zero-copy strip path), recorded
+        in the conv's ``LayerSchedule.notes``.
+        """
+        consumers = self._consumers()
+        bypass_sources = {n.bypass_of for n in self.nodes if n.bypass_of}
+        for i, n in enumerate(self.nodes[:-1]):
+            nxt = self.nodes[i + 1]
+            if (n.kind is not LayerKind.CONV2D
+                    or nxt.kind is not LayerKind.POOL
+                    or nxt.meta.get("op", "max") != "max"
+                    or "window" not in nxt.meta
+                    or nxt.inputs != [n.name]
+                    or n.name in bypass_sources
+                    or consumers.get(n.name, []) != [nxt.name]):
+                continue
+            n.meta["fused_pool"] = {"window": nxt.meta["window"],
+                                    "stride": nxt.meta["stride"],
+                                    "pad": nxt.meta.get("pad", 0)}
+            nxt.meta["fused_into"] = n.name
+
     # --- aggregates ------------------------------------------------------------
     def total_flops(self) -> float:
         return sum(n.flops() for n in self.nodes)
 
     def total_min_bytes(self) -> float:
         return sum(n.min_bytes() for n in self.nodes)
-
-    def memory_regions(self) -> dict[str, int]:
-        """Paper §5.3: distinct activation regions needed in main memory.
-
-        Sequential chains ping-pong between two regions; every live
-        residual source holds its own region until its sink retires it.
-        """
-        regions = {"pingpong": 2}
-        live = 0
-        max_live = 0
-        sinks = {n.bypass_of for n in self.nodes if n.bypass_of}
-        for n in self.nodes:
-            if n.dep is DepLabel.RESIDUAL_SOURCE and n.name in sinks:
-                live += 1
-                max_live = max(max_live, live)
-            if n.dep is DepLabel.RESIDUAL_SINK:
-                live = max(0, live - 1)
-        regions["residual"] = max_live
-        return regions
 
 
 # --- node constructors ----------------------------------------------------------

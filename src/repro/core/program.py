@@ -1,0 +1,198 @@
+"""Executable Program — the instruction-stream analogue (paper §5.2).
+
+``compile_model`` stops at a ``ModelSchedule``: per-layer decisions
+(tiling, loop order, strip storage, fusion flags) with modeled cost.
+The paper's compiler keeps going — it allocates memory regions from the
+dependency labels and emits the instruction stream Snowflake executes.
+This module is that last lowering step for us: a ``Program`` is an
+ordered list of ``ProgramOp``s, each carrying
+
+* the kernel id to dispatch (conv2d / matmul / maxpool / avgpool),
+* the *resolved* schedule for that op — ``ConvTiling`` or matmul block,
+  loop order, strip storage — so the kernels recompute nothing,
+* the fusion epilogue (bias, activation, residual bypass, fused pool),
+  exactly the paper's VMOV-on-writeback flags,
+* input / output / bypass *memory-region* ids from the §5.1 region
+  plan (core/regions.py).
+
+``runtime/executor.py`` executes a Program against parameters; the
+models compile once (cached) and run it, so every scheduler improvement
+is automatically an execution improvement, never just a report.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .dataflow import Dataflow
+from .ir import LayerKind, ModelGraph
+from .regions import RegionPlan, allocate_regions
+from .schedule import LayerSchedule, ModelSchedule
+from .tiling import ConvTiling
+
+__all__ = ["ProgramOp", "Program", "lower_to_program"]
+
+
+@dataclass(frozen=True)
+class ProgramOp:
+    index: int                       # position in the instruction stream
+    name: str                        # source layer name
+    kernel: str                      # "conv2d" | "matmul" | "maxpool" | "avgpool"
+    in_region: int
+    out_region: int
+    param_key: str | None = None     # params[...] group ("layer_03")
+    bypass_region: int | None = None
+    # geometry
+    stride: int = 1
+    pad: int = 0
+    window: int = 0                  # standalone pool window
+    # fusion epilogue (the paper's writeback VMOVs)
+    fuse_bias: bool = False
+    fuse_activation: str | None = None
+    fuse_bypass: bool = False
+    bypass_first: bool = True
+    fuse_pool: tuple[int, int, int] | None = None   # (window, stride, pad)
+    # resolved schedule
+    strip_storage: str | None = None
+    dataflow: Dataflow | None = None
+    conv_tiling: ConvTiling | None = None
+    block: tuple[int, int, int] | None = None
+    # modeled cost, carried for the listing / benchmarks
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+
+    def trace(self) -> str:
+        """One paper-style instruction-trace line."""
+        io = f"r{self.in_region}->r{self.out_region}"
+        if self.bypass_region is not None:
+            io += f"+r{self.bypass_region}"
+        sched = ""
+        if self.kernel == "conv2d" and self.conv_tiling is not None:
+            ct = self.conv_tiling
+            order = self.dataflow.value if self.dataflow else "?"
+            sched = (f"{order} strips={ct.n_map_tiles}x{ct.n_kernel_tiles} "
+                     f"rows={ct.out_rows} kpt={ct.kernels_per_tile} "
+                     f"{self.strip_storage or 'auto'}")
+        elif self.kernel == "matmul" and self.block is not None:
+            order = self.dataflow.value if self.dataflow else "?"
+            sched = f"{order} block={'x'.join(map(str, self.block))}"
+        elif self.kernel in ("maxpool", "avgpool"):
+            sched = f"win={self.window} stride={self.stride}"
+        epi = "".join(
+            [" +bias" if self.fuse_bias else "",
+             f" +{self.fuse_activation}" if self.fuse_activation else "",
+             " +bypass" if self.fuse_bypass else "",
+             (f" +pool{self.fuse_pool[0]}s{self.fuse_pool[1]}"
+              if self.fuse_pool else "")])
+        return (f"%{self.index:02d} {self.kernel:8s} {self.name:14s} "
+                f"{io:10s} {sched}{epi}")
+
+
+@dataclass(frozen=True)
+class Program:
+    name: str
+    hw_name: str
+    ops: tuple[ProgramOp, ...]
+    plan: RegionPlan
+
+    @property
+    def input_region(self) -> int:
+        return self.plan.input_region
+
+    @property
+    def output_region(self) -> int:
+        return self.plan.output_region
+
+    @property
+    def total_flops(self) -> float:
+        return sum(op.flops for op in self.ops)
+
+    @property
+    def total_traffic_bytes(self) -> float:
+        return sum(op.traffic_bytes for op in self.ops)
+
+    def op(self, name: str) -> ProgramOp:
+        for o in self.ops:
+            if o.name == name:
+                return o
+        raise KeyError(name)
+
+    def listing(self) -> str:
+        plan = self.plan
+        head = (f"program {self.name} on {self.hw_name}: {len(self.ops)} ops, "
+                f"{plan.n_pingpong}+{plan.n_pinned} regions "
+                f"({plan.total_bytes / 1e6:.2f} MB), "
+                f"{self.total_flops / 1e9:.2f} GFLOP, "
+                f"{self.total_traffic_bytes / 1e6:.1f} MB moved")
+        return "\n".join([head] + [op.trace() for op in self.ops])
+
+
+def _pool_kernel(node) -> str:
+    return "avgpool" if node.meta.get("op") == "avg" else "maxpool"
+
+
+def _norm_pool(fp: dict) -> tuple[int, int, int]:
+    return (fp["window"], fp["stride"], fp.get("pad", 0))
+
+
+def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
+                     plan: RegionPlan | None = None) -> Program:
+    """Lower a scheduled graph to the executable instruction stream.
+
+    The schedule is the single source of truth: a pool is emitted as a
+    standalone op exactly when the scheduler did *not* fuse it into its
+    producer (``fused_pool`` in the conv's notes requires the zero-copy
+    strip path), and every conv/matmul op carries the schedule's exact
+    tiling, loop order and epilogue flags.
+    """
+    if plan is None:
+        plan = allocate_regions(graph, schedule)
+    nodes = list(graph)
+    prev: str | None = None
+    ops: list[ProgramOp] = []
+    for node in nodes:
+        ls: LayerSchedule = schedule.layer(node.name)
+        src_name = node.inputs[0] if node.inputs else prev
+        in_region = (plan.out_region[src_name] if src_name is not None
+                     else plan.input_region)
+        out_region = plan.out_region[node.name]
+        prev = node.name
+        fused_into = node.meta.get("fused_into")
+        if fused_into is not None and "fused_into" in ls.notes:
+            continue                      # runs inside its producer's epilogue
+        common = dict(
+            index=len(ops), name=node.name, in_region=in_region,
+            out_region=out_region, param_key=node.meta.get("param"),
+            flops=ls.flops, traffic_bytes=ls.traffic_bytes)
+        if node.kind is LayerKind.CONV2D:
+            d = node.dims
+            fp = ls.notes.get("fused_pool")
+            ops.append(ProgramOp(
+                kernel="conv2d", stride=d["stride"], pad=d["pad"],
+                fuse_bias=ls.fuse_bias, fuse_activation=ls.fuse_activation,
+                fuse_bypass=ls.fuse_bypass,
+                bypass_region=(plan.out_region[node.bypass_of]
+                               if node.bypass_of else None),
+                bypass_first=node.meta.get("bypass_first", True),
+                fuse_pool=_norm_pool(fp) if fp else None,
+                strip_storage=ls.notes.get("strip_storage"),
+                dataflow=ls.dataflow, conv_tiling=ls.conv_tiling,
+                **common))
+        elif node.kind is LayerKind.MATMUL:
+            ops.append(ProgramOp(
+                kernel="matmul", fuse_bias=ls.fuse_bias,
+                fuse_activation=ls.fuse_activation,
+                fuse_bypass=ls.fuse_bypass,
+                bypass_region=(plan.out_region[node.bypass_of]
+                               if node.bypass_of else None),
+                dataflow=ls.dataflow, block=ls.block, **common))
+        elif node.kind is LayerKind.POOL:
+            m = node.meta
+            ops.append(ProgramOp(
+                kernel=_pool_kernel(node), window=m.get("window", 1),
+                stride=m.get("stride", 1), pad=m.get("pad", 0), **common))
+        else:
+            raise NotImplementedError(
+                f"no program lowering for {node.kind} ({node.name}); "
+                f"Program currently covers the paper's CNN layer kinds")
+    return Program(name=graph.name, hw_name=schedule.hw_name,
+                   ops=tuple(ops), plan=plan)

@@ -1,0 +1,178 @@
+"""Memory-region allocation (paper §5.1 step 5 / §5.3).
+
+The paper's compiler turns the dependency labels into a *region plan*
+for main memory: a sequential chain ping-pongs between two activation
+regions (the consumer reads one while the producer writes the other),
+and every residual/parallel source holds a dedicated pinned region
+until its last consumer retires it.  The instruction stream then reads
+and writes region ids, never raw addresses.
+
+This module is that allocator for a ``ModelGraph`` + ``ModelSchedule``
+pair: it walks the executed op order (a pool fused into its producer
+conv is one op), decides ping-pong vs pinned per output from the
+consumer distances, reuses pinned regions after their last read, and
+sizes every region at the largest output it ever holds.  The resulting
+``RegionPlan`` is embedded in the executable ``Program``
+(core/program.py) and drives the executor's region file.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .ir import ModelGraph
+
+__all__ = ["Region", "RegionPlan", "allocate_regions"]
+
+N_PINGPONG = 2          # the paper's sequential double-buffer pair
+
+
+@dataclass(frozen=True)
+class Region:
+    rid: int
+    kind: str            # "pingpong" | "pinned"
+    size_bytes: int      # largest output this region ever holds
+
+
+@dataclass(frozen=True)
+class RegionPlan:
+    regions: tuple[Region, ...]          # rid == index; first two ping-pong
+    out_region: dict                     # layer name -> rid of its output
+    input_region: int                    # rid the model input arrives in
+    output_region: int                   # rid holding the final output
+
+    @property
+    def n_pingpong(self) -> int:
+        return sum(1 for r in self.regions if r.kind == "pingpong")
+
+    @property
+    def n_pinned(self) -> int:
+        return sum(1 for r in self.regions if r.kind == "pinned")
+
+    @property
+    def total_bytes(self) -> int:
+        """Activation footprint the plan reserves (sum of region sizes —
+        the paper allocates the regions once, up front)."""
+        return sum(r.size_bytes for r in self.regions)
+
+    def region(self, rid: int) -> Region:
+        return self.regions[rid]
+
+
+def _fused_into(node, schedule) -> str | None:
+    """Producer this pool runs inside of, under the given schedule (the
+    schedule decides — materialized strips do not fuse), falling back to
+    the graph annotation when no schedule is supplied."""
+    src = node.meta.get("fused_into")
+    if src is None:
+        return None
+    if schedule is None:
+        return src
+    try:
+        return src if "fused_pool" in schedule.layer(src).notes else None
+    except KeyError:
+        return None
+
+
+def allocate_regions(graph: ModelGraph, schedule=None) -> RegionPlan:
+    """Turn dependency labels into the §5.1 region plan.
+
+    Outputs consumed only by the next executed op alternate between the
+    two ping-pong regions; an output read later than that (residual
+    source, parallel-path input) is pinned to its own region until its
+    last consumer executes, after which the region is reused.
+    """
+    nodes = list(graph)
+    # --- executed-op order: a fused pool collapses into its conv ------------
+    step_of: dict[str, int] = {}         # node name -> executed step
+    out_bytes: dict[int, float] = {}     # step -> bytes its output occupies
+    steps: list = []                     # step -> producing node
+    for node in nodes:
+        src = _fused_into(node, schedule)
+        if src is not None and src in step_of:
+            s = step_of[src]
+            step_of[node.name] = s       # pool output lives in conv's region
+            out_bytes[s] = node.operand_bytes()["out"]   # pooled, smaller
+            continue
+        s = len(steps)
+        steps.append(node)
+        step_of[node.name] = s
+        out_bytes[s] = node.operand_bytes()["out"]
+
+    # --- consumer steps per producing step ----------------------------------
+    consumers: dict[int, list[int]] = {s: [] for s in range(len(steps))}
+    input_consumers: list[int] = []      # steps reading the model input
+    prev: str | None = None
+    for node in nodes:
+        s = step_of[node.name]
+        reads = list(node.inputs)
+        if node.bypass_of:
+            reads.append(node.bypass_of)
+        if not node.inputs and prev is not None:
+            reads.append(prev)           # implicit sequential input
+        for r in reads:
+            ps = step_of.get(r)
+            if ps is not None and ps != s:
+                consumers[ps].append(s)
+            elif ps is None:
+                input_consumers.append(s)
+        if not reads:
+            input_consumers.append(s)
+        prev = node.name
+    for s in consumers:
+        consumers[s] = sorted(set(consumers[s]))
+
+    # --- assignment ----------------------------------------------------------
+    input_bytes = steps[0].operand_bytes().get("maps", 0.0) if steps else 0.0
+    sizes: dict[int, float] = {0: input_bytes, 1: 0.0}
+    kinds: dict[int, str] = {0: "pingpong", 1: "pingpong"}
+    out_region: dict[str, int] = {}
+    input_region = 0
+    free_pinned: list[int] = []
+    retire_at: dict[int, list[int]] = {}   # step -> pinned rids freed after it
+
+    if input_consumers and max(input_consumers) > 0:
+        # The raw input outlives step 0's write slot: pin it.  (No paper
+        # CNN does this — the graphs branch on layer outputs only — but
+        # the allocator must not silently corrupt such a graph.)
+        input_region = 2
+        kinds[input_region] = "pinned"
+        sizes[input_region] = sizes.pop(0)
+        sizes[0] = 0.0
+
+    def assign(step: int, rid: int) -> None:
+        sizes[rid] = max(sizes.get(rid, 0.0), out_bytes[step])
+
+    for s, node in enumerate(steps):
+        for rid in retire_at.pop(s, []):
+            free_pinned.append(rid)
+        cons = consumers[s]
+        pinned = bool(cons) and max(cons) > s + 1
+        if pinned:
+            if free_pinned:
+                rid = min(free_pinned)
+                free_pinned.remove(rid)
+            else:
+                rid = len(sizes)
+                kinds[rid] = "pinned"
+            # Free one step AFTER the last consumer: the consuming op is
+            # still streaming this region while it writes its own output,
+            # so the region cannot double as that output.
+            retire_at.setdefault(max(cons) + 1, []).append(rid)
+        else:
+            # Strict alternation: the input occupies ping-pong 0, step s
+            # writes ping-pong (s+1) % 2.  Anything still needed past the
+            # next step is pinned above, so the overwritten slot is dead.
+            rid = (s + 1) % N_PINGPONG
+        assign(s, rid)
+        out_region[node.name] = rid
+
+    # Alias fused pools (and any other collapsed nodes) to their step's rid.
+    for name, s in step_of.items():
+        if name not in out_region:
+            out_region[name] = out_region[steps[s].name]
+
+    regions = tuple(Region(rid, kinds[rid], int(sizes.get(rid, 0.0)))
+                    for rid in range(len(sizes)))
+    final = out_region[steps[-1].name] if steps else input_region
+    return RegionPlan(regions=regions, out_region=out_region,
+                      input_region=input_region, output_region=final)

@@ -27,9 +27,10 @@ from dataclasses import dataclass, field
 from .balance import balance_transfers, percent_imbalance
 from .dataflow import (Dataflow, DataflowDecision, DistDecision,
                        choose_conv_dataflow, choose_dist_strategy,
-                       choose_matmul_dataflow)
+                       choose_matmul_dataflow, materialization_roundtrip)
 from .hw import HardwareModel, MeshDescriptor, TPU_V5E
 from .ir import DepLabel, LayerKind, LayerNode, ModelGraph, _conv_out, pool_out
+from .regions import allocate_regions
 from .tiling import ConvTiling, select_conv_row_strips
 
 __all__ = ["LayerSchedule", "ModelSchedule", "compile_model"]
@@ -137,7 +138,8 @@ def _schedule_matmul(node: LayerNode, hw: HardwareModel,
 
 
 def _schedule_conv(node: LayerNode, hw: HardwareModel,
-                   paper_faithful: bool) -> LayerSchedule:
+                   paper_faithful: bool,
+                   charge_materialization: bool = True) -> LayerSchedule:
     d = node.dims
     ct = select_conv_row_strips(d["H"], d["W"], d["C_in"], d["C_out"],
                                 d["kh"], d["kw"], d["stride"], d["pad"],
@@ -165,8 +167,14 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
     df, traffic, alts = choose_conv_dataflow(
         ob["maps"], ob["weights"], ob["out"],
         n_map_tiles=ct.n_map_tiles, n_kernel_tiles=ct.n_kernel_tiles,
-        overlap_frac=ct.overlap_frac, strip_storage=storage)
+        overlap_frac=ct.overlap_frac, strip_storage=storage,
+        charge_materialization=charge_materialization)
     kloop, mloop = alts["kloop"], alts["mloop"]
+    # The materialization round trip (read maps + write the halo-
+    # augmented strips) that conv_strip_traffic charges, made visible.
+    roundtrip = 0.0
+    if storage == "materialized" and charge_materialization:
+        roundtrip = materialization_roundtrip(ob["maps"], ct.overlap_frac)
     slots = _epilogue_slots(node)
     if fp:
         # The fused pool adds window^2 compares per pooled element —
@@ -190,6 +198,8 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
     t_exec = max(hw.compute_time(flops) * stall, hw.memory_time(traffic))
     notes = {"kloop": kloop, "mloop": mloop, "stall": stall,
              "strip_storage": storage}
+    if roundtrip:
+        notes["materialize_roundtrip"] = roundtrip
     if fp:
         notes["fused_pool"] = fp
     return LayerSchedule(
@@ -226,6 +236,7 @@ def _schedule_other(node: LayerNode, hw: HardwareModel, *,
 def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
                   mesh: MeshDescriptor | None = None,
                   paper_faithful: bool = False,
+                  charge_materialization: bool = True,
                   hbm_activation_budget: float | None = None
                   ) -> ModelSchedule:
     """Walk the graph and emit the full model schedule.
@@ -233,8 +244,12 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
     ``paper_faithful=True`` restricts dataflows to the paper's two loop
     orders (Mloop/Kloop) — used as the reproduction baseline; the default
     additionally considers the output-stationary generalization.
+    ``charge_materialization=False`` drops the materialized-strip round
+    trip from the traffic model (the paper's Fig. 4 / Table 2 frame,
+    which counts only the conv's own streams).
     """
     graph.mark_residuals()
+    graph.mark_pool_fusion()
     layers: list[LayerSchedule] = []
     for node in graph:
         if node.kind in (LayerKind.MATMUL, LayerKind.MOE):
@@ -262,7 +277,8 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
             else:
                 layers.append(_schedule_matmul(node, hw, mesh, paper_faithful))
         elif node.kind is LayerKind.CONV2D:
-            layers.append(_schedule_conv(node, hw, paper_faithful))
+            layers.append(_schedule_conv(node, hw, paper_faithful,
+                                         charge_materialization))
         else:
             # A pool is only free if its producer conv actually fused
             # it (recorded in the conv's schedule notes — requires the
@@ -294,10 +310,17 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
     remat = "none" if total_act < budget else (
         "block" if total_act < 4 * budget else "full")
 
-    return ModelSchedule(
+    sched = ModelSchedule(
         name=graph.name, layers=layers, hw_name=hw.name, mesh=mesh,
         total_flops=sum(l.flops for l in layers),
         total_traffic_bytes=sum(l.traffic_bytes for l in layers),
         total_exec_time_s=sum(l.exec_time_s for l in layers),
-        memory_regions=graph.memory_regions(),
+        memory_regions={},
         load_imbalance_pct=avg_imb, remat_policy=remat)
+    # §5.1 region counts come from the one real allocator (the same one
+    # the executable Program reserves with) — no separate heuristic.
+    plan = allocate_regions(graph, sched)
+    sched.memory_regions = {"pingpong": plan.n_pingpong,
+                            "residual": plan.n_pinned,
+                            "total_bytes": plan.total_bytes}
+    return sched

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from ...core.dataflow import Dataflow, choose_conv_dataflow
 from ...core.hw import TPU_V5E, HardwareModel
 from ...core.ir import pool_out
-from ...core.tiling import select_conv_row_strips
+from ...core.tiling import ConvTiling, select_conv_row_strips
 from .kernel import conv2d_strips_pallas, conv2d_virtual_pallas
 from .ref import conv2d_ref, maxpool2d_ref
 
@@ -66,6 +66,7 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
            strip_storage: str = "auto",
            fuse_pool: tuple[int, ...] | None = None,
            strip_offsets: str = "affine",
+           tiling: ConvTiling | None = None,
            interpret: bool | None = None) -> jax.Array:
     """x: (B, H, W, Cin); w: (kh, kw, Cin, Cout); bypass broadcastable to
     the conv output (B, OH, OW, Cout).
@@ -76,7 +77,9 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
     maxpool fused into the epilogue (virtual path; other paths apply an
     equivalent reference pool).  strip_offsets: "affine" derives strip
     row offsets from the program id; "prefetch" routes them through a
-    scalar-prefetched offset table instead.
+    scalar-prefetched offset table instead.  tiling: a pre-resolved
+    ``ConvTiling`` (the schedule's exact decision, as carried by a
+    ``core/program.py`` op) — when given, no tiling is re-derived here.
     """
     if strip_storage not in ("auto", "virtual", "materialized"):
         raise ValueError(f"strip_storage must be auto|virtual|materialized, "
@@ -100,8 +103,8 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
     kh, kw, _, Cout = w.shape
     OH = (H + 2 * pad - kh) // stride + 1
     OW = (W + 2 * pad - kw) // stride + 1
-    ct = select_conv_row_strips(H, W, Cin, Cout, kh, kw, stride, pad,
-                                x.dtype.itemsize, hw, batch=B)
+    ct = tiling if tiling is not None else select_conv_row_strips(
+        H, W, Cin, Cout, kh, kw, stride, pad, x.dtype.itemsize, hw, batch=B)
     storage = ct.strip_storage if strip_storage == "auto" else strip_storage
     out_rows, kpt = ct.out_rows, ct.kernels_per_tile
     while Cout % kpt != 0:
@@ -127,7 +130,7 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
                      activation=activation, bypass=bypass,
                      bypass_first=bypass_first, out_dtype=out_dtype,
                      impl=impl, dataflow=dataflow, hw=hw,
-                     strip_storage="virtual",
+                     strip_storage="virtual", tiling=tiling,
                      strip_offsets=strip_offsets, interpret=interpret)
         return maxpool2d_ref(out, window=pool[0], stride=pool[1],
                              pad=pool[2])

@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch smollm-360m --smoke --requests 8 --max-new 16
+
+CNN archs (alexnet-owt / resnet18 / resnet50) serve image-classify
+requests through the compiled-Program fast path:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch alexnet-owt \
+        --slots 2 --requests 4
 """
 from __future__ import annotations
 
@@ -11,9 +17,35 @@ import time
 import jax
 import numpy as np
 
-from ..configs import get_config
+from ..configs import CNN_REGISTRY, get_config
 from ..models import get_model, init_params
 from ..serving import Request, ServingEngine
+
+
+def _serve_cnn(args) -> None:
+    """Image-classification serving: the engine executes the compiled
+    Program (schedule -> regions -> instruction stream) per tick."""
+    from ..models import cnn
+    cfg = CNN_REGISTRY[args.arch]
+    params = init_params(cnn.param_defs(cfg), jax.random.PRNGKey(0))
+    if args.ckpt:
+        from ..checkpoint import restore_checkpoint
+        (params, _), step = restore_checkpoint(args.ckpt, (params, {}))
+        print(f"restored params from step {step}")
+    eng = ServingEngine(cfg, params, slots=args.slots)
+    print(eng.program.listing())
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        img = rng.standard_normal(
+            (cfg.input_hw, cfg.input_hw, cfg.input_ch)).astype(np.float32)
+        eng.submit(Request(uid=i, prompt=img))
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    print(f"served {len(done)} images in {dt:.2f}s "
+          f"({len(done) / dt:.1f} img/s)")
+    for r in sorted(done, key=lambda r: r.uid)[:4]:
+        print(f"  req {r.uid}: class {r.out_tokens[0]}")
 
 
 def main(argv=None) -> None:
@@ -27,6 +59,10 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint dir to load params from")
     args = ap.parse_args(argv)
+
+    if args.arch in CNN_REGISTRY:
+        _serve_cnn(args)
+        return
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -1,27 +1,31 @@
 """CNN models — the paper's own workloads (AlexNetOWT, ResNet18/50).
 
-Layer-list driven (CNNConfig); convs run through kernels/conv2d with
-the schedule compiler choosing strips + Mloop/Kloop + strip storage per
-layer, residual bypass fused into the consuming conv's epilogue exactly
-as the paper fuses the VMOV add into the writeback.  A maxpool directly
-following a conv (AlexNet / ResNet stems) is fused into that conv's
-kernel epilogue, both in ``forward`` (one fused call) and in
-``to_graph`` (meta flags the scheduler uses to zero the pool's
-traffic).  ``input_of`` allows parallel paths (projection shortcuts);
-``to_graph`` lowers a CNNConfig to the compiler IR for the benchmark
-reproductions (Tables 1-3, Fig 4).
+Layer-list driven (CNNConfig).  The model itself makes *no* scheduling
+decisions: ``to_graph`` lowers the config to the compiler IR, the
+schedule compiler (core/schedule.py) decides strips / Mloop-Kloop /
+strip storage / fusion, ``core/program.py`` lowers that schedule to an
+executable ``Program`` with §5.1 memory regions, and ``forward`` is a
+thin wrapper that compiles the Program once per (config, hw, batch) and
+executes it through ``runtime/executor.py`` — the plan *is* the fast
+path, exactly as the Snowflake compiler's emitted instruction stream is
+what the accelerator runs.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import CNNConfig
+from ..core.hw import TPU_V5E, HardwareModel
 from ..core.ir import LayerKind, LayerNode, ModelGraph, conv_node, matmul_node
-from ..kernels.conv2d import avgpool2d_ref, conv2d, maxpool2d_ref
+from ..core.program import Program, lower_to_program
+from ..core.schedule import compile_model
+from ..runtime.executor import jitted_runner
 from .common import ParamDef
 
-__all__ = ["param_defs", "forward", "to_graph", "trace_shapes"]
+__all__ = ["param_defs", "forward", "reference_forward", "to_graph",
+           "trace_shapes", "compile_program"]
 
 
 def trace_shapes(cfg: CNNConfig) -> list[tuple[int, int, int]]:
@@ -68,54 +72,50 @@ def param_defs(cfg: CNNConfig) -> dict:
     return defs
 
 
-def _fusable_pool(cfg: CNNConfig, i: int, needed: set) -> int | None:
-    """Index of a maxpool fusable into conv ``i``'s epilogue, or None.
-
-    Fusable when the next layer is a maxpool fed by this conv and the
-    raw conv output is not separately consumed (residual / parallel
-    path) — then the pool runs on-chip and its HBM round trip vanishes.
-    """
-    j = i + 1
-    if i in needed or j >= len(cfg.layers):
-        return None
-    nxt = cfg.layers[j]
-    if nxt.kind != "maxpool" or nxt.input_of not in (None, i):
-        return None
-    return j
+@functools.lru_cache(maxsize=128)
+def compile_program(cfg: CNNConfig, batch: int = 1,
+                    hw: HardwareModel = TPU_V5E, *,
+                    paper_faithful: bool = False) -> Program:
+    """graph -> schedule -> regions -> Program, cached per (config, hw,
+    batch).  Every fusion / tiling / storage decision in the returned
+    Program comes from ``compile_model`` — the single source of truth."""
+    dtype_bytes = jax.numpy.dtype(cfg.jdtype).itemsize
+    graph = to_graph(cfg, batch=batch, dtype_bytes=dtype_bytes)
+    schedule = compile_model(graph, hw, paper_faithful=paper_faithful)
+    return lower_to_program(graph, schedule)
 
 
-def forward(params, x, cfg: CNNConfig, *, impl: str = "auto"):
+def forward(params, x, cfg: CNNConfig, *, impl: str = "auto",
+            hw: HardwareModel = TPU_V5E, interpret: bool | None = None):
     """x: (B, H, W, C) -> logits (B, n_classes).
 
-    conv -> maxpool pairs are executed as one fused kernel call (the
-    pool in the conv's epilogue) when the conv output has no other
-    consumer; numerics are identical to the unfused sequence.
+    Compiles the config to a ``Program`` (cached) and executes it; the
+    schedule's fusion and tiling flags drive the kernel calls — this
+    function decides nothing itself.
     """
+    program = compile_program(cfg, batch=x.shape[0], hw=hw)
+    runner = jitted_runner(program, impl=impl, interpret=interpret)
+    return runner(params, x.astype(cfg.jdtype))
+
+
+def reference_forward(params, x, cfg: CNNConfig):
+    """Unfused oracle: every layer as its own reference op, nothing
+    scheduled, every intermediate materialized — the pre-Program
+    semantics the parity tests and benchmarks/program_exec.py compare
+    the compiled Program against.  Not a decision path: it executes the
+    config literally."""
+    from ..kernels.conv2d import avgpool2d_ref, conv2d_ref, maxpool2d_ref
     outputs: dict[int, jax.Array] = {}
-    needed = {l.bypass_of for l in cfg.layers if l.bypass_of is not None}
-    needed |= {l.input_of for l in cfg.layers if l.input_of is not None}
     h = x.astype(cfg.jdtype)
-    fused_pools: set[int] = set()
     for i, layer in enumerate(cfg.layers):
-        if i in fused_pools:
-            continue
         src = outputs[layer.input_of] if layer.input_of is not None else h
         if layer.kind == "conv":
             p = params[f"layer_{i:02d}"]
-            bypass = outputs.get(layer.bypass_of) \
-                if layer.bypass_of is not None else None
-            j = _fusable_pool(cfg, i, needed)
-            fuse_pool = None
-            if j is not None:
-                pool = cfg.layers[j]
-                fuse_pool = (pool.k, pool.stride, pool.pad)
-                fused_pools.add(j)
-            h = conv2d(src, p["w"], stride=layer.stride, pad=layer.pad,
-                       bias=p["b"], activation=layer.activation,
-                       bypass=bypass, bypass_first=layer.bypass_first,
-                       fuse_pool=fuse_pool, impl=impl)
-            if j is not None and j in needed:
-                outputs[j] = h
+            byp = (outputs.get(layer.bypass_of)
+                   if layer.bypass_of is not None else None)
+            h = conv2d_ref(src, p["w"], stride=layer.stride, pad=layer.pad,
+                           bias=p["b"], activation=layer.activation,
+                           bypass=byp, bypass_first=layer.bypass_first)
         elif layer.kind == "maxpool":
             h = maxpool2d_ref(src, window=layer.k, stride=layer.stride,
                               pad=layer.pad)
@@ -124,18 +124,23 @@ def forward(params, x, cfg: CNNConfig, *, impl: str = "auto"):
                               pad=layer.pad)
         elif layer.kind == "fc":
             p = params[f"layer_{i:02d}"]
-            B = src.shape[0]
-            h = src.reshape(B, -1) @ p["w"] + p["b"]
+            h = src.reshape(src.shape[0], -1) @ p["w"] + p["b"]
             if layer.activation == "relu":
                 h = jax.nn.relu(h)
-        if i in needed:
-            outputs[i] = h
+        outputs[i] = h
     return h
 
 
 def to_graph(cfg: CNNConfig, batch: int = 1,
              dtype_bytes: int = 2) -> ModelGraph:
-    """Lower to the compiler IR (paper §5.1 steps 1-2)."""
+    """Lower to the compiler IR (paper §5.1 steps 1-2).
+
+    Pure lowering: dependency labelling and conv->pool fusion are the
+    compiler's job (``mark_residuals`` / ``mark_pool_fusion`` inside
+    ``compile_model``); the nodes carry the geometry and the execution
+    metadata (param group, bypass order, pool window) the Program
+    lowering needs.
+    """
     g = ModelGraph(cfg.name)
     shapes = trace_shapes(cfg)
     prev_name = None
@@ -153,32 +158,23 @@ def to_graph(cfg: CNNConfig, batch: int = 1,
                 dtype_bytes=dtype_bytes, inputs=inputs,
                 bypass_of=names.get(layer.bypass_of)
                 if layer.bypass_of is not None else None,
-                fused_activation=layer.activation))
+                fused_activation=layer.activation,
+                param=f"layer_{i:02d}", bypass_first=layer.bypass_first))
         elif layer.kind in ("maxpool", "avgpool"):
             oh = (h + 2 * layer.pad - layer.k) // layer.stride + 1
             g.add(LayerNode(name=name, kind=LayerKind.POOL,
                             dims={"numel": batch * oh * oh * c},
-                            dtype_bytes=dtype_bytes, inputs=inputs))
+                            dtype_bytes=dtype_bytes, inputs=inputs,
+                            meta={"op": ("avg" if layer.kind == "avgpool"
+                                         else "max"),
+                                  "window": layer.k, "stride": layer.stride,
+                                  "pad": layer.pad}))
         elif layer.kind == "fc":
             g.add(matmul_node(name, batch, h * w * c, layer.c_out,
                               dtype_bytes=dtype_bytes, inputs=inputs,
-                              fused_bias=True))
+                              fused_bias=True,
+                              fused_activation=layer.activation,
+                              param=f"layer_{i:02d}"))
         names[i] = name
         prev_name = name
-    # Record conv->maxpool fusion (mirrors forward()): the pool runs in
-    # the conv's epilogue, so the scheduler shrinks the conv's out
-    # stream and zeroes the pool layer's traffic.
-    needed = {l.bypass_of for l in cfg.layers if l.bypass_of is not None}
-    needed |= {l.input_of for l in cfg.layers if l.input_of is not None}
-    for i, layer in enumerate(cfg.layers):
-        if layer.kind != "conv":
-            continue
-        j = _fusable_pool(cfg, i, needed)
-        if j is None:
-            continue
-        pool = cfg.layers[j]
-        g.get(names[i]).meta["fused_pool"] = {
-            "window": pool.k, "stride": pool.stride, "pad": pool.pad}
-        g.get(names[j]).meta["fused_into"] = names[i]
-    g.mark_residuals()
     return g

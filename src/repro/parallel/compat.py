@@ -1,0 +1,49 @@
+"""jax API compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (keyword
+``check_rep``) to ``jax.shard_map`` (keywords ``axis_names`` /
+``check_vma``).  Every manual-collective call site in this repo goes
+through this wrapper so the repo runs on both sides of the migration.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "axis_size"]
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis inside a manual region.
+
+    ``jax.lax.axis_size`` is the current API; older jax exposes the same
+    number through ``jax.core.axis_frame`` (which returns either the
+    size itself or a frame carrying it, depending on version).
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    frame = jax.core.axis_frame(axis_name)
+    return frame if isinstance(frame, int) else frame.size
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` with the current signature, guarded for older
+    jax.
+
+    On jax with top-level ``jax.shard_map``, forwards ``axis_names`` and
+    ``check_vma`` unchanged.  On older jax the experimental entry point
+    is fully manual over *all* mesh axes and has no ``axis_names``; that
+    is equivalent for our call sites (bodies never reference the
+    unlisted axes and their operands are replicated across them), and
+    ``check_vma`` maps onto the old ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)

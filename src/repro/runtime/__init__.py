@@ -1,2 +1,3 @@
 from .trainer import Trainer, TrainerConfig
-__all__ = ["Trainer", "TrainerConfig"]
+from .executor import jitted_runner, run
+__all__ = ["Trainer", "TrainerConfig", "run", "jitted_runner"]

@@ -1,0 +1,99 @@
+"""Program executor — runs the compiler's instruction stream (§5.2).
+
+The Snowflake accelerator executes exactly what the compiler emitted;
+here the executor walks a ``core/program.py::Program`` and dispatches
+each op to the Pallas kernels with the schedule's *pre-resolved*
+decisions — conv strip tiling, strip storage, loop order, matmul block,
+and the fused epilogue flags.  Nothing is re-derived at run time: the
+executor maintains a region file (region id -> live activation array,
+mirroring the paper's main-memory regions) and feeds each kernel from
+the op's input/bypass regions.
+
+``run`` is functionally pure (params, x -> output) and jit-compatible;
+models wrap it in ``jax.jit`` per (program, impl) via ``jitted_runner``.
+"""
+from __future__ import annotations
+
+import collections
+
+import jax
+
+from ..core.program import Program
+from ..kernels.conv2d import avgpool2d_ref, conv2d, maxpool2d_ref
+from ..kernels.matmul import matmul
+
+__all__ = ["run", "jitted_runner"]
+
+
+def run(program: Program, params, x: jax.Array, *, impl: str = "auto",
+        interpret: bool | None = None) -> jax.Array:
+    """Execute ``program`` against ``params`` on input ``x``.
+
+    x: (B, H, W, C) for the CNN programs.  Returns the final op's
+    output (the array living in ``program.output_region``).
+    """
+    regions: dict[int, jax.Array] = {program.input_region: x}
+    for op in program.ops:
+        src = regions[op.in_region]
+        if op.kernel == "conv2d":
+            p = params[op.param_key]
+            bypass = (regions[op.bypass_region]
+                      if op.fuse_bypass and op.bypass_region is not None
+                      else None)
+            out = conv2d(
+                src, p["w"], stride=op.stride, pad=op.pad,
+                bias=p["b"] if op.fuse_bias else None,
+                activation=op.fuse_activation, bypass=bypass,
+                bypass_first=op.bypass_first, fuse_pool=op.fuse_pool,
+                strip_storage=op.strip_storage or "auto",
+                tiling=op.conv_tiling, dataflow=op.dataflow,
+                impl=impl, interpret=interpret)
+        elif op.kernel == "matmul":
+            p = params[op.param_key]
+            B = src.shape[0]
+            bypass = (regions[op.bypass_region].reshape(B, -1)
+                      if op.fuse_bypass and op.bypass_region is not None
+                      else None)
+            out = matmul(
+                src.reshape(B, -1), p["w"],
+                bias=p["b"] if op.fuse_bias else None,
+                activation=op.fuse_activation, bypass=bypass,
+                dataflow=op.dataflow, block=op.block,
+                impl=impl, interpret=interpret)
+        elif op.kernel == "maxpool":
+            out = maxpool2d_ref(src, window=op.window, stride=op.stride,
+                                pad=op.pad)
+        elif op.kernel == "avgpool":
+            out = avgpool2d_ref(src, window=op.window, stride=op.stride,
+                                pad=op.pad)
+        else:
+            raise NotImplementedError(f"unknown program kernel {op.kernel}")
+        regions[op.out_region] = out
+    return regions[program.output_region]
+
+
+_RUNNERS: "collections.OrderedDict" = collections.OrderedDict()
+_RUNNERS_CAP = 64
+
+
+def jitted_runner(program: Program, impl: str = "auto",
+                  interpret: bool | None = None):
+    """One compiled (jit) executor per Program — the models' fast path.
+
+    Keyed by program identity (a Program holds dicts, so it is not
+    hashable); the cached closure keeps the program alive, so the id
+    cannot be recycled while the entry exists.  LRU-bounded so a
+    long-running server cycling through many (config, hw, batch)
+    variants cannot pin programs + compiled executables forever.
+    """
+    key = (id(program), impl, interpret)
+    fn = _RUNNERS.get(key)
+    if fn is None:
+        def _run(params, x, _program=program):
+            return run(_program, params, x, impl=impl, interpret=interpret)
+        fn = _RUNNERS[key] = jax.jit(_run)
+        while len(_RUNNERS) > _RUNNERS_CAP:
+            _RUNNERS.popitem(last=False)
+    else:
+        _RUNNERS.move_to_end(key)
+    return fn

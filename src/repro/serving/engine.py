@@ -10,6 +10,12 @@ decode_32k / long_500k cells measure).
 Per-slot positions come from the models' per-sequence ``pos`` vector,
 so mixed-progress batches are exact (verified in tests against
 single-request decoding).
+
+CNN workloads take the **program fast path**: a ``CNNConfig`` (or an
+explicit ``program=``) makes the engine stateless — each tick batches
+up to ``slots`` queued image requests and executes the compiled
+``core/program.py::Program`` once through ``runtime/executor.py``, so
+the compiler's schedule is what serves the traffic.
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ArchConfig
+from ..configs.base import CNNConfig
 from ..models import get_model
 
 __all__ = ["Request", "ServingEngine"]
@@ -28,27 +34,39 @@ __all__ = ["Request", "ServingEngine"]
 @dataclass
 class Request:
     uid: int
-    prompt: np.ndarray               # (len,) int32
+    prompt: np.ndarray               # (len,) int32 tokens, or (H, W, C) image
     max_new_tokens: int = 16
     out_tokens: list = field(default_factory=list)
     done: bool = False
 
 
 class ServingEngine:
-    def __init__(self, cfg: ArchConfig, params, *, slots: int = 8,
+    def __init__(self, cfg, params, *, slots: int = 8,
                  max_len: int = 256, eos_id: int | None = None,
-                 impl: str = "auto", greedy: bool = True):
+                 impl: str = "auto", greedy: bool = True, program=None):
         self.cfg = cfg
-        self.api = get_model(cfg)
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos = eos_id
         self.impl = impl
         self.greedy = greedy
-        self.cache = self.api.init_cache(cfg, slots, max_len)
         self.live: dict[int, Request] = {}       # slot -> request
         self.queue: list[Request] = []
+        if program is not None or isinstance(cfg, CNNConfig):
+            # Program fast path (CNN workloads): one compiled Program
+            # per batch size, executed whole per tick — no token cache.
+            from ..models.cnn import compile_program
+            from ..runtime.executor import jitted_runner
+            self.api = None
+            self.cache = None
+            self.program = (program if program is not None
+                            else compile_program(cfg, batch=slots))
+            self._infer = jitted_runner(self.program, impl=impl)
+            return
+        self.program = None
+        self.api = get_model(cfg)
+        self.cache = self.api.init_cache(cfg, slots, max_len)
         self._decode = jax.jit(
             lambda p, c, t: self.api.decode_step(p, c, t, cfg, impl=impl))
 
@@ -108,10 +126,32 @@ class ServingEngine:
         self.cache = jax.tree.map(merge, old_cache, new_cache)
         return logits[slot]
 
+    # -- program fast path (CNN) -------------------------------------------------
+    def _program_step(self) -> list[Request]:
+        """One tick on the program path: batch up to ``slots`` queued
+        images, execute the compiled Program once, retire them all.
+        ``out_tokens`` carries the argmax class id."""
+        if not self.queue:
+            return []
+        batch, self.queue = self.queue[:self.slots], self.queue[self.slots:]
+        images = np.stack([np.asarray(r.prompt) for r in batch])
+        if len(batch) < self.slots:        # pad to the compiled batch
+            pad = np.zeros((self.slots - len(batch),) + images.shape[1:],
+                           images.dtype)
+            images = np.concatenate([images, pad])
+        logits = np.asarray(self._infer(
+            self.params, jnp.asarray(images, self.cfg.jdtype)))
+        for r, lg in zip(batch, logits):
+            r.out_tokens.append(int(np.argmax(lg)))
+            r.done = True
+        return batch
+
     # -- decode ------------------------------------------------------------------
     def step(self) -> list[Request]:
         """One engine tick: admit, decode one token for all live slots,
         retire finished requests.  Returns requests finished this tick."""
+        if self.program is not None:
+            return self._program_step()
         self._admit()
         if not self.live:
             return []

@@ -142,10 +142,13 @@ def test_strip_storage_decision_tpu_vs_snowflake():
 
 
 def test_virtual_traffic_drops_overlap_term():
+    # conv-loop-only accounting (charge_materialization=False): virtual
+    # drops exactly the duplicated-overlap bytes from each loop order.
     maps, weights, out = 1e6, 2e5, 8e5
     k_mat, m_mat = conv_strip_traffic(maps, weights, out, n_map_tiles=8,
                                       n_kernel_tiles=4, overlap_frac=0.25,
-                                      strip_storage="materialized")
+                                      strip_storage="materialized",
+                                      charge_materialization=False)
     k_virt, m_virt = conv_strip_traffic(maps, weights, out, n_map_tiles=8,
                                         n_kernel_tiles=4, overlap_frac=0.25,
                                         strip_storage="virtual")
@@ -155,6 +158,52 @@ def test_virtual_traffic_drops_overlap_term():
     assert conv_strip_traffic(maps, weights, out, n_map_tiles=8,
                               n_kernel_tiles=4, overlap_frac=0.0,
                               strip_storage="materialized") == (k_virt, m_virt)
+
+
+def test_materialization_roundtrip_charged():
+    """Pins the full materialized formula (ROADMAP follow-up from PR 1):
+    building the halo-augmented strips costs a round trip — read the
+    maps once, write the (1 + overlap) augmented copy — on top of the
+    conv's own streams; the virtual path never pays it."""
+    maps, weights, out = 1e6, 2e5, 8e5
+    ov, nm, nk = 0.25, 8, 4
+    k_mat, m_mat = conv_strip_traffic(maps, weights, out, n_map_tiles=nm,
+                                      n_kernel_tiles=nk, overlap_frac=ov,
+                                      strip_storage="materialized")
+    roundtrip = maps + (1 + ov) * maps
+    assert k_mat == pytest.approx(roundtrip + (1 + ov) * maps
+                                  + nm * weights + out)
+    assert m_mat == pytest.approx(roundtrip + nk * (1 + ov) * maps
+                                  + weights + out)
+    # the round trip shifts both loop orders equally: it never flips the
+    # Mloop/Kloop decision
+    df_on, _, _ = choose_conv_dataflow(
+        maps, weights, out, n_map_tiles=nm, n_kernel_tiles=nk,
+        overlap_frac=ov, strip_storage="materialized")
+    df_off, _, _ = choose_conv_dataflow(
+        maps, weights, out, n_map_tiles=nm, n_kernel_tiles=nk,
+        overlap_frac=ov, strip_storage="materialized",
+        charge_materialization=False)
+    assert df_on is df_off
+    # zero overlap needs no augmentation -> no round trip
+    k0, _ = conv_strip_traffic(maps, weights, out, n_map_tiles=nm,
+                               n_kernel_tiles=nk, overlap_frac=0.0,
+                               strip_storage="materialized")
+    assert k0 == pytest.approx(maps + nm * weights + out)
+
+
+def test_schedule_notes_materialize_roundtrip():
+    from repro.core import compile_model, conv_node, ModelGraph
+    g = ModelGraph("one_conv")
+    g.add(conv_node("c", 27, 27, 64, 192, 5, 5, stride=1, pad=2))
+    s = compile_model(g, SNOWFLAKE, paper_faithful=True)
+    ls = s.layer("c")
+    ct = ls.conv_tiling
+    if ct.overlap_frac > 0:
+        maps = 27 * 27 * 64 * 2
+        assert ls.notes["materialize_roundtrip"] == pytest.approx(
+            (2 + ct.overlap_frac) * maps)
+        assert ls.traffic_bytes >= ls.notes["materialize_roundtrip"]
 
 
 def test_choose_conv_dataflow_picks_min():
