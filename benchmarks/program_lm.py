@@ -1,0 +1,74 @@
+"""LM Program-execution benchmark: the compiled transformer Program vs
+the legacy scan forward.
+
+For a dense-LM config this measures
+
+  * wallclock of ``runtime/executor.py`` running the compiled Program
+    (resolved matmul blocks, flash-attention tiles, residual adds fused
+    into the projection writebacks) vs the legacy ``jax.lax.scan``
+    forward — both jitted, both on the reference kernels so the
+    comparison is schedule-vs-schedule, not Mosaic-vs-interpreter;
+  * the schedule's modeled traffic for the Program vs the graph's
+    unfused per-op minimum-bytes sum;
+
+and checks the two paths agree numerically (the PR-3 parity bound).
+
+Smoke mode shrinks depth/shape so CI stays fast; the full run uses the
+smollm-360m smoke config at serving-like shapes.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY
+from repro.models import init_params, transformer
+from repro.runtime import executor
+
+from .common import emit, time_call
+
+SMOKE = False          # set by benchmarks.run --smoke
+
+
+def run():
+    cfg = REGISTRY["smollm-360m"].smoke()
+    shapes = [(1, 32)] if SMOKE else [(2, 64), (4, 128)]
+    if SMOKE:
+        cfg = dataclasses.replace(cfg, name=cfg.name + "-bench",
+                                  n_layers=2)
+    params = init_params(transformer.param_defs(cfg), jax.random.PRNGKey(0))
+    for batch, seq in shapes:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq),
+                                  0, cfg.vocab)
+
+        program = transformer.compile_program(cfg, batch=batch, seq=seq)
+        prog_fn = executor.jitted_runner(program, impl="reference")
+        legacy_fn = jax.jit(functools.partial(
+            lambda p, t, cfg: transformer.forward(
+                p, t, cfg, impl="reference")["logits"], cfg=cfg))
+
+        err = float(jnp.abs(prog_fn(params, toks)
+                            - legacy_fn(params, toks)).max())
+        warmup, iters = (1, 3) if SMOKE else (2, 7)
+        t_prog = time_call(prog_fn, params, toks, warmup=warmup, iters=iters)
+        t_leg = time_call(legacy_fn, params, toks, warmup=warmup,
+                          iters=iters)
+
+        graph = transformer.to_graph(cfg, batch=batch, seq=seq)
+        unfused = graph.total_min_bytes()
+        tag = f"{cfg.name}/b{batch}s{seq}"
+        emit(f"program_lm/{tag}/wallclock", t_prog,
+             f"legacy_us={t_leg:.2f};"
+             f"program_over_legacy={t_prog / max(t_leg, 1e-9):.3f};"
+             f"err={err:.2e}")
+        emit(f"program_lm/{tag}/traffic", 0.0,
+             f"program_mb={program.total_traffic_bytes / 1e6:.2f};"
+             f"unfused_min_mb={unfused / 1e6:.2f};"
+             f"ops={len(program.ops)};"
+             f"regions={len(program.plan.regions)};"
+             f"region_mb={program.plan.total_bytes / 1e6:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -17,7 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig4_loop_rearrangement, kernels_wallclock,
-                   program_exec, quant_profile, strip_storage,
+                   program_exec, program_lm, quant_profile, strip_storage,
                    table1_auto_vs_hand, table2_models, table3_load_balance)
     suites = [
         ("table1", table1_auto_vs_hand),
@@ -26,12 +26,14 @@ def main() -> None:
         ("table3", table3_load_balance),
         ("strips", strip_storage),
         ("program", program_exec),
+        ("program_lm", program_lm),
         ("quant", quant_profile),
         ("kernels", kernels_wallclock),
     ]
     if args.smoke:
         strip_storage.SMOKE = True
         program_exec.SMOKE = True
+        program_lm.SMOKE = True
         # drop the wallclock-heavy suites; keep every modeled one
         suites = [s for s in suites if s[0] not in ("kernels", "quant")]
     print("name,us_per_call,derived")

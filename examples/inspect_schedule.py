@@ -1,12 +1,15 @@
 """Schedule inspection: what the compiler decided, per layer.
 
-    PYTHONPATH=src python examples/inspect_schedule.py [--model resnet18]
+    PYTHONPATH=src python examples/inspect_schedule.py \
+        [--model resnet18] [--arch smollm-360m] [--seq 16]
 
 Prints the per-layer Mloop/Kloop choices, tile shapes, traffic and the
 Fig-4-style bandwidth table for one of the paper's CNNs, the executable
 Program the schedule lowers to (the paper-style instruction trace with
-§5.1 memory-region ids), then the distributed-level decisions for an
-assigned LM architecture.
+§5.1 memory-region ids), the LM arch's Program lowering (its smoke
+config — dense families only), then the distributed-level decisions
+for the assigned LM architecture.  The listings in docs/ARCHITECTURE.md
+are this script's output.
 """
 import argparse
 import sys
@@ -23,6 +26,8 @@ from repro.parallel.rules import make_plan
 ap = argparse.ArgumentParser()
 ap.add_argument("--model", default="resnet18")
 ap.add_argument("--arch", default="llama3-8b")
+ap.add_argument("--seq", type=int, default=16,
+                help="sequence length for the LM Program listing")
 args = ap.parse_args()
 
 g = to_graph(CNN_REGISTRY[args.model], batch=1)
@@ -46,7 +51,22 @@ print(f"\n== {args.model} Program (TPU v5e schedule) ==")
 print(compile_program(CNN_REGISTRY[args.model], batch=1,
                       hw=TPU_V5E).listing())
 
+# The LM families lower to Programs too (PR 3): the transformer graph
+# (embed -> blocks -> lm head, residual adds fused into the projection
+# writebacks) runs the same schedule -> regions -> instruction-stream
+# pipeline.  Listed on the smoke config to keep the trace one page.
 cfg = get_config(args.arch)
+try:
+    from repro.models import transformer
+    lm_smoke = cfg.smoke()
+    prog = transformer.compile_program(lm_smoke, batch=1, seq=args.seq)
+    print(f"\n== {lm_smoke.name} Program (batch 1 x seq {args.seq}, "
+          f"TPU v5e schedule) ==")
+    print(prog.listing())
+except NotImplementedError as e:
+    print(f"\n== no LM Program lowering: {e} ==")
+
+print()
 for shape in cfg.shapes():
     plan = make_plan(cfg, shape, SINGLE_POD, "auto")
     keys = {k: v for k, v in plan.decisions.items()

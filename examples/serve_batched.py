@@ -3,11 +3,14 @@
     PYTHONPATH=src python examples/serve_batched.py [--arch rwkv6-7b]
 
 Works with any assigned architecture (KV-cache archs get rolling
-windows; SSM archs carry O(1) state).
+windows; SSM archs carry O(1) state).  Dense transformer archs route
+through the compiled ``Program`` fast path — the engine executes the
+compiler's instruction stream per tick; families without a Program
+lowering fall back to the legacy scan decode automatically.
 """
 import sys
 
 sys.path.insert(0, "src")
 from repro.launch import serve as serve_driver
 
-serve_driver.main(sys.argv[1:] + ["--smoke"])
+serve_driver.main(sys.argv[1:] + ["--smoke", "--program"])

@@ -9,6 +9,11 @@ which trains a 12-layer/512-dim (~100M with embeddings) smollm-family
 model for 300 steps on the synthetic stream, checkpointing + auto-
 resuming via the fault-tolerant runtime (kill it mid-run and rerun to
 see the resume).
+
+After training, the trained parameters are evaluated through the
+**compiled Program** (graph -> schedule -> regions -> instruction
+stream, docs/ARCHITECTURE.md): the same path that serves traffic, not
+the legacy scan forward.
 """
 import argparse
 import dataclasses
@@ -33,10 +38,30 @@ if args.full:
         base, name="smollm-100m", n_layers=12, d_model=512, n_heads=8,
         n_kv_heads=4, head_dim=64, d_ff=1536, dtype="float32")
     C.REGISTRY["smollm-100m"] = cfg100m
-    train_driver.main(["--arch", "smollm-100m", "--steps", "300",
-                       "--batch", "8", "--seq", "256",
-                       "--ckpt-dir", args.ckpt_dir])
+    cfg, params = train_driver.main(
+        ["--arch", "smollm-100m", "--steps", "300",
+         "--batch", "8", "--seq", "256", "--ckpt-dir", args.ckpt_dir])
 else:
-    train_driver.main(["--arch", "smollm-360m", "--smoke",
-                       "--steps", "120", "--batch", "8", "--seq", "64",
-                       "--ckpt-dir", args.ckpt_dir])
+    cfg, params = train_driver.main(
+        ["--arch", "smollm-360m", "--smoke",
+         "--steps", "120", "--batch", "8", "--seq", "64",
+         "--ckpt-dir", args.ckpt_dir])
+
+# --- eval through the compiled Program (the serving path) ---------------------
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM
+from repro.models import cross_entropy_loss
+from repro.models.transformer import compile_program, program_forward
+
+eval_seq, eval_batch = 64, 4
+program = compile_program(cfg, batch=eval_batch, seq=eval_seq)
+print(f"\neval via {program.listing().splitlines()[0]}")
+batch = SyntheticLM(vocab=cfg.vocab, seq_len=eval_seq,
+                    global_batch=eval_batch, seed=1).batch_at(10_000)
+logits = program_forward(params, jnp.asarray(batch["tokens"]), cfg,
+                         impl="reference")
+loss = cross_entropy_loss(logits, jnp.asarray(batch["labels"]))
+print(f"program-path eval loss on held-out synthetic batch: "
+      f"{float(loss):.4f}")

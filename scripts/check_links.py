@@ -1,0 +1,51 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo markdown links (CI docs job).
+
+Scans README.md and docs/*.md for ``[text](target)`` links, skips
+external schemes and pure in-page anchors, resolves each remaining
+target relative to the file that contains it (dropping any ``#anchor``
+fragment), and exits non-zero listing every target that does not exist.
+
+    python scripts/check_links.py [root]
+
+Stdlib-only on purpose: the docs job runs it before installing jax.
+"""
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP = ("http://", "https://", "mailto:", "#")
+
+
+def links_in(path: Path):
+    for m in LINK.finditer(path.read_text()):
+        target = m.group(1)
+        if target.startswith(SKIP):
+            continue
+        yield target
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    files = sorted([root / "README.md", *(root / "docs").glob("*.md")])
+    broken, checked = [], 0
+    for f in files:
+        if not f.exists():
+            continue
+        for target in links_in(f):
+            checked += 1
+            resolved = (f.parent / target.split("#", 1)[0]).resolve()
+            if not resolved.exists():
+                broken.append(f"{f}: {target}")
+    if broken:
+        print(f"{len(broken)} broken intra-repo link(s):")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"ok: {checked} intra-repo links across {len(files)} files")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

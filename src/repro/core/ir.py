@@ -26,6 +26,10 @@ __all__ = [
     "ModelGraph",
     "matmul_node",
     "conv_node",
+    "attention_node",
+    "norm_node",
+    "embed_node",
+    "elementwise_node",
     "pool_out",
 ]
 
@@ -135,8 +139,19 @@ class LayerNode:
             q = b * h * d["seq_q"] * hd * by
             kv = 2 * b * kvh * d["seq_kv"] * hd * by
             return {"maps": q + kv, "weights": 0.0, "out": q}
+        if k is LayerKind.EMBED:
+            # maps: the int32 token ids; weights: the gathered rows (one
+            # table row per token, not the whole table); out: the dense
+            # activations the rest of the chain consumes.
+            toks = d.get("tokens", d.get("numel", 0))
+            dm = d.get("d_model", 1)
+            return {"maps": toks * 4.0,
+                    "weights": toks * dm * by,
+                    "out": toks * dm * by}
         n = float(d.get("numel", 0))
-        return {"maps": n * by, "weights": 0.0, "out": n * by}
+        # Binary elementwise ops (GLU mul) stream both operands.
+        reads = max(len(self.inputs), 1) if k is LayerKind.ELEMENTWISE else 1
+        return {"maps": reads * n * by, "weights": 0.0, "out": n * by}
 
     def min_bytes(self) -> float:
         return sum(self.operand_bytes().values())
@@ -270,6 +285,46 @@ def matmul_node(name: str, M: int, K: int, N: int, *, dtype_bytes: int = 2,
         dims={"M": M, "K": K, "N": N}, dtype_bytes=dtype_bytes,
         inputs=inputs or [], bypass_of=bypass_of, fused_bias=fused_bias,
         fused_activation=fused_activation, meta=meta)
+
+
+def attention_node(name: str, *, seq_q: int, seq_kv: int, heads: int,
+                   kv_heads: int, head_dim: int, batch: int = 1,
+                   causal: bool = True, dtype_bytes: int = 2,
+                   inputs: list[str] | None = None, **meta) -> LayerNode:
+    """Softmax-attention node; ``inputs`` is [q, k, v] producer names."""
+    return LayerNode(
+        name=name, kind=LayerKind.ATTENTION,
+        dims={"seq_q": seq_q, "seq_kv": seq_kv, "heads": heads,
+              "kv_heads": kv_heads, "head_dim": head_dim, "batch": batch,
+              "causal": causal},
+        dtype_bytes=dtype_bytes, inputs=inputs or [], meta=meta)
+
+
+def norm_node(name: str, numel: int, *, dtype_bytes: int = 2,
+              inputs: list[str] | None = None, **meta) -> LayerNode:
+    return LayerNode(name=name, kind=LayerKind.NORM,
+                     dims={"numel": numel}, dtype_bytes=dtype_bytes,
+                     inputs=inputs or [], meta=meta)
+
+
+def embed_node(name: str, tokens: int, vocab: int, d_model: int, *,
+               dtype_bytes: int = 2, **meta) -> LayerNode:
+    """Token-embedding gather; reads the model input (int32 token ids)."""
+    return LayerNode(name=name, kind=LayerKind.EMBED,
+                     dims={"tokens": tokens, "vocab": vocab,
+                           "d_model": d_model},
+                     dtype_bytes=dtype_bytes, meta=meta)
+
+
+def elementwise_node(name: str, op: str, numel: int, *,
+                     dtype_bytes: int = 2,
+                     inputs: list[str] | None = None, **meta) -> LayerNode:
+    """Binary elementwise op (``op``: "mul" | "add") on two inputs —
+    the GLU gating multiply is the LM lowering's only standalone one
+    (residual adds fuse into the producing matmul's writeback)."""
+    return LayerNode(name=name, kind=LayerKind.ELEMENTWISE,
+                     dims={"numel": numel}, dtype_bytes=dtype_bytes,
+                     inputs=inputs or [], meta={"op": op, **meta})
 
 
 def conv_node(name: str, H: int, W: int, C_in: int, C_out: int, kh: int,

@@ -7,9 +7,11 @@ dependency labels and emits the instruction stream Snowflake executes.
 This module is that last lowering step for us: a ``Program`` is an
 ordered list of ``ProgramOp``s, each carrying
 
-* the kernel id to dispatch (conv2d / matmul / maxpool / avgpool),
-* the *resolved* schedule for that op — ``ConvTiling`` or matmul block,
-  loop order, strip storage — so the kernels recompute nothing,
+* the kernel id to dispatch (conv2d / matmul / maxpool / avgpool for
+  the CNN families; embed / norm / flash_attention / mul for the LM
+  families),
+* the *resolved* schedule for that op — ``ConvTiling``, matmul block,
+  or attention (block_q, block_kv) — so the kernels recompute nothing,
 * the fusion epilogue (bias, activation, residual bypass, fused pool),
   exactly the paper's VMOV-on-writeback flags,
 * input / output / bypass *memory-region* ids from the §5.1 region
@@ -18,6 +20,21 @@ ordered list of ``ProgramOp``s, each carrying
 ``runtime/executor.py`` executes a Program against parameters; the
 models compile once (cached) and run it, so every scheduler improvement
 is automatically an execution improvement, never just a report.
+
+Invariants (relied on by the executor, the tests and the docs):
+
+* **Ops never re-derive tilings.**  Every schedule-shaped field on a
+  ``ProgramOp`` (conv_tiling, block, strip_storage, dataflow, attention
+  blocks) is resolved here, from the ``ModelSchedule``, at lowering
+  time.  The executor passes them through verbatim; a kernel falling
+  back to its own heuristics is a lowering bug, not a feature.
+* **Region ids are allocator-owned.**  ``in_region`` / ``out_region``
+  / ``bypass_region`` / ``k_region`` / ``v_region`` / ``in2_region``
+  come exclusively from the §5.1 ``RegionPlan``; this module only maps
+  producer names to the allocator's ids and never invents one.
+* **``listing()`` is stable.**  For a fixed (graph, hw, batch) the
+  listing is a deterministic function of the schedule — docs and CI
+  reproduce it verbatim via ``examples/inspect_schedule.py``.
 """
 from __future__ import annotations
 
@@ -29,18 +46,54 @@ from .regions import RegionPlan, allocate_regions
 from .schedule import LayerSchedule, ModelSchedule
 from .tiling import ConvTiling
 
-__all__ = ["ProgramOp", "Program", "lower_to_program"]
+__all__ = ["AttentionSpec", "ProgramOp", "Program", "lower_to_program"]
+
+
+@dataclass(frozen=True)
+class AttentionSpec:
+    """Resolved geometry + schedule of one ``flash_attention`` op.
+
+    Fields:
+
+    * ``heads`` / ``kv_heads`` / ``head_dim`` — the projection layout;
+      the executor reshapes the flat (B, S, heads*head_dim) q region
+      (and the KV analogues) into per-head layout with these, so the
+      kernel never consults the model config.
+    * ``causal`` — decoder-LM causal masking (fixed at lowering).
+    * ``window`` — causal sliding-window size, or None for full.
+    * ``rope_theta`` — rotary base; the executor applies RoPE to q/k
+      before the kernel when set, 0.0 disables it (e.g. learned
+      absolute positions).
+    * ``block_q`` / ``block_kv`` — the compiler's T2 score-loop tiles
+      (core/tiling.py::select_attention_blocks), pinned so the kernel
+      wrapper re-derives nothing at run time.
+    """
+
+    heads: int
+    kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int | None = None
+    rope_theta: float = 0.0
+    block_q: int = 128
+    block_kv: int = 128
 
 
 @dataclass(frozen=True)
 class ProgramOp:
     index: int                       # position in the instruction stream
     name: str                        # source layer name
-    kernel: str                      # "conv2d" | "matmul" | "maxpool" | "avgpool"
+    # "conv2d" | "matmul" | "maxpool" | "avgpool"
+    #   | "embed" | "norm" | "flash_attention" | "mul"
+    kernel: str
     in_region: int
     out_region: int
-    param_key: str | None = None     # params[...] group ("layer_03")
+    param_key: str | None = None     # params path ("layer_03", "blocks/wq:3")
+    param_key_b: str | None = None   # secondary param (layernorm bias)
     bypass_region: int | None = None
+    k_region: int | None = None      # flash_attention: K producer's region
+    v_region: int | None = None      # flash_attention: V producer's region
+    in2_region: int | None = None    # mul: second operand's region
     # geometry
     stride: int = 1
     pad: int = 0
@@ -56,6 +109,11 @@ class ProgramOp:
     dataflow: Dataflow | None = None
     conv_tiling: ConvTiling | None = None
     block: tuple[int, int, int] | None = None
+    attn: AttentionSpec | None = None               # flash_attention only
+    # op-shape details
+    norm_kind: str | None = None     # "rmsnorm" | "layernorm" | "nonparametric"
+    flatten_input: bool = False      # CNN fc: (B,H,W,C) -> (B, H*W*C)
+    transpose_w: bool = False        # tied lm_head: use embed table W^T
     # modeled cost, carried for the listing / benchmarks
     flops: float = 0.0
     traffic_bytes: float = 0.0
@@ -63,6 +121,13 @@ class ProgramOp:
     def trace(self) -> str:
         """One paper-style instruction-trace line."""
         io = f"r{self.in_region}->r{self.out_region}"
+        if self.kernel == "flash_attention":
+            io = (f"r{self.in_region},r{self.k_region},r{self.v_region}"
+                  f"->r{self.out_region}")
+        elif self.kernel in ("mul", "add"):
+            sym = "*" if self.kernel == "mul" else "+"
+            io = (f"r{self.in_region}{sym}r{self.in2_region}"
+                  f"->r{self.out_region}")
         if self.bypass_region is not None:
             io += f"+r{self.bypass_region}"
         sched = ""
@@ -75,8 +140,19 @@ class ProgramOp:
         elif self.kernel == "matmul" and self.block is not None:
             order = self.dataflow.value if self.dataflow else "?"
             sched = f"{order} block={'x'.join(map(str, self.block))}"
+            if self.transpose_w:
+                sched += " W^T"
         elif self.kernel in ("maxpool", "avgpool"):
             sched = f"win={self.window} stride={self.stride}"
+        elif self.kernel == "flash_attention" and self.attn is not None:
+            a = self.attn
+            sched = (f"h={a.heads}/{a.kv_heads}x{a.head_dim} "
+                     f"bq={a.block_q} bkv={a.block_kv}"
+                     f"{' causal' if a.causal else ''}"
+                     f"{f' win={a.window}' if a.window else ''}"
+                     f"{' rope' if a.rope_theta else ''}")
+        elif self.kernel == "norm":
+            sched = self.norm_kind or ""
         epi = "".join(
             [" +bias" if self.fuse_bias else "",
              f" +{self.fuse_activation}" if self.fuse_activation else "",
@@ -184,15 +260,44 @@ def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
                 fuse_bypass=ls.fuse_bypass,
                 bypass_region=(plan.out_region[node.bypass_of]
                                if node.bypass_of else None),
+                flatten_input=node.meta.get("flatten_input", False),
+                transpose_w=node.meta.get("transpose_w", False),
                 dataflow=ls.dataflow, block=ls.block, **common))
         elif node.kind is LayerKind.POOL:
             m = node.meta
             ops.append(ProgramOp(
                 kernel=_pool_kernel(node), window=m.get("window", 1),
                 stride=m.get("stride", 1), pad=m.get("pad", 0), **common))
+        elif node.kind is LayerKind.EMBED:
+            ops.append(ProgramOp(kernel="embed", **common))
+        elif node.kind is LayerKind.NORM:
+            ops.append(ProgramOp(
+                kernel="norm", norm_kind=node.meta.get("norm", "rmsnorm"),
+                param_key_b=node.meta.get("param_b"), **common))
+        elif node.kind is LayerKind.ATTENTION:
+            d = node.dims
+            ops.append(ProgramOp(
+                kernel="flash_attention",
+                k_region=plan.out_region[node.inputs[1]],
+                v_region=plan.out_region[node.inputs[2]],
+                attn=AttentionSpec(
+                    heads=d["heads"], kv_heads=d["kv_heads"],
+                    head_dim=d["head_dim"],
+                    causal=ls.notes.get("causal", True),
+                    window=ls.notes.get("window"),
+                    rope_theta=node.meta.get("rope_theta", 0.0),
+                    block_q=ls.notes.get("block_q", 128),
+                    block_kv=ls.notes.get("block_kv", 128)),
+                **common))
+        elif (node.kind is LayerKind.ELEMENTWISE
+              and node.meta.get("op") in ("mul", "add")):
+            ops.append(ProgramOp(
+                kernel=node.meta["op"],
+                in2_region=plan.out_region[node.inputs[1]], **common))
         else:
             raise NotImplementedError(
                 f"no program lowering for {node.kind} ({node.name}); "
-                f"Program currently covers the paper's CNN layer kinds")
+                f"Program covers the CNN layer kinds and the dense-LM "
+                f"op vocabulary (embed/norm/flash_attention/matmul/mul)")
     return Program(name=graph.name, hw_name=schedule.hw_name,
                    ops=tuple(ops), plan=plan)

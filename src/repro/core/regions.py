@@ -14,6 +14,21 @@ consumer distances, reuses pinned regions after their last read, and
 sizes every region at the largest output it ever holds.  The resulting
 ``RegionPlan`` is embedded in the executable ``Program``
 (core/program.py) and drives the executor's region file.
+
+Invariants:
+
+* **Region ids are allocator-owned.**  This function is the only
+  place a region id is ever minted; the Program lowering maps producer
+  names to these ids and the executor keys its region file by them.
+  No other module may invent, renumber or alias a region.
+* The allocator is label-agnostic at assignment time: pinning follows
+  *consumer distances* in the executed op order, so any graph shape —
+  ResNet shortcuts, the transformer residual stream, QKV fan-outs —
+  is handled by the same rule (read past the next op => pinned until
+  one step after the last read, then the region is reused).
+* Pinned-region reuse keeps the footprint depth-independent for
+  repeated structures: a dense transformer needs 2 ping-pong + 4
+  pinned regions regardless of layer count.
 """
 from __future__ import annotations
 

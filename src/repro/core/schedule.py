@@ -31,7 +31,8 @@ from .dataflow import (Dataflow, DataflowDecision, DistDecision,
 from .hw import HardwareModel, MeshDescriptor, TPU_V5E
 from .ir import DepLabel, LayerKind, LayerNode, ModelGraph, _conv_out, pool_out
 from .regions import allocate_regions
-from .tiling import ConvTiling, select_conv_row_strips
+from .tiling import (ConvTiling, select_attention_blocks,
+                     select_conv_row_strips)
 
 __all__ = ["LayerSchedule", "ModelSchedule", "compile_model"]
 
@@ -211,6 +212,27 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
         exec_time_s=t_exec, notes=notes)
 
 
+def _schedule_attention(node: LayerNode, hw: HardwareModel) -> LayerSchedule:
+    """Flash-attention schedule: the (block_q, block_kv) tile pair is a
+    compiler decision (T2 on the score loop), pinned into the Program so
+    the kernel wrapper never re-derives it at run time."""
+    d = node.dims
+    bq, bkv = select_attention_blocks(d["seq_q"], d["seq_kv"],
+                                      d["head_dim"], node.dtype_bytes, hw)
+    flops = node.flops()
+    traffic = node.min_bytes()
+    notes = {"block_q": bq, "block_kv": bkv,
+             "causal": bool(d.get("causal", True))}
+    if node.meta.get("window"):
+        notes["window"] = node.meta["window"]
+    return LayerSchedule(
+        name=node.name, kind=node.kind, dataflow=None, block=None,
+        conv_tiling=None, fuse_bias=False, fuse_activation=None,
+        fuse_bypass=node.dep is DepLabel.RESIDUAL_SINK, dist=None,
+        traffic_bytes=traffic, flops=flops, bookkeeping_ratio=0.0,
+        exec_time_s=hw.exec_time(flops, traffic), notes=notes)
+
+
 def _schedule_other(node: LayerNode, hw: HardwareModel, *,
                     fused: bool = False) -> LayerSchedule:
     flops = node.flops()
@@ -279,6 +301,8 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
         elif node.kind is LayerKind.CONV2D:
             layers.append(_schedule_conv(node, hw, paper_faithful,
                                          charge_materialization))
+        elif node.kind is LayerKind.ATTENTION:
+            layers.append(_schedule_attention(node, hw))
         else:
             # A pool is only free if its producer conv actually fused
             # it (recorded in the conv's schedule notes — requires the

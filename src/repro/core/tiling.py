@@ -31,6 +31,7 @@ __all__ = [
     "select_matmul_tiles",
     "ConvTiling",
     "select_conv_row_strips",
+    "select_attention_blocks",
     "virtual_strips_fit",
 ]
 
@@ -131,6 +132,32 @@ def select_matmul_tiles(M: int, K: int, N: int, dtype_bytes: int,
                     best = (cost, cand)
     assert best is not None, "no feasible tiling (VMEM too small?)"
     return best[1]
+
+
+# --- attention blocks -------------------------------------------------------------
+def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
+                            hw: HardwareModel) -> tuple[int, int]:
+    """Pick (block_q, block_kv) for flash attention — T2 applied to the
+    attention score loop: the q tile, double-buffered k+v tiles, the f32
+    accumulator and the (bq, bkv) score tile must fit the VMEM budget.
+    This is the compiler's decision; the flash kernel wrapper
+    (kernels/flash_attention/ops.py) defers to it, and the LM Program
+    lowering pins the result into each ``flash_attention`` op."""
+    budget = hw.vmem_budget()
+    best = (hw.lane, hw.lane)
+    for bq in (128, 256, 512, 1024, 2048):
+        if bq > max(Sq, 128):
+            break
+        for bkv in (128, 256, 512, 1024, 2048):
+            if bkv > max(Skv, 128):
+                break
+            use = (bq * D * dtype_bytes                 # q tile
+                   + 2 * 2 * bkv * D * dtype_bytes      # k+v double-buffered
+                   + bq * D * 4 + 2 * bq * 128 * 4      # acc + m/l scratch
+                   + bq * bkv * 4)                      # score tile
+            if use <= budget:
+                best = (bq, bkv)
+    return best
 
 
 # --- conv row strips --------------------------------------------------------------

@@ -56,23 +56,11 @@ _flash_trainable.defvjp(_ft_fwd, _ft_bwd)
 def attention_block_sizes(Sq: int, Skv: int, D: int, dtype_bytes: int,
                           hw: HardwareModel = TPU_V5E) -> tuple[int, int]:
     """Pick (block_q, block_kv) so the working set fits the VMEM budget
-    (T2 applied to attention): q + 2x(k+v) double-buffered + f32 acc +
-    the (bq, bkv) score tile."""
-    budget = hw.vmem_budget()
-    best = (hw.lane, hw.lane)
-    for bq in (128, 256, 512, 1024, 2048):
-        if bq > max(Sq, 128):
-            break
-        for bkv in (128, 256, 512, 1024, 2048):
-            if bkv > max(Skv, 128):
-                break
-            use = (bq * D * dtype_bytes                 # q tile
-                   + 2 * 2 * bkv * D * dtype_bytes      # k+v double-buffered
-                   + bq * D * 4 + 2 * bq * 128 * 4      # acc + m/l scratch
-                   + bq * bkv * 4)                      # score tile
-            if use <= budget:
-                best = (bq, bkv)
-    return best
+    (T2 applied to attention).  The decision lives in the compiler
+    (core/tiling.py::select_attention_blocks) — one chooser shared by
+    this wrapper and the LM Program lowering."""
+    from ...core.tiling import select_attention_blocks
+    return select_attention_blocks(Sq, Skv, D, dtype_bytes, hw)
 
 
 def flash_attention(q, k, v, *, scale: float | None = None,

@@ -8,6 +8,14 @@ requests through the compiled-Program fast path:
 
     PYTHONPATH=src python -m repro.launch.serve --arch alexnet-owt \
         --slots 2 --requests 4
+
+Dense LM archs (smollm-360m / llama3-8b class) can serve token
+requests through the same compiled-Program machinery — the engine
+executes the transformer's instruction stream per tick instead of the
+legacy scan decode:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --smoke --program --requests 4 --max-new 8
 """
 from __future__ import annotations
 
@@ -58,6 +66,10 @@ def main(argv=None) -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint dir to load params from")
+    ap.add_argument("--program", action="store_true",
+                    help="serve LM tokens through the compiled Program "
+                         "(dense family; falls back to legacy decode "
+                         "where no lowering exists)")
     args = ap.parse_args(argv)
 
     if args.arch in CNN_REGISTRY:
@@ -74,8 +86,19 @@ def main(argv=None) -> None:
         (params, _), step = restore_checkpoint(args.ckpt, (params, {}))
         print(f"restored params from step {step}")
 
+    use_program = args.program
+    if use_program:
+        try:
+            from ..models.transformer import compile_program
+            compile_program(cfg, batch=args.slots, seq=args.max_len)
+        except NotImplementedError as e:
+            print(f"program path unavailable: {e}; using legacy decode")
+            use_program = False
+
     eng = ServingEngine(cfg, params, slots=args.slots,
-                        max_len=args.max_len)
+                        max_len=args.max_len, use_program=use_program)
+    if eng.program is not None:
+        print(eng.program.listing().splitlines()[0])
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):

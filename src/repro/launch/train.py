@@ -29,7 +29,7 @@ from ..core.hw import MeshDescriptor
 from .mesh import make_mesh_from_descriptor
 
 
-def main(argv=None) -> None:
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--smoke", action="store_true",
@@ -86,6 +86,7 @@ def main(argv=None) -> None:
     print(f"finished at step {step}; "
           f"last loss {trainer.metrics_history[-1]['loss']:.4f}"
           if trainer.metrics_history else "no steps ran")
+    return cfg, params
 
 
 if __name__ == "__main__":

@@ -174,7 +174,7 @@ def to_graph(cfg: CNNConfig, batch: int = 1,
                               dtype_bytes=dtype_bytes, inputs=inputs,
                               fused_bias=True,
                               fused_activation=layer.activation,
-                              param=f"layer_{i:02d}"))
+                              param=f"layer_{i:02d}", flatten_input=True))
         names[i] = name
         prev_name = name
     return g

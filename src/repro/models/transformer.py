@@ -7,9 +7,18 @@ Layers are stacked on a leading "layers" axis and run under
 All matmul-shaped compute routes through kernels/ (schedule-driven
 Pallas on TPU, reference on CPU); attention through the flash /
 decode_attention kernels.
+
+The dense family additionally lowers to the compiler pipeline exactly
+like the CNNs (models/cnn.py): ``to_graph`` emits the layer graph
+(embed -> N x {norm, qkv matmuls, flash attention, o-proj, MLP matmul
+chain} -> final norm -> lm head) with the residual adds fused into the
+o-/down-projection writebacks, ``compile_program`` runs it through
+graph -> schedule -> regions -> Program, and ``program_forward``
+executes the instruction stream through runtime/executor.py.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any
 
@@ -17,6 +26,11 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core.hw import TPU_V5E, HardwareModel
+from ..core.ir import (ModelGraph, attention_node, elementwise_node,
+                       embed_node, matmul_node, norm_node)
+from ..core.program import Program, lower_to_program
+from ..core.schedule import compile_model
 from ..kernels.decode_attention import decode_attention
 from ..kernels.flash_attention import flash_attention
 from ..kernels.common import apply_activation
@@ -24,7 +38,8 @@ from ..parallel.act_sharding import shard_act
 from .common import (ParamDef, Rotary, apply_rope, layer_norm, rms_norm)
 from .moe import moe_mlp
 
-__all__ = ["param_defs", "forward", "init_cache", "decode_step"]
+__all__ = ["param_defs", "forward", "init_cache", "decode_step",
+           "to_graph", "compile_program", "program_forward"]
 
 
 # --- parameter declaration -------------------------------------------------------
@@ -322,6 +337,127 @@ def _cross_kv(params, cfg, vis):
     def one(p):
         return _heads(vis @ p["wk"], KV, hd), _heads(vis @ p["wv"], KV, hd)
     return jax.vmap(one)(params["cross_blocks"])   # (G, B, KV, Tv, hd)
+
+
+# --- compile-to-Program lowering (dense family) -----------------------------------
+def _require_dense(cfg: ArchConfig) -> None:
+    if (cfg.family != "dense" or cfg.n_experts or cfg.cross_attn_every
+            or cfg.n_encoder_layers or cfg.shared_attn_every):
+        raise NotImplementedError(
+            f"Program lowering covers the dense transformer family; "
+            f"{cfg.name} ({cfg.family}) still runs the scan forward")
+
+
+def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
+             dtype_bytes: int | None = None) -> ModelGraph:
+    """Lower a dense-transformer config to the compiler IR (§5.1
+    steps 1-2), mirroring ``forward``'s op-for-op structure:
+
+        embed -> N x [attn_norm, wq|wk|wv, flash_attention, wo(+resid),
+                      mlp_norm, w_gate|w_up, mul, w_down(+resid)]
+              -> final_norm -> lm_head
+
+    Residual adds are not standalone ops: each block's two adds ride
+    the o-projection / down-projection writeback (``bypass_of``, the
+    paper's VMOV-on-writeback), which is what makes the residual stream
+    a RESIDUAL_SOURCE the §5.1 allocator pins across the block.  Param
+    paths point into the stacked parameter tree ("blocks/wq:3")."""
+    _require_dense(cfg)
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    D, H, KV, hd, F = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
+    M = batch * seq
+
+    def norm_meta(param: str | None) -> dict:
+        meta = {"norm": cfg.norm}
+        if cfg.norm != "nonparametric" and param is not None:
+            meta["param"] = param
+            if cfg.norm == "layernorm":
+                meta["param_b"] = (param + "_b" if ":" not in param else
+                                   param.replace(":", "_b:", 1))
+        return meta
+
+    g = ModelGraph(cfg.name)
+    g.add(embed_node("embed", M, cfg.vocab, D, dtype_bytes=by,
+                     param="embed"))
+    resid = "embed"
+    for i in range(cfg.n_layers):
+        def bp(k: str) -> str:
+            return f"blocks/{k}:{i}"
+        an = f"l{i}.attn_norm"
+        g.add(norm_node(an, M * D, dtype_bytes=by, inputs=[resid],
+                        **norm_meta(bp("attn_norm"))))
+        g.add(matmul_node(f"l{i}.wq", M, D, H * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wq")))
+        g.add(matmul_node(f"l{i}.wk", M, D, KV * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wk")))
+        g.add(matmul_node(f"l{i}.wv", M, D, KV * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wv")))
+        g.add(attention_node(
+            f"l{i}.attn", seq_q=seq, seq_kv=seq, heads=H, kv_heads=KV,
+            head_dim=hd, batch=batch, causal=True, dtype_bytes=by,
+            inputs=[f"l{i}.wq", f"l{i}.wk", f"l{i}.wv"],
+            window=cfg.attn_window, rope_theta=cfg.rope_theta))
+        wo = f"l{i}.wo"
+        g.add(matmul_node(wo, M, H * hd, D, dtype_bytes=by,
+                          inputs=[f"l{i}.attn"], bypass_of=resid,
+                          param=bp("wo")))
+        mn = f"l{i}.mlp_norm"
+        g.add(norm_node(mn, M * D, dtype_bytes=by, inputs=[wo],
+                        **norm_meta(bp("mlp_norm"))))
+        g.add(matmul_node(f"l{i}.w_gate", M, D, F, dtype_bytes=by,
+                          inputs=[mn], fused_activation=cfg.activation,
+                          param=bp("w_gate")))
+        if cfg.gated_mlp:
+            g.add(matmul_node(f"l{i}.w_up", M, D, F, dtype_bytes=by,
+                              inputs=[mn], param=bp("w_up")))
+            g.add(elementwise_node(f"l{i}.glu_mul", "mul", M * F,
+                                   dtype_bytes=by,
+                                   inputs=[f"l{i}.w_gate", f"l{i}.w_up"]))
+            down_in = f"l{i}.glu_mul"
+        else:
+            down_in = f"l{i}.w_gate"
+        g.add(matmul_node(f"l{i}.w_down", M, F, D, dtype_bytes=by,
+                          inputs=[down_in], bypass_of=wo,
+                          param=bp("w_down")))
+        resid = f"l{i}.w_down"
+    g.add(norm_node("final_norm", M * D, dtype_bytes=by, inputs=[resid],
+                    **norm_meta("final_norm")))
+    g.add(matmul_node("lm_head", M, D, cfg.vocab, dtype_bytes=by,
+                      inputs=["final_norm"],
+                      param="embed" if cfg.tie_embeddings else "lm_head",
+                      transpose_w=cfg.tie_embeddings))
+    return g
+
+
+@functools.lru_cache(maxsize=64)
+def compile_program(cfg: ArchConfig, batch: int = 1, seq: int = 64,
+                    hw: HardwareModel = TPU_V5E) -> Program:
+    """graph -> schedule -> regions -> Program for a dense-transformer
+    config, cached per (config, batch, seq, hw).  Every tiling /
+    attention-block / fusion decision in the returned Program comes
+    from ``compile_model`` — the single source of truth, exactly as for
+    the CNNs (models/cnn.py::compile_program)."""
+    graph = to_graph(cfg, batch=batch, seq=seq)
+    schedule = compile_model(graph, hw)
+    return lower_to_program(graph, schedule)
+
+
+def program_forward(params, tokens, cfg: ArchConfig, *,
+                    impl: str = "auto", hw: HardwareModel = TPU_V5E,
+                    interpret: bool | None = None):
+    """tokens (B, S) -> logits (B, S, V) through the compiled Program.
+
+    The serving fast path: compiles the config once (cached) and
+    executes the instruction stream through runtime/executor.py — no
+    per-call re-derivation of tilings or fusion.  Unlike ``forward``
+    this returns the logits array directly (no aux dict; the dense
+    family has none)."""
+    from ..runtime.executor import jitted_runner
+    program = compile_program(cfg, batch=tokens.shape[0],
+                              seq=tokens.shape[1], hw=hw)
+    runner = jitted_runner(program, impl=impl, interpret=interpret)
+    return runner(params, tokens)
 
 
 # --- decode -----------------------------------------------------------------------

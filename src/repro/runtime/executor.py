@@ -4,39 +4,107 @@ The Snowflake accelerator executes exactly what the compiler emitted;
 here the executor walks a ``core/program.py::Program`` and dispatches
 each op to the Pallas kernels with the schedule's *pre-resolved*
 decisions — conv strip tiling, strip storage, loop order, matmul block,
-and the fused epilogue flags.  Nothing is re-derived at run time: the
-executor maintains a region file (region id -> live activation array,
-mirroring the paper's main-memory regions) and feeds each kernel from
-the op's input/bypass regions.
+attention (block_q, block_kv), and the fused epilogue flags.  The LM
+families dispatch through the same loop as the CNNs: ``embed`` /
+``norm`` / ``flash_attention`` / ``mul`` ops joined ``conv2d`` /
+``matmul`` / the pools when the transformer lowering landed.
 
-``run`` is functionally pure (params, x -> output) and jit-compatible;
-models wrap it in ``jax.jit`` per (program, impl) via ``jitted_runner``.
+Invariants:
+
+* **Nothing is re-derived at run time.**  Every kernel call below
+  passes the op's resolved schedule through verbatim (``tiling=``,
+  ``block=``, ``block_q=``/``block_kv=``, ``strip_storage=``); the
+  executor never calls a chooser.  If a kernel needs a decision the op
+  does not carry, that is a lowering bug in core/program.py.
+* **Region ids are allocator-owned.**  The region file below is keyed
+  by the §5.1 ``RegionPlan`` ids embedded in the ops; the executor
+  reads ``op.in_region``/``k_region``/``v_region``/``bypass_region``
+  and writes ``op.out_region``, and never maps a name to an id itself.
+* **``run`` is functionally pure** (params, x -> output) and
+  jit-compatible; models wrap it in ``jax.jit`` per (program, impl)
+  via ``jitted_runner``.
+
+``x`` is whatever the program's input region expects: an (B, H, W, C)
+image batch for CNN programs, an (B, S) int32 token batch for LM
+programs (the first op is then the ``embed`` gather).
 """
 from __future__ import annotations
 
 import collections
 
 import jax
+import jax.numpy as jnp
 
-from ..core.program import Program
+from ..core.program import Program, ProgramOp
 from ..kernels.conv2d import avgpool2d_ref, conv2d, maxpool2d_ref
+from ..kernels.flash_attention import flash_attention
 from ..kernels.matmul import matmul
 
 __all__ = ["run", "jitted_runner"]
+
+
+def _param(params, key: str | None):
+    """Resolve a ProgramOp param path.
+
+    ``"layer_03"``       -> params["layer_03"]           (CNN groups)
+    ``"blocks/wq:3"``    -> params["blocks"]["wq"][3]    (stacked LM blocks)
+    ``"final_norm"``     -> params["final_norm"]
+    """
+    if key is None:
+        return None
+    path, _, idx = key.partition(":")
+    p = params
+    for part in path.split("/"):
+        p = p[part]
+    return p[int(idx)] if idx else p
+
+
+def _run_attention(op: ProgramOp, regions: dict, *, impl: str,
+                   interpret: bool | None) -> jax.Array:
+    """Dispatch one flash_attention op: reshape the flat q/k/v regions
+    to per-head layout, apply RoPE when the spec says so, and call the
+    kernel with the schedule's exact (block_q, block_kv)."""
+    # Lazy import: models.common is the one shared home of the rotary
+    # helpers and models/cnn.py imports this module at load time.
+    from ..models.common import Rotary, apply_rope
+    a = op.attn
+    q, k, v = regions[op.in_region], regions[op.k_region], regions[op.v_region]
+    B, S = q.shape[0], q.shape[1]
+    q = q.reshape(B, S, a.heads, a.head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, a.kv_heads, a.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, a.kv_heads, a.head_dim).transpose(0, 2, 1, 3)
+    if a.rope_theta:
+        cos, sin = Rotary(a.head_dim, a.rope_theta).freqs(jnp.arange(S))
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    out = flash_attention(q, k, v, causal=a.causal, window=a.window,
+                          block_q=a.block_q, block_kv=a.block_kv,
+                          impl=impl, interpret=interpret)
+    return out.transpose(0, 2, 1, 3).reshape(B, S, a.heads * a.head_dim)
+
+
+def _run_norm(op: ProgramOp, src: jax.Array, params) -> jax.Array:
+    from ..models.common import layer_norm, rms_norm
+    w = _param(params, op.param_key)
+    if op.norm_kind == "layernorm":
+        return layer_norm(src, w, _param(params, op.param_key_b))
+    if op.norm_kind == "nonparametric":
+        return layer_norm(src)
+    return rms_norm(src, w)
 
 
 def run(program: Program, params, x: jax.Array, *, impl: str = "auto",
         interpret: bool | None = None) -> jax.Array:
     """Execute ``program`` against ``params`` on input ``x``.
 
-    x: (B, H, W, C) for the CNN programs.  Returns the final op's
-    output (the array living in ``program.output_region``).
+    x: (B, H, W, C) for CNN programs, (B, S) int32 tokens for LM
+    programs.  Returns the final op's output (the array living in
+    ``program.output_region``).
     """
     regions: dict[int, jax.Array] = {program.input_region: x}
     for op in program.ops:
         src = regions[op.in_region]
         if op.kernel == "conv2d":
-            p = params[op.param_key]
+            p = _param(params, op.param_key)
             bypass = (regions[op.bypass_region]
                       if op.fuse_bypass and op.bypass_region is not None
                       else None)
@@ -49,17 +117,35 @@ def run(program: Program, params, x: jax.Array, *, impl: str = "auto",
                 tiling=op.conv_tiling, dataflow=op.dataflow,
                 impl=impl, interpret=interpret)
         elif op.kernel == "matmul":
-            p = params[op.param_key]
-            B = src.shape[0]
-            bypass = (regions[op.bypass_region].reshape(B, -1)
+            p = _param(params, op.param_key)
+            w = p["w"] if isinstance(p, dict) else p
+            if op.transpose_w:
+                w = w.T
+            if op.flatten_input:
+                src = src.reshape(src.shape[0], -1)
+            bypass = (regions[op.bypass_region]
                       if op.fuse_bypass and op.bypass_region is not None
                       else None)
+            if bypass is not None and op.flatten_input:
+                bypass = bypass.reshape(bypass.shape[0], -1)
             out = matmul(
-                src.reshape(B, -1), p["w"],
-                bias=p["b"] if op.fuse_bias else None,
+                src, w,
+                bias=(p["b"] if isinstance(p, dict) and op.fuse_bias
+                      else None),
                 activation=op.fuse_activation, bypass=bypass,
                 dataflow=op.dataflow, block=op.block,
                 impl=impl, interpret=interpret)
+        elif op.kernel == "flash_attention":
+            out = _run_attention(op, regions, impl=impl, interpret=interpret)
+        elif op.kernel == "embed":
+            table = _param(params, op.param_key)
+            out = table[src]
+        elif op.kernel == "norm":
+            out = _run_norm(op, src, params)
+        elif op.kernel == "mul":
+            out = src * regions[op.in2_region]
+        elif op.kernel == "add":
+            out = src + regions[op.in2_region]
         elif op.kernel == "maxpool":
             out = maxpool2d_ref(src, window=op.window, stride=op.stride,
                                 pad=op.pad)

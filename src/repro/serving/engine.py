@@ -16,6 +16,15 @@ explicit ``program=``) makes the engine stateless — each tick batches
 up to ``slots`` queued image requests and executes the compiled
 ``core/program.py::Program`` once through ``runtime/executor.py``, so
 the compiler's schedule is what serves the traffic.
+
+Dense-LM workloads have the same fast path (``use_program=True``):
+the engine compiles one Program for (slots, max_len), right-pads every
+live sequence to ``max_len`` and recomputes the causal prefill each
+tick — the logits at each sequence's last position are exact because
+padding only sits *after* it under causal masking.  One token per live
+slot per tick, continuous batching, zero cache state; the compiler's
+instruction stream (matmul blocks, flash-attention tiles, fused
+residual writebacks) is what serves the traffic.
 """
 from __future__ import annotations
 
@@ -25,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import CNNConfig
+from ..configs.base import ArchConfig, CNNConfig
 from ..models import get_model
 
 __all__ = ["Request", "ServingEngine"]
@@ -43,7 +52,8 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg, params, *, slots: int = 8,
                  max_len: int = 256, eos_id: int | None = None,
-                 impl: str = "auto", greedy: bool = True, program=None):
+                 impl: str = "auto", greedy: bool = True, program=None,
+                 use_program: bool = False):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -53,6 +63,21 @@ class ServingEngine:
         self.greedy = greedy
         self.live: dict[int, Request] = {}       # slot -> request
         self.queue: list[Request] = []
+        self._lm_program = False
+        lm = isinstance(cfg, ArchConfig)
+        if (program is not None or use_program) and lm:
+            # LM program fast path: one Program for (slots, max_len),
+            # causal prefill recomputed per tick — no cache state.
+            from ..models.transformer import compile_program
+            from ..runtime.executor import jitted_runner
+            self.api = None
+            self.cache = None
+            self.program = (program if program is not None
+                            else compile_program(cfg, batch=slots,
+                                                 seq=max_len))
+            self._infer = jitted_runner(self.program, impl=impl)
+            self._lm_program = True
+            return
         if program is not None or isinstance(cfg, CNNConfig):
             # Program fast path (CNN workloads): one compiled Program
             # per batch size, executed whole per tick — no token cache.
@@ -146,10 +171,61 @@ class ServingEngine:
             r.done = True
         return batch
 
+    # -- LM program fast path ----------------------------------------------------
+    def _next_token(self, req: Request, logits_row: np.ndarray) -> int:
+        if self.greedy:
+            return int(np.argmax(logits_row))
+        return int(np.random.default_rng(req.uid + len(req.out_tokens))
+                   .choice(self.cfg.vocab, p=_softmax(logits_row)))
+
+    def _lm_program_step(self) -> list[Request]:
+        """One tick on the LM program path: admit queued prompts into
+        free slots, run the compiled Program once over all live
+        sequences (right-padded to ``max_len``; causal masking keeps
+        logits at the last live position exact), append one token per
+        slot, retire finished requests.  Sequences longer than
+        ``max_len`` condition on a sliding window of the most recent
+        ``max_len`` tokens (the program-path analogue of the legacy
+        rolling cache), so ``max_new_tokens`` is always honored."""
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            if len(req.prompt) == 0:
+                raise ValueError(f"request {req.uid}: empty prompt")
+            req._tokens = [int(t) for t in req.prompt]
+            self.live[slot] = req
+        if not self.live:
+            return []
+        toks = np.zeros((self.slots, self.max_len), np.int32)
+        last = np.zeros((self.slots,), np.int32)  # slot -> live logit index
+        for slot, req in self.live.items():
+            win = req._tokens[-self.max_len:]
+            toks[slot, :len(win)] = win
+            last[slot] = len(win) - 1
+        out = self._infer(self.params, jnp.asarray(toks))
+        # Gather each slot's one live vocab row on device; copying the
+        # full (slots, max_len, vocab) logits to host every tick would
+        # dominate the tick.
+        logits = np.asarray(out[jnp.arange(self.slots), jnp.asarray(last)])
+        finished = []
+        for slot, req in list(self.live.items()):
+            nxt = self._next_token(req, logits[slot])
+            req.out_tokens.append(nxt)
+            req._tokens.append(nxt)
+            if ((self.eos is not None and nxt == self.eos)
+                    or len(req.out_tokens) >= req.max_new_tokens):
+                req.done = True
+                finished.append(req)
+                del self.live[slot]
+        return finished
+
     # -- decode ------------------------------------------------------------------
     def step(self) -> list[Request]:
         """One engine tick: admit, decode one token for all live slots,
         retire finished requests.  Returns requests finished this tick."""
+        if self._lm_program:
+            return self._lm_program_step()
         if self.program is not None:
             return self._program_step()
         self._admit()
@@ -163,10 +239,7 @@ class ServingEngine:
         logits = np.asarray(logits)
         finished = []
         for slot, req in list(self.live.items()):
-            nxt = int(np.argmax(logits[slot])) if self.greedy else \
-                int(np.random.default_rng(req.uid + len(req.out_tokens))
-                    .choice(self.cfg.vocab,
-                            p=_softmax(logits[slot])))
+            nxt = self._next_token(req, logits[slot])
             req.out_tokens.append(nxt)
             req._last_token = nxt
             if ((self.eos is not None and nxt == self.eos)

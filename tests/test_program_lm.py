@@ -1,0 +1,265 @@
+"""LM lowering to Programs: transformer graph -> schedule -> regions ->
+Program -> executor parity with the legacy scan forward, the §5.1
+allocator pinning the residual stream across each block, the executor
+dispatching the ``flash_attention`` kernel id with the schedule's
+blocks, and the serving fast path round-tripping token requests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.core.ir import DepLabel, LayerKind
+from repro.models import init_params, transformer
+from repro.runtime import executor
+
+K0 = jax.random.PRNGKey(0)
+
+
+def _cfg(name="smollm-360m", **over):
+    cfg = REGISTRY[name].smoke()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _setup(cfg, batch=2, seq=16):
+    params = init_params(transformer.param_defs(cfg), K0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (batch, seq),
+                              0, cfg.vocab)
+    program = transformer.compile_program(cfg, batch=batch, seq=seq)
+    return params, toks, program
+
+
+# --- end-to-end parity -------------------------------------------------------------
+@pytest.mark.parametrize("name", ["smollm-360m", "llama3-8b", "olmo-1b"])
+def test_program_matches_legacy_forward(name):
+    """GQA + gated MLP (smollm/llama3) and MHA + nonparametric LN
+    (olmo) all lower to Programs matching the scan forward <= 1e-5."""
+    cfg = _cfg(name)
+    params, toks, program = _setup(cfg)
+    out = executor.run(program, params, toks, impl="reference")
+    ref = transformer.forward(params, toks, cfg, impl="reference")["logits"]
+    assert out.shape == ref.shape == (2, 16, cfg.vocab)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+
+
+def test_program_forward_wrapper_and_cache():
+    cfg = _cfg()
+    params, toks, program = _setup(cfg)
+    fwd = transformer.program_forward(params, toks, cfg, impl="reference")
+    out = executor.run(program, params, toks, impl="reference")
+    np.testing.assert_allclose(np.asarray(fwd), np.asarray(out),
+                               rtol=0, atol=1e-5)
+    assert transformer.compile_program(cfg, batch=2, seq=16) is program
+    assert transformer.compile_program(cfg, batch=2, seq=32) is not program
+
+
+def test_tied_embeddings_head():
+    cfg = _cfg(tie_embeddings=True)
+    params, toks, program = _setup(cfg, batch=1, seq=8)
+    head = program.op("lm_head")
+    assert head.transpose_w and head.param_key == "embed"
+    out = executor.run(program, params, toks, impl="reference")
+    ref = transformer.forward(params, toks, cfg, impl="reference")["logits"]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+
+
+@pytest.mark.pallas
+def test_program_pallas_interpret_parity():
+    """The Pallas kernels (matmul + flash attention) execute the LM
+    program with the schedule's exact blocks, matching the reference
+    forward."""
+    cfg = _cfg(n_layers=1)
+    params, toks, program = _setup(cfg, batch=1, seq=16)
+    ref = transformer.forward(params, toks, cfg, impl="reference")["logits"]
+    out = executor.run(program, params, toks, impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_non_dense_families_are_gated():
+    with pytest.raises(NotImplementedError):
+        transformer.to_graph(REGISTRY["rwkv6-7b"].smoke())
+    with pytest.raises(NotImplementedError):
+        transformer.to_graph(REGISTRY["granite-moe-1b-a400m"].smoke())
+
+
+# --- graph + schedule --------------------------------------------------------------
+def test_graph_marks_residual_sinks_on_projections():
+    """Both residual adds of every block fuse into the o-/down-proj
+    writeback (the paper's VMOV-on-writeback), never a standalone op."""
+    cfg = _cfg()
+    g = transformer.to_graph(cfg, batch=1, seq=8)
+    g.mark_residuals()
+    for i in range(cfg.n_layers):
+        wo = g.get(f"l{i}.wo")
+        down = g.get(f"l{i}.w_down")
+        assert wo.dep is DepLabel.RESIDUAL_SINK
+        assert down.dep is DepLabel.RESIDUAL_SINK
+        assert down.bypass_of == wo.name
+        assert wo.bypass_of == ("embed" if i == 0 else f"l{i-1}.w_down")
+    assert not any(n.kind is LayerKind.ELEMENTWISE
+                   and n.meta.get("op") == "add" for n in g)
+
+
+def test_attention_schedule_blocks_are_pinned_into_op():
+    """The flash_attention op carries the compiler's (block_q, block_kv)
+    and the config's head geometry — the executor re-derives nothing."""
+    from repro.core.tiling import select_attention_blocks
+    from repro.core.hw import TPU_V5E
+    cfg = _cfg()
+    _, _, program = _setup(cfg, batch=2, seq=16)
+    op = program.op("l0.attn")
+    assert op.kernel == "flash_attention"
+    a = op.attn
+    assert (a.heads, a.kv_heads, a.head_dim) == (cfg.n_heads,
+                                                 cfg.n_kv_heads, cfg.hd)
+    assert a.causal and a.rope_theta == cfg.rope_theta
+    want = select_attention_blocks(16, 16, cfg.hd, 4, TPU_V5E)
+    assert (a.block_q, a.block_kv) == want
+    # distinct q/k/v regions resolved by the allocator
+    assert len({op.in_region, op.k_region, op.v_region}) == 3
+
+
+# --- region allocator --------------------------------------------------------------
+def test_regions_pin_residual_stream_across_block():
+    """The residual stream entering a block (previous w_down / embed) is
+    read again by that block's o-projection bypass — the allocator must
+    pin it; the post-attention stream (wo) likewise for the MLP add."""
+    cfg = _cfg()
+    _, _, program = _setup(cfg)
+    plan = program.plan
+    for i in range(cfg.n_layers):
+        src = "embed" if i == 0 else f"l{i-1}.w_down"
+        rid = plan.out_region[src]
+        assert plan.region(rid).kind == "pinned"
+        assert program.op(f"l{i}.wo").bypass_region == rid
+        wo_rid = plan.out_region[f"l{i}.wo"]
+        assert plan.region(wo_rid).kind == "pinned"
+        assert program.op(f"l{i}.w_down").bypass_region == wo_rid
+
+
+def test_regions_pin_qkv_for_attention_and_reuse():
+    """wq/wk outputs cross more than one step to the attention op ->
+    pinned; wv feeds the next op -> ping-pong.  Pinned regions are
+    reused across blocks instead of growing with depth."""
+    cfg = _cfg()
+    _, _, program = _setup(cfg)
+    plan = program.plan
+    for i in range(cfg.n_layers):
+        attn = program.op(f"l{i}.attn")
+        assert plan.region(attn.in_region).kind == "pinned"     # wq
+        assert plan.region(attn.k_region).kind == "pinned"      # wk
+        assert plan.region(attn.v_region).kind == "pingpong"    # wv
+    # depth-independent footprint: deeper config, same region count
+    deep = dataclasses.replace(cfg, name=cfg.name + "-deep", n_layers=4)
+    shallow = dataclasses.replace(cfg, name=cfg.name + "-shallow",
+                                  n_layers=2)
+    p_deep = transformer.compile_program(deep, batch=2, seq=16)
+    p_shallow = transformer.compile_program(shallow, batch=2, seq=16)
+    assert len(p_deep.plan.regions) == len(p_shallow.plan.regions)
+
+
+# --- executor dispatch -------------------------------------------------------------
+def test_executor_dispatches_flash_attention_kernel(monkeypatch):
+    cfg = _cfg()
+    params, toks, program = _setup(cfg)
+    calls = []
+    real = executor.flash_attention
+
+    def spy(q, k, v, **kw):
+        calls.append((q.shape, k.shape, kw["block_q"], kw["block_kv"]))
+        return real(q, k, v, **kw)
+
+    monkeypatch.setattr(executor, "flash_attention", spy)
+    executor.run(program, params, toks, impl="reference")
+    assert len(calls) == cfg.n_layers
+    qshape, kshape, bq, bkv = calls[0]
+    assert qshape == (2, cfg.n_heads, 16, cfg.hd)
+    assert kshape == (2, cfg.n_kv_heads, 16, cfg.hd)
+    assert (bq, bkv) == (program.op("l0.attn").attn.block_q,
+                         program.op("l0.attn").attn.block_kv)
+
+
+def test_listing_is_paper_style_lm_trace():
+    cfg = _cfg()
+    _, _, program = _setup(cfg)
+    listing = program.listing()
+    assert "program smollm-360m-smoke" in listing
+    assert "%00 embed" in listing
+    assert "flash_attention" in listing and "bq=" in listing
+    assert "+bypass" in listing and "+silu" in listing
+    assert len(listing.splitlines()) == len(program.ops) + 1
+
+
+# --- serving fast path -------------------------------------------------------------
+def test_serving_lm_program_fast_path_round_trip():
+    """Engine tokens == a greedy recompute loop over the legacy forward:
+    the program path serves exactly what the model would generate."""
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg(n_layers=2)
+    params = init_params(transformer.param_defs(cfg), K0)
+    max_len, max_new = 16, 4
+    eng = ServingEngine(cfg, params, slots=2, max_len=max_len,
+                        impl="reference", use_program=True)
+    assert eng.program is not None
+    prompts = [[3, 1, 4], [15]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=np.asarray(p, np.int32),
+                           max_new_tokens=max_new))
+    done = sorted(eng.run_until_drained(), key=lambda r: r.uid)
+    assert len(done) == 2 and all(r.done for r in done)
+    for req, prompt in zip(done, prompts):
+        toks = list(prompt)
+        want = []
+        for _ in range(max_new):
+            padded = np.zeros((1, max_len), np.int32)
+            padded[0, :len(toks)] = toks
+            logits = transformer.forward(
+                params, jnp.asarray(padded), cfg,
+                impl="reference")["logits"]
+            nxt = int(np.argmax(np.asarray(logits)[0, len(toks) - 1]))
+            want.append(nxt)
+            toks.append(nxt)
+        assert req.out_tokens == want
+
+
+def test_serving_lm_program_long_prompt_slides_window():
+    """A prompt longer than max_len conditions on the most recent
+    max_len tokens (the rolling-cache analogue) and still honors
+    max_new_tokens instead of retiring after one token."""
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg(n_layers=1)
+    params = init_params(transformer.param_defs(cfg), K0)
+    max_len, max_new = 8, 3
+    eng = ServingEngine(cfg, params, slots=1, max_len=max_len,
+                        impl="reference", use_program=True)
+    prompt = list(range(1, 13))                       # 12 > max_len
+    eng.submit(Request(uid=0, prompt=np.asarray(prompt, np.int32),
+                       max_new_tokens=max_new))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].out_tokens) == max_new
+    toks, want = list(prompt), []
+    for _ in range(max_new):
+        win = toks[-max_len:]
+        logits = transformer.forward(
+            params, jnp.asarray(np.asarray(win, np.int32)[None]), cfg,
+            impl="reference")["logits"]
+        nxt = int(np.argmax(np.asarray(logits)[0, len(win) - 1]))
+        want.append(nxt)
+        toks.append(nxt)
+    assert done[0].out_tokens == want
+
+
+def test_serving_lm_program_rejects_empty_prompt():
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg(n_layers=1)
+    params = init_params(transformer.param_defs(cfg), K0)
+    eng = ServingEngine(cfg, params, slots=1, max_len=8,
+                        impl="reference", use_program=True)
+    eng.submit(Request(uid=0, prompt=np.asarray([], np.int32)))
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.step()
