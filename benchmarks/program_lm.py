@@ -1,5 +1,5 @@
 """LM Program-execution benchmark: the compiled transformer Program vs
-the legacy scan forward.
+the legacy scan forward, plus the decode regime.
 
 For a dense-LM config this measures
 
@@ -10,17 +10,25 @@ For a dense-LM config this measures
     comparison is schedule-vs-schedule, not Mosaic-vs-interpreter;
   * the schedule's modeled traffic for the Program vs the graph's
     unfused per-op minimum-bytes sum;
+  * **decode**: serving tokens/s at slot occupancies 1 / half / full
+    for the stateful decode Program (persistent KV regions +
+    ProgramState, the serving engine's hot loop) vs the legacy
+    ``decode_step`` scan vs the retired per-tick prefill-recompute
+    path (the pre-stateful program engine: one full causal forward at
+    (slots, max_len) per emitted token);
 
-and checks the two paths agree numerically (the PR-3 parity bound).
+and checks the paths agree numerically (the PR-3 parity bound).
 
 Smoke mode shrinks depth/shape so CI stays fast; the full run uses the
 smollm-360m smoke config at serving-like shapes.
 """
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import REGISTRY
 from repro.models import init_params, transformer
@@ -29,6 +37,89 @@ from repro.runtime import executor
 from .common import emit, time_call
 
 SMOKE = False          # set by benchmarks.run --smoke
+
+
+def _time_threaded(fn, params, toks, carry, *, warmup=1, iters=3):
+    """Median wall time (us) of a (params, toks, carry) -> (out, carry)
+    step whose carry is threaded (and possibly donated) through calls."""
+    for _ in range(warmup):
+        out, carry = fn(params, toks, carry)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out, carry = fn(params, toks, carry)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def run_decode_bench():
+    """Decode-regime tokens/s: decode-Program vs legacy decode_step vs
+    the retired prefill-recompute engine path."""
+    cfg = REGISTRY["smollm-360m"].smoke()
+    slots, max_len, warmup, iters = (2, 16, 1, 3) if SMOKE else (8, 64, 2, 7)
+    if SMOKE:
+        cfg = dataclasses.replace(cfg, name=cfg.name + "-bench", n_layers=2)
+    params = init_params(transformer.param_defs(cfg), jax.random.PRNGKey(0))
+    prompt_len = max_len // 2
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           size=(slots, prompt_len)).astype(np.int32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(slots,)), jnp.int32)
+
+    # stateful decode Program: prefill every slot once, tick the pair
+    pair = transformer.compile_program_pair(cfg, slots=slots,
+                                            max_len=max_len)
+    state = executor.init_program_state(pair)
+    prefill = executor.jitted_prefill_runner(pair.prefill, impl="reference")
+
+    def admit(s):
+        padded = np.zeros((1, max_len), np.int32)
+        padded[0, :prompt_len] = prompts[s]
+        return prefill(params, jnp.asarray(padded), state, s, prompt_len)
+
+    # warmup: slot 0's first call pays the jit trace+compile; its cache
+    # write is overwritten by the timed admission below
+    out, state = admit(0)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for s in range(slots):
+        out, state = admit(s)
+    jax.block_until_ready(out)
+    t_prefill = (time.perf_counter() - t0) / slots * 1e6
+    decode = executor.jitted_decode_runner(pair.decode, impl="reference")
+    t_prog = _time_threaded(decode, params, toks, state,
+                            warmup=warmup, iters=iters)
+
+    # legacy decode_step (scan over stacked blocks, rolling cache)
+    cache = transformer.init_cache(cfg, slots, max_len)
+    leg = jax.jit(functools.partial(
+        lambda p, t, c, cfg: transformer.decode_step(p, c, t, cfg,
+                                                     impl="reference"),
+        cfg=cfg))
+    t_leg = _time_threaded(lambda p, t, c: leg(p, t, c), params, toks,
+                           cache, warmup=warmup, iters=iters)
+
+    # retired path: recompute the full causal prefill every tick
+    flat = transformer.compile_program(cfg, batch=slots, seq=max_len)
+    flat_fn = executor.jitted_runner(flat, impl="reference")
+    full = jnp.asarray(np.tile(prompts, (1, max_len // prompt_len)))
+    t_rec = time_call(flat_fn, params, full, warmup=warmup, iters=iters)
+
+    for occ in sorted({1, slots // 2, slots}):
+        tag = f"{cfg.name}/s{slots}l{max_len}/occ{occ}"
+        tps = occ / (t_prog * 1e-6)
+        emit(f"program_lm/decode/{tag}/toks_per_s", t_prog,
+             f"decode_program_tps={tps:.1f};"
+             f"legacy_tps={occ / (t_leg * 1e-6):.1f};"
+             f"recompute_tps={occ / (t_rec * 1e-6):.1f};"
+             f"program_over_legacy={t_prog / max(t_leg, 1e-9):.3f};"
+             f"speedup_vs_recompute={t_rec / max(t_prog, 1e-9):.2f}x")
+    emit(f"program_lm/decode/{cfg.name}/prefill_once", t_prefill,
+         f"per_admission_us={t_prefill:.1f};"
+         f"persistent_kv_mb={pair.persistent_bytes / 1e6:.3f}")
 
 
 def run():
@@ -68,6 +159,7 @@ def run():
              f"ops={len(program.ops)};"
              f"regions={len(program.plan.regions)};"
              f"region_mb={program.plan.total_bytes / 1e6:.3f}")
+    run_decode_bench()
 
 
 if __name__ == "__main__":

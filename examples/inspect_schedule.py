@@ -63,6 +63,14 @@ try:
     print(f"\n== {lm_smoke.name} Program (batch 1 x seq {args.seq}, "
           f"TPU v5e schedule) ==")
     print(prog.listing())
+    # The stateful serving pair: prefill (cache writes at the admitted
+    # slot) + decode (one token per slot against the persistent KV
+    # regions), sharing one region table.
+    pair = transformer.compile_program_pair(lm_smoke, slots=2,
+                                            max_len=args.seq)
+    print(f"\n== {lm_smoke.name} serving pair (2 slots x max_len "
+          f"{args.seq}) ==")
+    print(pair.listing())
 except NotImplementedError as e:
     print(f"\n== no LM Program lowering: {e} ==")
 

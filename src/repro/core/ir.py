@@ -27,6 +27,7 @@ __all__ = [
     "matmul_node",
     "conv_node",
     "attention_node",
+    "decode_attention_node",
     "norm_node",
     "embed_node",
     "elementwise_node",
@@ -298,6 +299,29 @@ def attention_node(name: str, *, seq_q: int, seq_kv: int, heads: int,
               "kv_heads": kv_heads, "head_dim": head_dim, "batch": batch,
               "causal": causal},
         dtype_bytes=dtype_bytes, inputs=inputs or [], meta=meta)
+
+
+def decode_attention_node(name: str, *, cache_len: int, heads: int,
+                          kv_heads: int, head_dim: int, slots: int,
+                          k_cache: str, v_cache: str, dtype_bytes: int = 2,
+                          inputs: list[str] | None = None,
+                          **meta) -> LayerNode:
+    """Single-token decode attention against a persistent KV cache.
+
+    ``inputs`` is [q, k_new, v_new] producer names (the per-token QKV
+    projections); ``k_cache`` / ``v_cache`` name the *persistent*
+    regions (core/regions.py) the op reads the history from and writes
+    the new token's K/V into at the per-slot position — the position is
+    a runtime operand carried by the executor's ``ProgramState``, never
+    baked into the instruction stream."""
+    return LayerNode(
+        name=name, kind=LayerKind.ATTENTION,
+        dims={"seq_q": 1, "seq_kv": cache_len, "heads": heads,
+              "kv_heads": kv_heads, "head_dim": head_dim, "batch": slots,
+              "causal": True},
+        dtype_bytes=dtype_bytes, inputs=inputs or [],
+        meta={"decode": True, "k_cache": k_cache, "v_cache": v_cache,
+              **meta})
 
 
 def norm_node(name: str, numel: int, *, dtype_bytes: int = 2,

@@ -30,8 +30,10 @@ Invariants (relied on by the executor, the tests and the docs):
   back to its own heuristics is a lowering bug, not a feature.
 * **Region ids are allocator-owned.**  ``in_region`` / ``out_region``
   / ``bypass_region`` / ``k_region`` / ``v_region`` / ``in2_region``
-  come exclusively from the §5.1 ``RegionPlan``; this module only maps
-  producer names to the allocator's ids and never invents one.
+  come exclusively from the §5.1 ``RegionPlan`` — and the persistent
+  ``k_cache_region`` / ``v_cache_region`` ids from its persistent
+  table; this module only maps producer/state names to the allocator's
+  ids and never invents one.
 * **``listing()`` is stable.**  For a fixed (graph, hw, batch) the
   listing is a deterministic function of the schedule — docs and CI
   reproduce it verbatim via ``examples/inspect_schedule.py``.
@@ -46,7 +48,8 @@ from .regions import RegionPlan, allocate_regions
 from .schedule import LayerSchedule, ModelSchedule
 from .tiling import ConvTiling
 
-__all__ = ["AttentionSpec", "ProgramOp", "Program", "lower_to_program"]
+__all__ = ["AttentionSpec", "ProgramOp", "Program", "ProgramPair",
+           "lower_to_program"]
 
 
 @dataclass(frozen=True)
@@ -84,16 +87,25 @@ class ProgramOp:
     index: int                       # position in the instruction stream
     name: str                        # source layer name
     # "conv2d" | "matmul" | "maxpool" | "avgpool"
-    #   | "embed" | "norm" | "flash_attention" | "mul"
+    #   | "embed" | "norm" | "flash_attention" | "decode_attention" | "mul"
     kernel: str
     in_region: int
     out_region: int
     param_key: str | None = None     # params path ("layer_03", "blocks/wq:3")
     param_key_b: str | None = None   # secondary param (layernorm bias)
     bypass_region: int | None = None
-    k_region: int | None = None      # flash_attention: K producer's region
-    v_region: int | None = None      # flash_attention: V producer's region
+    k_region: int | None = None      # attention: K producer's region
+    v_region: int | None = None      # attention: V producer's region
     in2_region: int | None = None    # mul: second operand's region
+    # Persistent KV-cache regions (§5.1 extension).  On a
+    # flash_attention op they mean "also write the computed K/V into
+    # the cache at the runtime slot" (the prefill side of the pair); on
+    # a decode_attention op they are where the history is read from and
+    # the new token's K/V written at the per-slot position.  The slot /
+    # position itself is a runtime operand (executor ProgramState),
+    # never baked into the stream.
+    k_cache_region: int | None = None
+    v_cache_region: int | None = None
     # geometry
     stride: int = 1
     pad: int = 0
@@ -121,7 +133,7 @@ class ProgramOp:
     def trace(self) -> str:
         """One paper-style instruction-trace line."""
         io = f"r{self.in_region}->r{self.out_region}"
-        if self.kernel == "flash_attention":
+        if self.kernel in ("flash_attention", "decode_attention"):
             io = (f"r{self.in_region},r{self.k_region},r{self.v_region}"
                   f"->r{self.out_region}")
         elif self.kernel in ("mul", "add"):
@@ -151,6 +163,16 @@ class ProgramOp:
                      f"{' causal' if a.causal else ''}"
                      f"{f' win={a.window}' if a.window else ''}"
                      f"{' rope' if a.rope_theta else ''}")
+            if self.k_cache_region is not None:
+                sched += (f" cache>r{self.k_cache_region},"
+                          f"r{self.v_cache_region}@slot")
+        elif self.kernel == "decode_attention" and self.attn is not None:
+            a = self.attn
+            sched = (f"h={a.heads}/{a.kv_heads}x{a.head_dim} "
+                     f"bkv={a.block_kv}"
+                     f"{' rope' if a.rope_theta else ''}"
+                     f" cache=r{self.k_cache_region},"
+                     f"r{self.v_cache_region}@pos")
         elif self.kernel == "norm":
             sched = self.norm_kind or ""
         epi = "".join(
@@ -194,12 +216,48 @@ class Program:
 
     def listing(self) -> str:
         plan = self.plan
+        persist = ""
+        if plan.n_persistent:
+            persist = (f"+{plan.n_persistent} persistent "
+                       f"({plan.persistent_bytes / 1e6:.2f} MB KV) ")
         head = (f"program {self.name} on {self.hw_name}: {len(self.ops)} ops, "
                 f"{plan.n_pingpong}+{plan.n_pinned} regions "
-                f"({plan.total_bytes / 1e6:.2f} MB), "
+                f"({plan.total_bytes / 1e6:.2f} MB) {persist}".rstrip() + ", "
                 f"{self.total_flops / 1e9:.2f} GFLOP, "
                 f"{self.total_traffic_bytes / 1e6:.1f} MB moved")
         return "\n".join([head] + [op.trace() for op in self.ops])
+
+
+@dataclass(frozen=True)
+class ProgramPair:
+    """A prefill Program and a decode Program sharing one persistent
+    region table (§5.1 extension) — the compiled form of stateful LM
+    serving.  The prefill Program runs the full causal forward *and*
+    writes each block's K/V into the persistent cache regions at an
+    admitted slot; the decode Program advances every live slot by one
+    token through ``decode_attention`` ops reading/writing the same
+    regions.  Both plans embed identical persistent ids
+    (``regions.extend_with_persistent`` with a shared base), so one
+    runtime ``ProgramState`` serves both instruction streams."""
+
+    prefill: Program
+    decode: Program
+
+    @property
+    def persistent(self) -> dict:
+        return self.decode.plan.persistent
+
+    @property
+    def persistent_bytes(self) -> int:
+        return self.decode.plan.persistent_bytes
+
+    def listing(self) -> str:
+        return (f"program pair {self.decode.name.removesuffix('.decode')}: "
+                f"prefill {len(self.prefill.ops)} ops + decode "
+                f"{len(self.decode.ops)} ops, "
+                f"{len(self.persistent)} persistent KV regions "
+                f"({self.persistent_bytes / 1e6:.2f} MB)\n"
+                + self.prefill.listing() + "\n" + self.decode.listing())
 
 
 def _pool_kernel(node) -> str:
@@ -276,10 +334,19 @@ def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
                 param_key_b=node.meta.get("param_b"), **common))
         elif node.kind is LayerKind.ATTENTION:
             d = node.dims
+            # Persistent cache regions resolve by *name* through the
+            # plan's allocator-owned persistent table (shared across a
+            # prefill/decode pair).
+            k_cache = v_cache = None
+            if node.meta.get("k_cache") is not None:
+                k_cache = plan.persistent[node.meta["k_cache"]]
+                v_cache = plan.persistent[node.meta["v_cache"]]
             ops.append(ProgramOp(
-                kernel="flash_attention",
+                kernel=("decode_attention" if node.meta.get("decode")
+                        else "flash_attention"),
                 k_region=plan.out_region[node.inputs[1]],
                 v_region=plan.out_region[node.inputs[2]],
+                k_cache_region=k_cache, v_cache_region=v_cache,
                 attn=AttentionSpec(
                     heads=d["heads"], kv_heads=d["kv_heads"],
                     head_dim=d["head_dim"],

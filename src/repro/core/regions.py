@@ -15,12 +15,23 @@ sizes every region at the largest output it ever holds.  The resulting
 ``RegionPlan`` is embedded in the executable ``Program``
 (core/program.py) and drives the executor's region file.
 
+Beyond the paper's transient activation regions, the allocator also
+owns **persistent** regions: state that outlives a single Program run
+(the serving KV cache — one (slots, cache_len, kv_heads, head_dim)
+region per transformer block and cache side).  A persistent region is
+never assigned to an op output, never retired and never reused; its id
+is shared by every Program compiled against the same persistent table
+(the prefill/decode pair), so the runtime's ``ProgramState`` buffers
+are addressed identically by both.
+
 Invariants:
 
-* **Region ids are allocator-owned.**  This function is the only
-  place a region id is ever minted; the Program lowering maps producer
-  names to these ids and the executor keys its region file by them.
-  No other module may invent, renumber or alias a region.
+* **Region ids are allocator-owned.**  This module is the only place
+  a region id is ever minted — transient ids by ``allocate_regions``,
+  persistent ids by ``extend_with_persistent`` — the Program lowering
+  maps producer/state names to these ids and the executor keys its
+  region file by them.  No other module may invent, renumber or alias
+  a region.
 * The allocator is label-agnostic at assignment time: pinning follows
   *consumer distances* in the executed op order, so any graph shape —
   ResNet shortcuts, the transformer residual stream, QKV fan-outs —
@@ -28,15 +39,18 @@ Invariants:
   one step after the last read, then the region is reused).
 * Pinned-region reuse keeps the footprint depth-independent for
   repeated structures: a dense transformer needs 2 ping-pong + 4
-  pinned regions regardless of layer count.
+  pinned regions regardless of layer count.  Persistent regions are
+  exempt: state cannot be reused across layers, so the KV table grows
+  with depth by design.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field, replace
 
 from .ir import ModelGraph
 
-__all__ = ["Region", "RegionPlan", "allocate_regions"]
+__all__ = ["Region", "RegionPlan", "PersistentSpec", "allocate_regions",
+           "extend_with_persistent"]
 
 N_PINGPONG = 2          # the paper's sequential double-buffer pair
 
@@ -44,16 +58,34 @@ N_PINGPONG = 2          # the paper's sequential double-buffer pair
 @dataclass(frozen=True)
 class Region:
     rid: int
-    kind: str            # "pingpong" | "pinned"
+    kind: str            # "pingpong" | "pinned" | "persistent"
     size_bytes: int      # largest output this region ever holds
+    # Persistent regions only: allocation identity the runtime builds
+    # its state buffers from.  Transient regions leave these None.
+    name: str | None = None
+    shape: tuple | None = None
+    dtype: str | None = None     # numpy dtype name ("float32", "bfloat16")
+
+
+@dataclass(frozen=True)
+class PersistentSpec:
+    """One named persistent buffer to reserve (e.g. a layer's K cache)."""
+
+    name: str
+    shape: tuple
+    dtype: str                   # numpy dtype name
+    size_bytes: int
 
 
 @dataclass(frozen=True)
 class RegionPlan:
-    regions: tuple[Region, ...]          # rid == index; first two ping-pong
+    regions: tuple[Region, ...]          # transient regions: rid == index
     out_region: dict                     # layer name -> rid of its output
     input_region: int                    # rid the model input arrives in
     output_region: int                   # rid holding the final output
+    # name -> rid of every persistent region (allocator-owned ids minted
+    # by extend_with_persistent; shared across a Program pair).
+    persistent: dict = field(default_factory=dict)
 
     @property
     def n_pingpong(self) -> int:
@@ -64,13 +96,33 @@ class RegionPlan:
         return sum(1 for r in self.regions if r.kind == "pinned")
 
     @property
+    def n_persistent(self) -> int:
+        return sum(1 for r in self.regions if r.kind == "persistent")
+
+    @property
     def total_bytes(self) -> int:
         """Activation footprint the plan reserves (sum of region sizes —
         the paper allocates the regions once, up front)."""
-        return sum(r.size_bytes for r in self.regions)
+        return sum(r.size_bytes for r in self.regions
+                   if r.kind != "persistent")
+
+    @property
+    def persistent_bytes(self) -> int:
+        return sum(r.size_bytes for r in self.regions
+                   if r.kind == "persistent")
 
     def region(self, rid: int) -> Region:
-        return self.regions[rid]
+        # Transient rids index the tuple directly; persistent rids may
+        # sit past a shared base (pair-aligned), so fall back to search.
+        if rid < len(self.regions) and self.regions[rid].rid == rid:
+            return self.regions[rid]
+        for r in self.regions:
+            if r.rid == rid:
+                return r
+        raise KeyError(rid)
+
+    def persistent_regions(self) -> tuple:
+        return tuple(r for r in self.regions if r.kind == "persistent")
 
 
 def _fused_into(node, schedule) -> str | None:
@@ -191,3 +243,35 @@ def allocate_regions(graph: ModelGraph, schedule=None) -> RegionPlan:
     final = out_region[steps[-1].name] if steps else input_region
     return RegionPlan(regions=regions, out_region=out_region,
                       input_region=input_region, output_region=final)
+
+
+def extend_with_persistent(plan: RegionPlan, specs: tuple,
+                           base_rid: int | None = None) -> RegionPlan:
+    """Reserve persistent regions on top of a transient plan.
+
+    Persistent ids start at ``base_rid`` (default: one past the
+    transient regions) so a *pair* of Programs can share one persistent
+    table: compile both transient plans first, pass the same
+    ``base_rid = max(len(p.regions) for p in plans)`` and the same
+    ``specs`` to each, and the minted ids coincide — the runtime's
+    state buffers are then addressed identically by both instruction
+    streams.  Persistent regions never appear in ``out_region`` and are
+    never reused or retired by the transient allocator.
+    """
+    base = len(plan.regions) if base_rid is None else base_rid
+    if base < len(plan.regions):
+        raise ValueError(
+            f"persistent base rid {base} collides with "
+            f"{len(plan.regions)} transient regions")
+    persistent = dict(plan.persistent)
+    extra = []
+    for i, spec in enumerate(specs):
+        if spec.name in persistent:
+            raise ValueError(f"duplicate persistent region {spec.name!r}")
+        rid = base + i
+        persistent[spec.name] = rid
+        extra.append(Region(rid, "persistent", int(spec.size_bytes),
+                            name=spec.name, shape=tuple(spec.shape),
+                            dtype=spec.dtype))
+    return replace(plan, regions=plan.regions + tuple(extra),
+                   persistent=persistent)

@@ -215,7 +215,9 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
 def _schedule_attention(node: LayerNode, hw: HardwareModel) -> LayerSchedule:
     """Flash-attention schedule: the (block_q, block_kv) tile pair is a
     compiler decision (T2 on the score loop), pinned into the Program so
-    the kernel wrapper never re-derives it at run time."""
+    the kernel wrapper never re-derives it at run time.  A decode node
+    (seq_q == 1, persistent KV cache) gets its cache-streaming block
+    from the same chooser's decode regime."""
     d = node.dims
     bq, bkv = select_attention_blocks(d["seq_q"], d["seq_kv"],
                                       d["head_dim"], node.dtype_bytes, hw)
@@ -223,6 +225,8 @@ def _schedule_attention(node: LayerNode, hw: HardwareModel) -> LayerSchedule:
     traffic = node.min_bytes()
     notes = {"block_q": bq, "block_kv": bkv,
              "causal": bool(d.get("causal", True))}
+    if node.meta.get("decode"):
+        notes["decode"] = True
     if node.meta.get("window"):
         notes["window"] = node.meta["window"]
     return LayerSchedule(

@@ -142,8 +142,22 @@ def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
     accumulator and the (bq, bkv) score tile must fit the VMEM budget.
     This is the compiler's decision; the flash kernel wrapper
     (kernels/flash_attention/ops.py) defers to it, and the LM Program
-    lowering pins the result into each ``flash_attention`` op."""
+    lowering pins the result into each ``flash_attention`` op.
+
+    ``Sq == 1`` is the **decode regime**: one new query token against a
+    KV cache.  There is no score-loop freedom — the cache is the only
+    big operand — so block_q is 1 and block_kv is sized to stream the
+    cache at full bandwidth (k+v double buffered).  One chooser for
+    both regimes: kernels/decode_attention/ops.py defers here, and the
+    LM decode-Program lowering pins the result into each
+    ``decode_attention`` op."""
     budget = hw.vmem_budget()
+    if Sq == 1:
+        bkv = 128
+        for b in (256, 512, 1024, 2048, 4096):
+            if b <= max(Skv, 128) and 4 * b * D * dtype_bytes <= budget:
+                bkv = b
+        return (1, bkv)
     best = (hw.lane, hw.lane)
     for bq in (128, 256, 512, 1024, 2048):
         if bq > max(Sq, 128):

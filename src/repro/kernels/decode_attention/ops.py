@@ -26,13 +26,13 @@ def decode_attention(q, k, v, *, kv_len=None, scale: float | None = None,
     if impl == "reference":
         return decode_attention_ref(q, k, v, kv_len=kv_len, scale=scale)
     if block_kv is None:
-        # T2: cache block sized to stream at full bandwidth; k+v double
-        # buffered.  Cap the block at the cache length.
-        budget = hw.vmem_budget()
-        block_kv = 128
-        for b in (256, 512, 1024, 2048, 4096):
-            if b <= S and 4 * b * D * k.dtype.itemsize <= budget:
-                block_kv = b
+        # T2 decode regime: cache block sized to stream at full
+        # bandwidth, k+v double buffered.  One chooser shared with the
+        # compiler (core/tiling.py) — the decode-Program lowering pins
+        # the same value into each decode_attention op, so this branch
+        # only runs for direct (non-Program) kernel calls.
+        from ...core.tiling import select_attention_blocks
+        _, block_kv = select_attention_blocks(1, S, D, k.dtype.itemsize, hw)
     pad = (-S) % block_kv
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))

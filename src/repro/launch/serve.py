@@ -9,10 +9,11 @@ requests through the compiled-Program fast path:
     PYTHONPATH=src python -m repro.launch.serve --arch alexnet-owt \
         --slots 2 --requests 4
 
-Dense LM archs (smollm-360m / llama3-8b class) can serve token
-requests through the same compiled-Program machinery — the engine
-executes the transformer's instruction stream per tick instead of the
-legacy scan decode:
+Dense LM archs (smollm-360m / llama3-8b class) serve token requests
+statefully through the compiled (prefill, decode) Program pair — each
+request is prefilled exactly once into a persistent compiler-owned
+KV-cache region, then every tick runs the decode Program (O(1) in
+prompt length; the engine's ``n_prefill_recomputes`` counter stays 0):
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --smoke --program --requests 4 --max-new 8
@@ -86,17 +87,10 @@ def main(argv=None) -> None:
         (params, _), step = restore_checkpoint(args.ckpt, (params, {}))
         print(f"restored params from step {step}")
 
-    use_program = args.program
-    if use_program:
-        try:
-            from ..models.transformer import compile_program
-            compile_program(cfg, batch=args.slots, seq=args.max_len)
-        except NotImplementedError as e:
-            print(f"program path unavailable: {e}; using legacy decode")
-            use_program = False
-
+    # The engine compiles the (prefill, decode) Program pair itself and
+    # warns (once, at construction) when a family has no lowering.
     eng = ServingEngine(cfg, params, slots=args.slots,
-                        max_len=args.max_len, use_program=use_program)
+                        max_len=args.max_len, use_program=args.program)
     if eng.program is not None:
         print(eng.program.listing().splitlines()[0])
     rng = np.random.default_rng(0)
@@ -111,6 +105,10 @@ def main(argv=None) -> None:
     total_tokens = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+    if eng._lm_program:
+        print(f"prefills={eng.n_prefills} "
+              f"prefill_recomputes={eng.n_prefill_recomputes} "
+              f"decode_ticks={eng.n_decode_ticks}")
     for r in sorted(done, key=lambda r: r.uid)[:4]:
         print(f"  req {r.uid}: {list(r.prompt)} -> {r.out_tokens}")
 

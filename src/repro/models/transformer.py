@@ -25,11 +25,15 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from ..configs.base import ArchConfig
 from ..core.hw import TPU_V5E, HardwareModel
-from ..core.ir import (ModelGraph, attention_node, elementwise_node,
-                       embed_node, matmul_node, norm_node)
-from ..core.program import Program, lower_to_program
+from ..core.ir import (ModelGraph, attention_node, decode_attention_node,
+                       elementwise_node, embed_node, matmul_node, norm_node)
+from ..core.program import Program, ProgramPair, lower_to_program
+from ..core.regions import (PersistentSpec, allocate_regions,
+                            extend_with_persistent)
 from ..core.schedule import compile_model
 from ..kernels.decode_attention import decode_attention
 from ..kernels.flash_attention import flash_attention
@@ -39,7 +43,8 @@ from .common import (ParamDef, Rotary, apply_rope, layer_norm, rms_norm)
 from .moe import moe_mlp
 
 __all__ = ["param_defs", "forward", "init_cache", "decode_step",
-           "to_graph", "compile_program", "program_forward"]
+           "to_graph", "to_decode_graph", "compile_program",
+           "compile_program_pair", "program_forward"]
 
 
 # --- parameter declaration -------------------------------------------------------
@@ -348,25 +353,15 @@ def _require_dense(cfg: ArchConfig) -> None:
             f"{cfg.name} ({cfg.family}) still runs the scan forward")
 
 
-def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
-             dtype_bytes: int | None = None) -> ModelGraph:
-    """Lower a dense-transformer config to the compiler IR (§5.1
-    steps 1-2), mirroring ``forward``'s op-for-op structure:
-
-        embed -> N x [attn_norm, wq|wk|wv, flash_attention, wo(+resid),
-                      mlp_norm, w_gate|w_up, mul, w_down(+resid)]
-              -> final_norm -> lm_head
-
-    Residual adds are not standalone ops: each block's two adds ride
-    the o-projection / down-projection writeback (``bypass_of``, the
-    paper's VMOV-on-writeback), which is what makes the residual stream
-    a RESIDUAL_SOURCE the §5.1 allocator pins across the block.  Param
-    paths point into the stacked parameter tree ("blocks/wq:3")."""
-    _require_dense(cfg)
-    by = (dtype_bytes if dtype_bytes is not None
-          else jnp.dtype(cfg.jdtype).itemsize)
+def _build_lm_graph(cfg: ArchConfig, name: str, M: int, by: int,
+                    add_attention) -> ModelGraph:
+    """One block emitter for every dense-LM graph flavor (stateless,
+    cache-writing prefill, per-token decode) — the flavors differ only
+    in the token count M and the attention node, supplied by
+    ``add_attention(g, i, qkv_inputs)``.  Keeping a single emitter is
+    what guarantees the prefill and decode graphs of a serving pair can
+    never structurally drift apart."""
     D, H, KV, hd, F = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_ff
-    M = batch * seq
 
     def norm_meta(param: str | None) -> dict:
         meta = {"norm": cfg.norm}
@@ -377,7 +372,7 @@ def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
                                    param.replace(":", "_b:", 1))
         return meta
 
-    g = ModelGraph(cfg.name)
+    g = ModelGraph(name)
     g.add(embed_node("embed", M, cfg.vocab, D, dtype_bytes=by,
                      param="embed"))
     resid = "embed"
@@ -393,11 +388,7 @@ def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
                           inputs=[an], param=bp("wk")))
         g.add(matmul_node(f"l{i}.wv", M, D, KV * hd, dtype_bytes=by,
                           inputs=[an], param=bp("wv")))
-        g.add(attention_node(
-            f"l{i}.attn", seq_q=seq, seq_kv=seq, heads=H, kv_heads=KV,
-            head_dim=hd, batch=batch, causal=True, dtype_bytes=by,
-            inputs=[f"l{i}.wq", f"l{i}.wk", f"l{i}.wv"],
-            window=cfg.attn_window, rope_theta=cfg.rope_theta))
+        add_attention(g, i, [f"l{i}.wq", f"l{i}.wk", f"l{i}.wv"])
         wo = f"l{i}.wo"
         g.add(matmul_node(wo, M, H * hd, D, dtype_bytes=by,
                           inputs=[f"l{i}.attn"], bypass_of=resid,
@@ -430,6 +421,44 @@ def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
     return g
 
 
+def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
+             dtype_bytes: int | None = None,
+             write_cache: bool = False) -> ModelGraph:
+    """Lower a dense-transformer config to the compiler IR (§5.1
+    steps 1-2), mirroring ``forward``'s op-for-op structure:
+
+        embed -> N x [attn_norm, wq|wk|wv, flash_attention, wo(+resid),
+                      mlp_norm, w_gate|w_up, mul, w_down(+resid)]
+              -> final_norm -> lm_head
+
+    Residual adds are not standalone ops: each block's two adds ride
+    the o-projection / down-projection writeback (``bypass_of``, the
+    paper's VMOV-on-writeback), which is what makes the residual stream
+    a RESIDUAL_SOURCE the §5.1 allocator pins across the block.  Param
+    paths point into the stacked parameter tree ("blocks/wq:3").
+
+    ``write_cache=True`` emits the *prefill* flavor of the graph (the
+    serving pair's first half): each attention node additionally names
+    the persistent ``l{i}.k_cache`` / ``l{i}.v_cache`` regions it
+    writes the computed (post-RoPE) K and raw V into at the admitted
+    slot — a runtime operand carried by the executor's ProgramState."""
+    _require_dense(cfg)
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def add_attention(g, i, qkv):
+        cache_meta = ({"k_cache": f"l{i}.k_cache",
+                       "v_cache": f"l{i}.v_cache"} if write_cache else {})
+        g.add(attention_node(
+            f"l{i}.attn", seq_q=seq, seq_kv=seq, heads=H, kv_heads=KV,
+            head_dim=hd, batch=batch, causal=True, dtype_bytes=by,
+            inputs=qkv, window=cfg.attn_window, rope_theta=cfg.rope_theta,
+            **cache_meta))
+
+    return _build_lm_graph(cfg, cfg.name, batch * seq, by, add_attention)
+
+
 @functools.lru_cache(maxsize=64)
 def compile_program(cfg: ArchConfig, batch: int = 1, seq: int = 64,
                     hw: HardwareModel = TPU_V5E) -> Program:
@@ -441,6 +470,77 @@ def compile_program(cfg: ArchConfig, batch: int = 1, seq: int = 64,
     graph = to_graph(cfg, batch=batch, seq=seq)
     schedule = compile_model(graph, hw)
     return lower_to_program(graph, schedule)
+
+
+def to_decode_graph(cfg: ArchConfig, slots: int = 8, max_len: int = 256,
+                    dtype_bytes: int | None = None) -> ModelGraph:
+    """Lower the per-token decode step to the compiler IR: the same
+    block structure as ``to_graph`` (one shared emitter) but with one
+    token per slot (M = slots) and the attention replaced by
+    ``decode_attention`` against the persistent per-block KV-cache
+    regions — op-for-op the graph of ``decode_step``."""
+    _require_dense(cfg)
+    if cfg.attn_window and cfg.attn_window < max_len:
+        raise NotImplementedError(
+            f"decode Programs do not lower windowed attention yet "
+            f"({cfg.name}: window {cfg.attn_window} < max_len {max_len}); "
+            f"the legacy rolling-window decode_step still serves it")
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+
+    def add_attention(g, i, qkv):
+        g.add(decode_attention_node(
+            f"l{i}.attn", cache_len=max_len, heads=H, kv_heads=KV,
+            head_dim=hd, slots=slots, dtype_bytes=by, inputs=qkv,
+            k_cache=f"l{i}.k_cache", v_cache=f"l{i}.v_cache",
+            rope_theta=cfg.rope_theta))
+
+    return _build_lm_graph(cfg, cfg.name + ".decode", slots, by,
+                           add_attention)
+
+
+def _kv_cache_specs(cfg: ArchConfig, slots: int,
+                    max_len: int) -> tuple[PersistentSpec, ...]:
+    """One persistent (slots, max_len, kv_heads, head_dim) region per
+    block and cache side, in the engine's KV dtype."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    dt = jnp.dtype(cfg.kv_jdtype)
+    shape = (slots, max_len, KV, hd)
+    size = int(np.prod(shape)) * dt.itemsize
+    specs = []
+    for i in range(cfg.n_layers):
+        specs.append(PersistentSpec(f"l{i}.k_cache", shape, dt.name, size))
+        specs.append(PersistentSpec(f"l{i}.v_cache", shape, dt.name, size))
+    return tuple(specs)
+
+
+@functools.lru_cache(maxsize=32)
+def compile_program_pair(cfg: ArchConfig, slots: int = 8,
+                         max_len: int = 256,
+                         hw: HardwareModel = TPU_V5E) -> ProgramPair:
+    """Compile the stateful serving pair: a batch-1 prefill Program
+    (full causal forward + cache writes at the admitted slot) and a
+    decode Program (one token per slot against the cache), sharing one
+    persistent region table so a single runtime ``ProgramState``
+    addresses both.  Cached per (config, slots, max_len, hw)."""
+    pre_graph = to_graph(cfg, batch=1, seq=max_len, write_cache=True)
+    pre_graph.name = cfg.name + ".prefill"
+    dec_graph = to_decode_graph(cfg, slots=slots, max_len=max_len)
+    pre_sched = compile_model(pre_graph, hw)
+    dec_sched = compile_model(dec_graph, hw)
+    pre_plan = allocate_regions(pre_graph, pre_sched)
+    dec_plan = allocate_regions(dec_graph, dec_sched)
+    # One persistent table, one base: the minted KV region ids coincide
+    # across the pair (regions.py invariant), so prefill-written cache
+    # buffers are read by decode ops under the same ids.
+    base = max(len(pre_plan.regions), len(dec_plan.regions))
+    specs = _kv_cache_specs(cfg, slots, max_len)
+    pre_plan = extend_with_persistent(pre_plan, specs, base)
+    dec_plan = extend_with_persistent(dec_plan, specs, base)
+    return ProgramPair(
+        prefill=lower_to_program(pre_graph, pre_sched, pre_plan),
+        decode=lower_to_program(dec_graph, dec_sched, dec_plan))
 
 
 def program_forward(params, tokens, cfg: ArchConfig, *,

@@ -9,6 +9,16 @@ families dispatch through the same loop as the CNNs: ``embed`` /
 ``norm`` / ``flash_attention`` / ``mul`` ops joined ``conv2d`` /
 ``matmul`` / the pools when the transformer lowering landed.
 
+Stateful Programs (the serving pair) add a **ProgramState** carrier:
+the persistent KV-cache buffers (keyed by the allocator's persistent
+region ids) plus the per-slot sequence lengths.  ``run_prefill``
+executes the prefill Program for one admitted request, writing each
+block's K/V into the cache regions at the admitted slot;
+``run_decode`` advances every slot by one token through the
+``decode_attention`` ops.  Both thread the state functionally —
+(params, x, state) -> (out, new_state) — and their jitted wrappers
+donate the state so XLA updates the cache buffers in place.
+
 Invariants:
 
 * **Nothing is re-derived at run time.**  Every kernel call below
@@ -19,7 +29,8 @@ Invariants:
 * **Region ids are allocator-owned.**  The region file below is keyed
   by the §5.1 ``RegionPlan`` ids embedded in the ops; the executor
   reads ``op.in_region``/``k_region``/``v_region``/``bypass_region``
-  and writes ``op.out_region``, and never maps a name to an id itself.
+  (and for stateful ops ``k_cache_region``/``v_cache_region``) and
+  writes ``op.out_region``, and never maps a name to an id itself.
 * **``run`` is functionally pure** (params, x -> output) and
   jit-compatible; models wrap it in ``jax.jit`` per (program, impl)
   via ``jitted_runner``.
@@ -31,16 +42,20 @@ programs (the first op is then the ``embed`` gather).
 from __future__ import annotations
 
 import collections
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
-from ..core.program import Program, ProgramOp
+from ..core.program import Program, ProgramOp, ProgramPair
 from ..kernels.conv2d import avgpool2d_ref, conv2d, maxpool2d_ref
+from ..kernels.decode_attention import decode_attention
 from ..kernels.flash_attention import flash_attention
 from ..kernels.matmul import matmul
 
-__all__ = ["run", "jitted_runner"]
+__all__ = ["run", "jitted_runner", "ProgramState", "init_program_state",
+           "run_prefill", "run_decode", "jitted_prefill_runner",
+           "jitted_decode_runner"]
 
 
 def _param(params, key: str | None):
@@ -60,10 +75,14 @@ def _param(params, key: str | None):
 
 
 def _run_attention(op: ProgramOp, regions: dict, *, impl: str,
-                   interpret: bool | None) -> jax.Array:
+                   interpret: bool | None, return_kv: bool = False):
     """Dispatch one flash_attention op: reshape the flat q/k/v regions
     to per-head layout, apply RoPE when the spec says so, and call the
-    kernel with the schedule's exact (block_q, block_kv)."""
+    kernel with the schedule's exact (block_q, block_kv).
+
+    ``return_kv=True`` additionally hands back the per-head (post-RoPE)
+    K and V — exactly what a cache-writing prefill op stores in its
+    persistent regions."""
     # Lazy import: models.common is the one shared home of the rotary
     # helpers and models/cnn.py imports this module at load time.
     from ..models.common import Rotary, apply_rope
@@ -79,7 +98,10 @@ def _run_attention(op: ProgramOp, regions: dict, *, impl: str,
     out = flash_attention(q, k, v, causal=a.causal, window=a.window,
                           block_q=a.block_q, block_kv=a.block_kv,
                           impl=impl, interpret=interpret)
-    return out.transpose(0, 2, 1, 3).reshape(B, S, a.heads * a.head_dim)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, a.heads * a.head_dim)
+    if return_kv:
+        return out, k, v
+    return out
 
 
 def _run_norm(op: ProgramOp, src: jax.Array, params) -> jax.Array:
@@ -92,70 +114,219 @@ def _run_norm(op: ProgramOp, src: jax.Array, params) -> jax.Array:
     return rms_norm(src, w)
 
 
+def _run_op(op: ProgramOp, src: jax.Array, regions: dict, params, *,
+            impl: str, interpret: bool | None) -> jax.Array:
+    """Dispatch one (stateless) op with its pre-resolved schedule."""
+    if op.kernel == "conv2d":
+        p = _param(params, op.param_key)
+        bypass = (regions[op.bypass_region]
+                  if op.fuse_bypass and op.bypass_region is not None
+                  else None)
+        return conv2d(
+            src, p["w"], stride=op.stride, pad=op.pad,
+            bias=p["b"] if op.fuse_bias else None,
+            activation=op.fuse_activation, bypass=bypass,
+            bypass_first=op.bypass_first, fuse_pool=op.fuse_pool,
+            strip_storage=op.strip_storage or "auto",
+            tiling=op.conv_tiling, dataflow=op.dataflow,
+            impl=impl, interpret=interpret)
+    if op.kernel == "matmul":
+        p = _param(params, op.param_key)
+        w = p["w"] if isinstance(p, dict) else p
+        if op.transpose_w:
+            w = w.T
+        if op.flatten_input:
+            src = src.reshape(src.shape[0], -1)
+        bypass = (regions[op.bypass_region]
+                  if op.fuse_bypass and op.bypass_region is not None
+                  else None)
+        if bypass is not None and op.flatten_input:
+            bypass = bypass.reshape(bypass.shape[0], -1)
+        return matmul(
+            src, w,
+            bias=(p["b"] if isinstance(p, dict) and op.fuse_bias
+                  else None),
+            activation=op.fuse_activation, bypass=bypass,
+            dataflow=op.dataflow, block=op.block,
+            impl=impl, interpret=interpret)
+    if op.kernel == "flash_attention":
+        return _run_attention(op, regions, impl=impl, interpret=interpret)
+    if op.kernel == "embed":
+        table = _param(params, op.param_key)
+        return table[src]
+    if op.kernel == "norm":
+        return _run_norm(op, src, params)
+    if op.kernel == "mul":
+        return src * regions[op.in2_region]
+    if op.kernel == "add":
+        return src + regions[op.in2_region]
+    if op.kernel == "maxpool":
+        return maxpool2d_ref(src, window=op.window, stride=op.stride,
+                             pad=op.pad)
+    if op.kernel == "avgpool":
+        return avgpool2d_ref(src, window=op.window, stride=op.stride,
+                             pad=op.pad)
+    raise NotImplementedError(f"unknown program kernel {op.kernel}")
+
+
 def run(program: Program, params, x: jax.Array, *, impl: str = "auto",
         interpret: bool | None = None) -> jax.Array:
     """Execute ``program`` against ``params`` on input ``x``.
 
     x: (B, H, W, C) for CNN programs, (B, S) int32 tokens for LM
     programs.  Returns the final op's output (the array living in
-    ``program.output_region``).
+    ``program.output_region``).  Cache-writing prefill ops run as plain
+    flash attention here (stateless execution ignores the persistent
+    regions); ``decode_attention`` ops need state and are rejected —
+    use ``run_decode``.
     """
     regions: dict[int, jax.Array] = {program.input_region: x}
     for op in program.ops:
-        src = regions[op.in_region]
-        if op.kernel == "conv2d":
-            p = _param(params, op.param_key)
-            bypass = (regions[op.bypass_region]
-                      if op.fuse_bypass and op.bypass_region is not None
-                      else None)
-            out = conv2d(
-                src, p["w"], stride=op.stride, pad=op.pad,
-                bias=p["b"] if op.fuse_bias else None,
-                activation=op.fuse_activation, bypass=bypass,
-                bypass_first=op.bypass_first, fuse_pool=op.fuse_pool,
-                strip_storage=op.strip_storage or "auto",
-                tiling=op.conv_tiling, dataflow=op.dataflow,
-                impl=impl, interpret=interpret)
-        elif op.kernel == "matmul":
-            p = _param(params, op.param_key)
-            w = p["w"] if isinstance(p, dict) else p
-            if op.transpose_w:
-                w = w.T
-            if op.flatten_input:
-                src = src.reshape(src.shape[0], -1)
-            bypass = (regions[op.bypass_region]
-                      if op.fuse_bypass and op.bypass_region is not None
-                      else None)
-            if bypass is not None and op.flatten_input:
-                bypass = bypass.reshape(bypass.shape[0], -1)
-            out = matmul(
-                src, w,
-                bias=(p["b"] if isinstance(p, dict) and op.fuse_bias
-                      else None),
-                activation=op.fuse_activation, bypass=bypass,
-                dataflow=op.dataflow, block=op.block,
-                impl=impl, interpret=interpret)
-        elif op.kernel == "flash_attention":
-            out = _run_attention(op, regions, impl=impl, interpret=interpret)
-        elif op.kernel == "embed":
-            table = _param(params, op.param_key)
-            out = table[src]
-        elif op.kernel == "norm":
-            out = _run_norm(op, src, params)
-        elif op.kernel == "mul":
-            out = src * regions[op.in2_region]
-        elif op.kernel == "add":
-            out = src + regions[op.in2_region]
-        elif op.kernel == "maxpool":
-            out = maxpool2d_ref(src, window=op.window, stride=op.stride,
-                                pad=op.pad)
-        elif op.kernel == "avgpool":
-            out = avgpool2d_ref(src, window=op.window, stride=op.stride,
-                                pad=op.pad)
-        else:
-            raise NotImplementedError(f"unknown program kernel {op.kernel}")
-        regions[op.out_region] = out
+        if op.kernel == "decode_attention":
+            raise ValueError(
+                f"op {op.name} needs a ProgramState (persistent KV "
+                f"regions); use run_decode for decode Programs")
+        regions[op.out_region] = _run_op(op, regions[op.in_region], regions,
+                                         params, impl=impl,
+                                         interpret=interpret)
     return regions[program.output_region]
+
+
+# --- stateful Programs (serving prefill/decode pair) -------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class ProgramState:
+    """Runtime carrier for a Program pair's persistent regions.
+
+    ``caches`` maps the allocator's persistent region ids to their
+    buffers — for the LM pair, (slots, max_len, kv_heads, head_dim)
+    per block and cache side; ``lengths`` is the per-slot sequence
+    length (the decode ops' position operand).  Registered as a pytree
+    so the jitted prefill/decode runners can donate it and XLA aliases
+    the cache updates in place.
+    """
+
+    caches: dict[int, jax.Array]
+    lengths: jax.Array               # (slots,) int32
+
+    def tree_flatten(self):
+        rids = tuple(sorted(self.caches))
+        return (tuple(self.caches[r] for r in rids) + (self.lengths,), rids)
+
+    @classmethod
+    def tree_unflatten(cls, rids, leaves):
+        *bufs, lengths = leaves
+        return cls(dict(zip(rids, bufs)), lengths)
+
+
+def init_program_state(pair: ProgramPair | Program) -> ProgramState:
+    """Allocate zeroed persistent buffers from the plan's persistent
+    regions (their shape/dtype is allocator-recorded identity)."""
+    plan = (pair.decode.plan if isinstance(pair, ProgramPair) else pair.plan)
+    name = (pair.decode.name if isinstance(pair, ProgramPair) else pair.name)
+    persistent = plan.persistent_regions()
+    if not persistent:
+        raise ValueError(
+            f"program {name} reserves no persistent regions "
+            f"({len(plan.regions)} transient only) — stateful execution "
+            f"needs a plan extended via regions.extend_with_persistent "
+            f"(e.g. transformer.compile_program_pair)")
+    caches = {r.rid: jnp.zeros(r.shape, jnp.dtype(r.dtype))
+              for r in persistent}
+    slots = persistent[0].shape[0]
+    return ProgramState(caches, jnp.zeros((slots,), jnp.int32))
+
+
+def _write_prefill_cache(caches: dict, op: ProgramOp, k, v, slot) -> None:
+    """Store a prefill op's per-head K/V — (1, KVh, S, hd) — into the
+    (slots, max_len, KV, hd) cache regions at the admitted slot."""
+    for rid, val in ((op.k_cache_region, k), (op.v_cache_region, v)):
+        buf = caches[rid]
+        row = val[0].transpose(1, 0, 2).astype(buf.dtype)     # (S, KV, hd)
+        caches[rid] = jax.lax.dynamic_update_slice(
+            buf, row[None], (slot, 0, 0, 0))
+
+
+def run_prefill(program: Program, params, tokens: jax.Array,
+                state: ProgramState, slot, length, *, impl: str = "auto",
+                interpret: bool | None = None):
+    """Execute the prefill Program for one admitted request.
+
+    tokens: (1, max_len) int32, the prompt right-padded (rows past
+    ``length`` are masked downstream by the per-slot length, so their
+    K/V content is inert).  Writes each block's K/V into the persistent
+    cache regions at ``slot``, sets ``lengths[slot] = length`` and
+    returns (logits (1, max_len, vocab), new_state).
+    """
+    regions: dict[int, jax.Array] = {program.input_region: tokens}
+    caches = dict(state.caches)
+    for op in program.ops:
+        src = regions[op.in_region]
+        if op.kernel == "flash_attention" and op.k_cache_region is not None:
+            out, k, v = _run_attention(op, regions, impl=impl,
+                                       interpret=interpret, return_kv=True)
+            _write_prefill_cache(caches, op, k, v, slot)
+            regions[op.out_region] = out
+            continue
+        regions[op.out_region] = _run_op(op, src, regions, params,
+                                         impl=impl, interpret=interpret)
+    lengths = state.lengths.at[slot].set(jnp.asarray(length, jnp.int32))
+    return regions[program.output_region], ProgramState(caches, lengths)
+
+
+def run_decode(program: Program, params, tokens: jax.Array,
+               state: ProgramState, *, impl: str = "auto",
+               interpret: bool | None = None):
+    """Advance every slot by one token through the decode Program.
+
+    tokens: (slots,) int32.  Each ``decode_attention`` op RoPEs the new
+    q/k at the slot's absolute position, writes the new K/V row into
+    the persistent cache regions at ``position % max_len`` (the legacy
+    rolling-cache rule), and attends over ``min(position + 1,
+    max_len)`` valid rows with the schedule's block_kv.  Returns
+    (logits (slots, vocab), new_state) with every length advanced by
+    one — free slots carry garbage logits their (absent) request never
+    reads.
+    """
+    from ..models.common import Rotary, apply_rope
+    regions: dict[int, jax.Array] = {program.input_region: tokens}
+    caches = dict(state.caches)
+    pos = state.lengths
+    for op in program.ops:
+        src = regions[op.in_region]
+        if op.kernel == "decode_attention":
+            a = op.attn
+            B = src.shape[0]
+            q = src.reshape(B, a.heads, a.head_dim)
+            k_new = regions[op.k_region].reshape(B, a.kv_heads, a.head_dim)
+            v_new = regions[op.v_region].reshape(B, a.kv_heads, a.head_dim)
+            if a.rope_theta:
+                cos, sin = Rotary(a.head_dim, a.rope_theta).freqs(pos)
+                q = apply_rope(q, cos[:, None], sin[:, None])
+                k_new = apply_rope(k_new, cos[:, None], sin[:, None])
+            ck, cv = caches[op.k_cache_region], caches[op.v_cache_region]
+            cache_len = ck.shape[1]
+            row = pos % cache_len                 # rolling overwrite
+
+            def upd(c, x, r):
+                return jax.lax.dynamic_update_slice_in_dim(
+                    c, x[None], r, axis=0)
+
+            ck = jax.vmap(upd)(ck, k_new.astype(ck.dtype), row)
+            cv = jax.vmap(upd)(cv, v_new.astype(cv.dtype), row)
+            caches[op.k_cache_region] = ck
+            caches[op.v_cache_region] = cv
+            kv_len = jnp.minimum(pos + 1, cache_len)
+            out = decode_attention(
+                q, ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+                kv_len=kv_len, block_kv=a.block_kv, impl=impl,
+                interpret=interpret)
+            regions[op.out_region] = out.reshape(B, a.heads * a.head_dim)
+            continue
+        regions[op.out_region] = _run_op(op, src, regions, params,
+                                         impl=impl, interpret=interpret)
+    return (regions[program.output_region],
+            ProgramState(caches, pos + 1))
 
 
 _RUNNERS: "collections.OrderedDict" = collections.OrderedDict()
@@ -172,14 +343,44 @@ def jitted_runner(program: Program, impl: str = "auto",
     long-running server cycling through many (config, hw, batch)
     variants cannot pin programs + compiled executables forever.
     """
-    key = (id(program), impl, interpret)
-    fn = _RUNNERS.get(key)
-    if fn is None:
+    def make():
         def _run(params, x, _program=program):
             return run(_program, params, x, impl=impl, interpret=interpret)
-        fn = _RUNNERS[key] = jax.jit(_run)
+        return jax.jit(_run)
+    return _cached_runner((id(program), impl, interpret, "run"), make)
+
+
+def _cached_runner(key, make):
+    fn = _RUNNERS.get(key)
+    if fn is None:
+        fn = _RUNNERS[key] = make()
         while len(_RUNNERS) > _RUNNERS_CAP:
             _RUNNERS.popitem(last=False)
     else:
         _RUNNERS.move_to_end(key)
     return fn
+
+
+def jitted_prefill_runner(program: Program, impl: str = "auto",
+                          interpret: bool | None = None):
+    """Compiled prefill: (params, tokens, state, slot, length) ->
+    (logits, state).  The state argument is donated so the cache
+    buffers update in place."""
+    def make():
+        def _run(params, tokens, state, slot, length, _program=program):
+            return run_prefill(_program, params, tokens, state, slot,
+                               length, impl=impl, interpret=interpret)
+        return jax.jit(_run, donate_argnums=(2,))
+    return _cached_runner((id(program), impl, interpret, "prefill"), make)
+
+
+def jitted_decode_runner(program: Program, impl: str = "auto",
+                         interpret: bool | None = None):
+    """Compiled decode tick: (params, tokens, state) -> (logits, state)
+    with the state donated — the bandwidth-bound serving hot loop."""
+    def make():
+        def _run(params, tokens, state, _program=program):
+            return run_decode(_program, params, tokens, state,
+                              impl=impl, interpret=interpret)
+        return jax.jit(_run, donate_argnums=(2,))
+    return _cached_runner((id(program), impl, interpret, "decode"), make)

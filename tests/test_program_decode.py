@@ -1,0 +1,305 @@
+"""Stateful decode Programs: the (prefill, decode) pair sharing
+persistent compiler-owned KV-cache regions, the ProgramState carrier,
+prefill+decode parity vs the legacy ``init_cache``/``decode_step``
+loop, persistent-region lifetime invariants, the serving engine's
+prefill-once/decode-per-tick path, and the decode_attention dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.models import init_params, transformer
+from repro.runtime import executor
+
+K0 = jax.random.PRNGKey(0)
+
+
+def _cfg(name="smollm-360m", **over):
+    cfg = REGISTRY[name].smoke()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _setup(cfg, slots=2, max_len=16):
+    params = init_params(transformer.param_defs(cfg), K0)
+    pair = transformer.compile_program_pair(cfg, slots=slots,
+                                            max_len=max_len)
+    state = executor.init_program_state(pair)
+    return params, pair, state
+
+
+def _prefill_slot(pair, params, state, slot, prompt, max_len, *,
+                  impl="reference", interpret=None):
+    padded = np.zeros((1, max_len), np.int32)
+    padded[0, :len(prompt)] = prompt
+    return executor.run_prefill(pair.prefill, params, jnp.asarray(padded),
+                                state, slot, len(prompt), impl=impl,
+                                interpret=interpret)
+
+
+# --- prefill + N-decode parity vs the legacy cache loop ----------------------------
+@pytest.mark.parametrize("name", ["smollm-360m", "llama3-8b"])
+def test_prefill_and_decode_match_legacy_cache_loop(name):
+    """Program prefill + N decode steps == teacher-forcing the same
+    tokens through ``init_cache``/``decode_step``, logits <= 1e-5 at
+    every step (both slots live, equal-length prompts so the legacy
+    batch advances in lockstep)."""
+    cfg = _cfg(name)
+    slots, max_len, P, N = 2, 16, 5, 4
+    params, pair, state = _setup(cfg, slots, max_len)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(slots, P)).astype(np.int32)
+
+    # legacy oracle: feed every prompt token through the decode loop
+    cache = transformer.init_cache(cfg, slots, max_len)
+    for t in range(P):
+        leg_logits, cache = transformer.decode_step(
+            params, cache, jnp.asarray(prompts[:, t]), cfg,
+            impl="reference")
+
+    for slot in range(slots):
+        logits, state = _prefill_slot(pair, params, state, slot,
+                                      prompts[slot], max_len)
+        np.testing.assert_allclose(
+            np.asarray(logits[0, P - 1]), np.asarray(leg_logits[slot]),
+            rtol=0, atol=1e-5)
+    assert list(np.asarray(state.lengths)) == [P] * slots
+
+    toks = np.argmax(np.asarray(leg_logits), axis=-1).astype(np.int32)
+    for _ in range(N):
+        leg_logits, cache = transformer.decode_step(
+            params, cache, jnp.asarray(toks), cfg, impl="reference")
+        dec_logits, state = executor.run_decode(
+            pair.decode, params, jnp.asarray(toks), state,
+            impl="reference")
+        np.testing.assert_allclose(np.asarray(dec_logits),
+                                   np.asarray(leg_logits),
+                                   rtol=0, atol=1e-5)
+        toks = np.argmax(np.asarray(leg_logits), axis=-1).astype(np.int32)
+    assert list(np.asarray(state.lengths)) == [P + N] * slots
+
+
+def test_decode_rolls_cache_past_max_len():
+    """Positions past max_len overwrite the oldest rows (the legacy
+    rolling rule) — lengths keep counting, kv_len saturates, logits
+    still match decode_step."""
+    cfg = _cfg(n_layers=2)
+    slots, max_len, P = 1, 8, 8
+    params, pair, state = _setup(cfg, slots, max_len)
+    prompt = np.arange(1, P + 1, dtype=np.int32)
+    cache = transformer.init_cache(cfg, slots, max_len)
+    for t in range(P):
+        leg_logits, cache = transformer.decode_step(
+            params, cache, jnp.asarray(prompt[t:t + 1]), cfg,
+            impl="reference")
+    _, state = _prefill_slot(pair, params, state, 0, prompt, max_len)
+    toks = np.argmax(np.asarray(leg_logits), axis=-1).astype(np.int32)
+    for _ in range(3):                     # cache full: rolling overwrite
+        leg_logits, cache = transformer.decode_step(
+            params, cache, jnp.asarray(toks), cfg, impl="reference")
+        dec_logits, state = executor.run_decode(
+            pair.decode, params, jnp.asarray(toks), state,
+            impl="reference")
+        np.testing.assert_allclose(np.asarray(dec_logits),
+                                   np.asarray(leg_logits),
+                                   rtol=0, atol=1e-5)
+        toks = np.argmax(np.asarray(leg_logits), axis=-1).astype(np.int32)
+
+
+@pytest.mark.pallas
+def test_decode_pallas_interpret_parity():
+    """The decode Program runs on the Pallas kernels (matmul +
+    decode_attention) with the schedule's exact blocks."""
+    cfg = _cfg(n_layers=1)
+    params, pair, state = _setup(cfg, slots=1, max_len=16)
+    prompt = np.asarray([3, 1, 4], np.int32)
+    _, state = _prefill_slot(pair, params, state, 0, prompt, 16,
+                             impl="pallas", interpret=True)
+    ref_state = executor.init_program_state(pair)
+    _, ref_state = _prefill_slot(pair, params, ref_state, 0, prompt, 16)
+    toks = jnp.asarray([7], jnp.int32)
+    out, _ = executor.run_decode(pair.decode, params, toks, state,
+                                 impl="pallas", interpret=True)
+    ref, _ = executor.run_decode(pair.decode, params, toks, ref_state,
+                                 impl="reference")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --- persistent-region lifetime ----------------------------------------------------
+def test_persistent_regions_shared_and_never_reused():
+    """The pair shares one persistent table: identical allocator-owned
+    ids in both plans, disjoint from every transient region, never
+    assigned to an op output, and sized (slots, max_len, KV, hd)."""
+    cfg = _cfg()
+    slots, max_len = 3, 16
+    _, pair, _ = _setup(cfg, slots, max_len)
+    pre, dec = pair.prefill.plan, pair.decode.plan
+    assert pre.persistent == dec.persistent == pair.persistent
+    assert len(pair.persistent) == 2 * cfg.n_layers
+    for plan in (pre, dec):
+        transient = {r.rid for r in plan.regions
+                     if r.kind != "persistent"}
+        persistent = set(plan.persistent.values())
+        assert not transient & persistent
+        # ping-pong/pinned reuse never hands out a persistent id
+        assert not set(plan.out_region.values()) & persistent
+        for name, rid in plan.persistent.items():
+            r = plan.region(rid)
+            assert r.kind == "persistent" and r.name == name
+            assert r.shape == (slots, max_len, cfg.n_kv_heads, cfg.hd)
+    # the transient footprint still matches the stateless lowering
+    flat = transformer.compile_program(cfg, batch=1, seq=max_len)
+    assert dec.n_pingpong == flat.plan.n_pingpong
+    assert dec.n_pinned == flat.plan.n_pinned
+
+
+def test_program_ops_carry_cache_regions_and_decode_blocks():
+    """Prefill flash ops write the cache; decode ops read/write it with
+    the decode-regime block choice from select_attention_blocks."""
+    from repro.core.hw import TPU_V5E
+    from repro.core.tiling import select_attention_blocks
+    cfg = _cfg()
+    max_len = 16
+    _, pair, _ = _setup(cfg, slots=2, max_len=max_len)
+    want = select_attention_blocks(1, max_len, cfg.hd, 4, TPU_V5E)
+    for i in range(cfg.n_layers):
+        pre_op = pair.prefill.op(f"l{i}.attn")
+        dec_op = pair.decode.op(f"l{i}.attn")
+        assert pre_op.kernel == "flash_attention"
+        assert dec_op.kernel == "decode_attention"
+        assert (pre_op.k_cache_region == dec_op.k_cache_region
+                == pair.persistent[f"l{i}.k_cache"])
+        assert (pre_op.v_cache_region == dec_op.v_cache_region
+                == pair.persistent[f"l{i}.v_cache"])
+        assert (dec_op.attn.block_q, dec_op.attn.block_kv) == want
+    listing = pair.listing()
+    assert "persistent KV regions" in listing
+    assert "decode_attention" in listing and "cache=" in listing
+
+
+def test_stateless_run_rejects_decode_program():
+    cfg = _cfg(n_layers=1)
+    params, pair, _ = _setup(cfg, slots=1, max_len=8)
+    with pytest.raises(ValueError, match="ProgramState"):
+        executor.run(pair.decode, params, jnp.zeros((1,), jnp.int32),
+                     impl="reference")
+
+
+def test_windowed_configs_are_gated():
+    cfg = _cfg(attn_window=8)
+    with pytest.raises(NotImplementedError, match="window"):
+        transformer.to_decode_graph(cfg, slots=1, max_len=16)
+
+
+def test_engine_rejects_plain_lm_program():
+    """A bare stateless Program (the retired recompute API) is refused
+    with a pointer to compile_program_pair, not an opaque crash."""
+    from repro.serving import ServingEngine
+    cfg = _cfg(n_layers=1)
+    params = init_params(transformer.param_defs(cfg), K0)
+    flat = transformer.compile_program(cfg, batch=1, seq=8)
+    with pytest.raises(TypeError, match="compile_program_pair"):
+        ServingEngine(cfg, params, slots=1, max_len=8, program=flat)
+    # and a pair compiled for other serving geometry is caught up front
+    pair = transformer.compile_program_pair(cfg, slots=2, max_len=8)
+    with pytest.raises(ValueError, match="slots/max_len"):
+        ServingEngine(cfg, params, slots=4, max_len=8, program=pair)
+
+
+# --- serving round trip ------------------------------------------------------------
+def test_serving_stateful_round_trip_matches_decode_oracle():
+    """Engine tokens == greedy generation through the legacy
+    ``init_cache``/``decode_step`` loop, per request — and the engine
+    never recomputes a prefill."""
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg(n_layers=2)
+    params = init_params(transformer.param_defs(cfg), K0)
+    max_len, max_new = 16, 4
+    eng = ServingEngine(cfg, params, slots=2, max_len=max_len,
+                        impl="reference", use_program=True)
+    assert eng.program is not None
+    prompts = [[3, 1, 4], [15]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=np.asarray(p, np.int32),
+                           max_new_tokens=max_new))
+    done = sorted(eng.run_until_drained(), key=lambda r: r.uid)
+    assert len(done) == 2 and all(r.done for r in done)
+    assert eng.n_prefills == 2
+    assert eng.n_prefill_recomputes == 0
+    for req, prompt in zip(done, prompts):
+        cache = transformer.init_cache(cfg, 1, max_len)
+        want, logits = [], None
+        for t in prompt:
+            logits, cache = transformer.decode_step(
+                params, cache, jnp.asarray([t], jnp.int32), cfg,
+                impl="reference")
+        for _ in range(max_new):
+            nxt = int(np.argmax(np.asarray(logits)[0]))
+            want.append(nxt)
+            logits, cache = transformer.decode_step(
+                params, cache, jnp.asarray([nxt], jnp.int32), cfg,
+                impl="reference")
+        assert req.out_tokens == want
+
+
+def test_serving_decode_dispatches_decode_attention(monkeypatch):
+    """Decode ticks run the decode_attention kernel — never the causal
+    flash recompute.  The engine's runners are jitted, so the spies see
+    each program's *trace*: flash appears exactly once (the prefill
+    trace), decode_attention in the decode trace, and multiple decode
+    ticks replay the compiled decode executable (no flash anywhere)."""
+    from repro.serving import Request, ServingEngine
+    # Fresh depth so the lru-cached pair (and its jitted runners) from
+    # other tests cannot satisfy this engine with a stale trace.
+    cfg = _cfg(n_layers=3)
+    params = init_params(transformer.param_defs(cfg), K0)
+    decode_calls, flash_calls = [], []
+    real_decode = executor.decode_attention
+    real_flash = executor.flash_attention
+
+    def spy_decode(q, k, v, **kw):
+        decode_calls.append((q.shape, k.shape, kw.get("block_kv")))
+        return real_decode(q, k, v, **kw)
+
+    def spy_flash(q, k, v, **kw):
+        flash_calls.append(q.shape)
+        return real_flash(q, k, v, **kw)
+
+    monkeypatch.setattr(executor, "decode_attention", spy_decode)
+    monkeypatch.setattr(executor, "flash_attention", spy_flash)
+    eng = ServingEngine(cfg, params, slots=2, max_len=16,
+                        impl="reference", use_program=True)
+    eng.submit(Request(uid=0, prompt=np.asarray([5, 6], np.int32),
+                       max_new_tokens=3))
+    eng.run_until_drained()
+    assert eng.n_decode_ticks >= 2
+    # flash traced only by the prefill program; the decode trace holds
+    # decode_attention ops exclusively
+    assert len(flash_calls) == cfg.n_layers
+    assert len(decode_calls) == cfg.n_layers
+    qshape, kshape, bkv = decode_calls[0]
+    assert qshape == (2, cfg.n_heads, cfg.hd)
+    assert kshape == (2, cfg.n_kv_heads, 16, cfg.hd)
+    pair = transformer.compile_program_pair(cfg, slots=2, max_len=16)
+    assert bkv == pair.decode.op("l0.attn").attn.block_kv
+
+
+def test_program_state_is_donatable_pytree():
+    """ProgramState round-trips through tree flatten/unflatten and the
+    jitted decode runner keeps buffer shapes/dtypes stable (the
+    donation contract)."""
+    cfg = _cfg(n_layers=1)
+    params, pair, state = _setup(cfg, slots=2, max_len=8)
+    leaves, treedef = jax.tree.flatten(state)
+    rebuilt = jax.tree.unflatten(treedef, leaves)
+    assert sorted(rebuilt.caches) == sorted(state.caches)
+    fn = executor.jitted_decode_runner(pair.decode, impl="reference")
+    logits, new_state = fn(params, jnp.zeros((2,), jnp.int32), state)
+    assert logits.shape == (2, cfg.vocab)
+    for rid, buf in new_state.caches.items():
+        assert buf.shape == state.caches[rid].shape
+        assert buf.dtype == state.caches[rid].dtype
+    assert list(np.asarray(new_state.lengths)) == [1, 1]
