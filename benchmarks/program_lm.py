@@ -121,6 +121,35 @@ def run_decode_bench():
          f"per_admission_us={t_prefill:.1f};"
          f"persistent_kv_mb={pair.persistent_bytes / 1e6:.3f}")
 
+    # Rolling-window region plan: the same pair compiled for a sliding
+    # window holds min(max_len, W) KV rows per slot — max_len/W fewer
+    # persistent bytes resident, at full decode-Program parity.  Track
+    # the resident-bytes trajectory alongside the decode tokens/s.
+    window = max(max_len // 4, 2)
+    win_cfg = dataclasses.replace(cfg, name=cfg.name + "-win",
+                                  attn_window=window)
+    win_pair = transformer.compile_program_pair(win_cfg, slots=slots,
+                                                max_len=max_len)
+    win_state = executor.init_program_state(win_pair)
+    win_prefill = executor.jitted_prefill_runner(win_pair.prefill,
+                                                 impl="reference")
+    for s in range(slots):
+        padded = np.zeros((1, max_len), np.int32)
+        padded[0, :prompt_len] = prompts[s]
+        out, win_state = win_prefill(params, jnp.asarray(padded),
+                                     win_state, s, prompt_len)
+    jax.block_until_ready(out)
+    win_decode = executor.jitted_decode_runner(win_pair.decode,
+                                               impl="reference")
+    t_win = _time_threaded(win_decode, params, toks, win_state,
+                           warmup=warmup, iters=iters)
+    emit(f"program_lm/decode/{cfg.name}/windowed_kv", t_win,
+         f"window={window};"
+         f"windowed_tps={slots / (t_win * 1e-6):.1f};"
+         f"kv_resident_full_mb={pair.persistent_bytes / 1e6:.3f};"
+         f"kv_resident_win_mb={win_pair.persistent_bytes / 1e6:.3f};"
+         f"kv_shrink={pair.persistent_bytes / win_pair.persistent_bytes:.1f}x")
+
 
 def run():
     cfg = REGISTRY["smollm-360m"].smoke()

@@ -304,6 +304,7 @@ def attention_node(name: str, *, seq_q: int, seq_kv: int, heads: int,
 def decode_attention_node(name: str, *, cache_len: int, heads: int,
                           kv_heads: int, head_dim: int, slots: int,
                           k_cache: str, v_cache: str, dtype_bytes: int = 2,
+                          window: int | None = None,
                           inputs: list[str] | None = None,
                           **meta) -> LayerNode:
     """Single-token decode attention against a persistent KV cache.
@@ -313,7 +314,14 @@ def decode_attention_node(name: str, *, cache_len: int, heads: int,
     regions (core/regions.py) the op reads the history from and writes
     the new token's K/V into at the per-slot position — the position is
     a runtime operand carried by the executor's ``ProgramState``, never
-    baked into the instruction stream."""
+    baked into the instruction stream.
+
+    ``window`` marks sliding-window attention: the §5.1 region plan
+    then sizes the cache at ``cache_len = min(max_len, window)`` rows
+    per slot and eviction is the rolling overwrite at ``pos %
+    cache_len`` — older rows are never attendable, so they never need
+    to be resident."""
+    win_meta = {"window": window} if window else {}
     return LayerNode(
         name=name, kind=LayerKind.ATTENTION,
         dims={"seq_q": 1, "seq_kv": cache_len, "heads": heads,
@@ -321,7 +329,7 @@ def decode_attention_node(name: str, *, cache_len: int, heads: int,
               "causal": True},
         dtype_bytes=dtype_bytes, inputs=inputs or [],
         meta={"decode": True, "k_cache": k_cache, "v_cache": v_cache,
-              **meta})
+              **win_meta, **meta})
 
 
 def norm_node(name: str, numel: int, *, dtype_bytes: int = 2,

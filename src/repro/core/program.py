@@ -63,7 +63,12 @@ class AttentionSpec:
       (and the KV analogues) into per-head layout with these, so the
       kernel never consults the model config.
     * ``causal`` — decoder-LM causal masking (fixed at lowering).
-    * ``window`` — causal sliding-window size, or None for full.
+    * ``window`` — causal sliding-window size, or None for full.  On a
+      ``decode_attention`` op a window additionally means the §5.1 plan
+      sized the persistent cache regions at ``min(max_len, window)``
+      rows (rolling eviction-by-overwrite); the executor derives the
+      ring extent from the region shape, so the field is the *record*
+      of the decision, never re-derived.
     * ``rope_theta`` — rotary base; the executor applies RoPE to q/k
       before the kernel when set, 0.0 disables it (e.g. learned
       absolute positions).
@@ -170,6 +175,7 @@ class ProgramOp:
             a = self.attn
             sched = (f"h={a.heads}/{a.kv_heads}x{a.head_dim} "
                      f"bkv={a.block_kv}"
+                     f"{f' win={a.window}' if a.window else ''}"
                      f"{' rope' if a.rope_theta else ''}"
                      f" cache=r{self.k_cache_region},"
                      f"r{self.v_cache_region}@pos")
@@ -238,10 +244,19 @@ class ProgramPair:
     token through ``decode_attention`` ops reading/writing the same
     regions.  Both plans embed identical persistent ids
     (``regions.extend_with_persistent`` with a shared base), so one
-    runtime ``ProgramState`` serves both instruction streams."""
+    runtime ``ProgramState`` serves both instruction streams.
+
+    ``slots`` / ``max_len`` record the serving geometry the pair was
+    compiled for.  The persistent-region shapes alone cannot recover
+    ``max_len`` once a sliding window collapses the row count to
+    ``min(max_len, attn_window)``, yet the prefill stream is still
+    pinned to (1, max_len) token batches — so the engine validates a
+    caller-supplied pair against these fields, not just the shapes."""
 
     prefill: Program
     decode: Program
+    slots: int | None = None
+    max_len: int | None = None
 
     @property
     def persistent(self) -> dict:

@@ -22,7 +22,13 @@ region per transformer block and cache side).  A persistent region is
 never assigned to an op output, never retired and never reused; its id
 is shared by every Program compiled against the same persistent table
 (the prefill/decode pair), so the runtime's ``ProgramState`` buffers
-are addressed identically by both.
+are addressed identically by both.  The sizing rule is the paper's
+"region sized at the largest output it holds" applied to state: a
+sliding-window attention config can never attend past its window, so
+its cache_len is ``min(max_len, attn_window)`` (the caller's
+``PersistentSpec`` shape) and eviction is the runtime's rolling
+overwrite at ``pos % cache_len`` — a region-plan decision, not a
+runtime one.
 
 Invariants:
 

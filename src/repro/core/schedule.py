@@ -220,7 +220,8 @@ def _schedule_attention(node: LayerNode, hw: HardwareModel) -> LayerSchedule:
     from the same chooser's decode regime."""
     d = node.dims
     bq, bkv = select_attention_blocks(d["seq_q"], d["seq_kv"],
-                                      d["head_dim"], node.dtype_bytes, hw)
+                                      d["head_dim"], node.dtype_bytes, hw,
+                                      window=node.meta.get("window"))
     flops = node.flops()
     traffic = node.min_bytes()
     notes = {"block_q": bq, "block_kv": bkv,

@@ -136,7 +136,8 @@ def select_matmul_tiles(M: int, K: int, N: int, dtype_bytes: int,
 
 # --- attention blocks -------------------------------------------------------------
 def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
-                            hw: HardwareModel) -> tuple[int, int]:
+                            hw: HardwareModel, *,
+                            window: int | None = None) -> tuple[int, int]:
     """Pick (block_q, block_kv) for flash attention — T2 applied to the
     attention score loop: the q tile, double-buffered k+v tiles, the f32
     accumulator and the (bq, bkv) score tile must fit the VMEM budget.
@@ -150,8 +151,16 @@ def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
     cache at full bandwidth (k+v double buffered).  One chooser for
     both regimes: kernels/decode_attention/ops.py defers here, and the
     LM decode-Program lowering pins the result into each
-    ``decode_attention`` op."""
+    ``decode_attention`` op.
+
+    ``window`` (causal sliding window) caps the kv extent a query ever
+    touches: no score-loop tile should outgrow the window, so the
+    effective Skv is ``min(Skv, window)``.  For a windowed *decode*
+    node the cache region itself is already window-sized (the §5.1
+    rolling plan), so both arguments agree."""
     budget = hw.vmem_budget()
+    if window is not None:
+        Skv = min(Skv, window)
     if Sq == 1:
         bkv = 128
         for b in (256, 512, 1024, 2048, 4096):

@@ -1,4 +1,5 @@
-from .ops import decode_attention
+from .ops import decode_attention, ring_kv_len, ring_positions
 from .ref import decode_attention_ref
 from .kernel import decode_attention_pallas
-__all__ = ["decode_attention", "decode_attention_ref", "decode_attention_pallas"]
+__all__ = ["decode_attention", "decode_attention_ref",
+           "decode_attention_pallas", "ring_kv_len", "ring_positions"]

@@ -9,6 +9,13 @@ operand).
 
 Grid: (B * Hq, S / bkv), kv innermost with running-softmax scratch.
 GQA folded into the KV index map as in flash_attention.
+
+Ring-cache semantics: the per-sequence ``kv_len`` (see
+ops.py::ring_kv_len) bounds the valid rows of a rolling cache — blocks
+whose start is past ``kv_len`` are skipped entirely (``sk0 < kv_len``
+guard, so a window-sized cache streams only window bytes) and the tail
+block masks per-row.  The kernel never reorders rows; the wrapped ring
+layout is handled by softmax's permutation invariance.
 """
 from __future__ import annotations
 

@@ -1,4 +1,17 @@
-"""Public decode-attention wrapper with pallas/reference dispatch."""
+"""Public decode-attention wrapper with pallas/reference dispatch.
+
+The cache operand is a **ring buffer**: callers that decode past the
+cache length (a rolling full-length cache, or a sliding-window cache
+sized ``W = min(max_len, attn_window)``) write the new token's K/V at
+``pos % S`` and pass ``kv_len = ring_kv_len(pos, S)`` — the last
+``min(pos + 1, S)`` rows are then valid and everything at ring slots
+``>= kv_len`` (unwritten padding, or rows evicted by overwrite) is
+masked out.  Row *order* inside the ring does not matter: RoPE bakes
+each row's absolute position into its key, and softmax attention is
+permutation-invariant over KV rows, so the wrapped layout attends
+identically to the chronological one (the legacy
+``transformer._attention_decode`` rule this kernel inherits).
+"""
 from __future__ import annotations
 
 import jax
@@ -8,7 +21,45 @@ from ...core.hw import TPU_V5E, HardwareModel
 from .kernel import decode_attention_pallas
 from .ref import decode_attention_ref
 
-__all__ = ["decode_attention"]
+__all__ = ["decode_attention", "ring_kv_len", "ring_positions"]
+
+
+def ring_positions(length, cache_len: int, seq_len: int):
+    """Source position for every ring slot of a rolling cache holding
+    the last ``min(length, cache_len)`` of ``seq_len`` computed rows:
+    slot ``j`` holds the latest position ``p < length`` with ``p %
+    cache_len == j``.  Returns (cache_len,) int32 gather indices into
+    the full (seq_len, ...) row stack; ``length`` may be a traced
+    scalar (the runtime prompt length).
+
+    Slots with no valid position (j >= length) fall out of range and
+    are clipped — they end up *duplicating* an early row, not holding
+    zeros.  That is safe because such slots sit at ring indices ``>=
+    ring_kv_len(length - 1, cache_len)`` and decode overwrites slot
+    ``pos % cache_len`` at the exact tick ``ring_kv_len`` first admits
+    it, so a duplicate is never attended.
+
+    This is THE ring-layout rule: the prefill executor
+    (runtime/executor.py::_write_prefill_cache) gathers with it at a
+    runtime length, and the legacy cache export (models/transformer.py
+    ::forward ``return_cache``) uses it at ``length == seq_len`` — one
+    shared rule, like ``ring_kv_len``, so the two layouts can never
+    drift."""
+    j = jnp.arange(cache_len)
+    last = jnp.asarray(length, jnp.int32) - 1
+    p = j + ((last - j) // cache_len) * cache_len
+    return jnp.clip(p, 0, seq_len - 1)
+
+
+def ring_kv_len(pos, cache_len: int):
+    """Valid-row count of a rolling (ring) KV cache after the write at
+    ``pos % cache_len`` has landed: the last ``min(pos + 1, cache_len)``
+    tokens are attendable, older rows have been evicted by overwrite.
+    One rule shared by the legacy decode loop
+    (models/transformer.py::_attention_decode) and the decode-Program
+    executor (runtime/executor.py::run_decode) so the two paths can
+    never drift."""
+    return jnp.minimum(pos + 1, cache_len)
 
 
 def decode_attention(q, k, v, *, kv_len=None, scale: float | None = None,
@@ -30,7 +81,8 @@ def decode_attention(q, k, v, *, kv_len=None, scale: float | None = None,
         # bandwidth, k+v double buffered.  One chooser shared with the
         # compiler (core/tiling.py) — the decode-Program lowering pins
         # the same value into each decode_attention op, so this branch
-        # only runs for direct (non-Program) kernel calls.
+        # only runs for direct (non-Program) kernel calls.  A windowed
+        # cache is already window-sized, so S is the right extent.
         from ...core.tiling import select_attention_blocks
         _, block_kv = select_attention_blocks(1, S, D, k.dtype.itemsize, hw)
     pad = (-S) % block_kv

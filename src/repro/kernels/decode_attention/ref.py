@@ -12,7 +12,13 @@ NEG_INF = -1e30
 def decode_attention_ref(q, k, v, *, kv_len=None,
                          scale: float | None = None) -> jax.Array:
     """q: (B, Hq, D) one new token; k, v: (B, Hkv, S, D) cache;
-    kv_len: (B,) valid lengths (int) or None for full cache."""
+    kv_len: (B,) valid lengths (int) or None for full cache.
+
+    Ring-cache contract (see ops.py): the cache may be a rolling buffer
+    written at ``pos % S`` — rows at ring slots ``< kv_len`` are the
+    last ``min(pos + 1, S)`` tokens (in wrapped order, which softmax
+    attention cannot observe), rows at slots ``>= kv_len`` are padding
+    or evicted history and are masked to -inf here."""
     B, Hq, D = q.shape
     Hkv, S = k.shape[1], k.shape[2]
     G = Hq // Hkv

@@ -54,13 +54,16 @@ _flash_trainable.defvjp(_ft_fwd, _ft_bwd)
 
 
 def attention_block_sizes(Sq: int, Skv: int, D: int, dtype_bytes: int,
-                          hw: HardwareModel = TPU_V5E) -> tuple[int, int]:
+                          hw: HardwareModel = TPU_V5E, *,
+                          window: int | None = None) -> tuple[int, int]:
     """Pick (block_q, block_kv) so the working set fits the VMEM budget
     (T2 applied to attention).  The decision lives in the compiler
     (core/tiling.py::select_attention_blocks) — one chooser shared by
-    this wrapper and the LM Program lowering."""
+    this wrapper and the LM Program lowering.  A sliding ``window``
+    caps the kv tile (no tile outgrows the span a query can attend)."""
     from ...core.tiling import select_attention_blocks
-    return select_attention_blocks(Sq, Skv, D, dtype_bytes, hw)
+    return select_attention_blocks(Sq, Skv, D, dtype_bytes, hw,
+                                   window=window)
 
 
 def flash_attention(q, k, v, *, scale: float | None = None,
@@ -91,7 +94,8 @@ def flash_attention(q, k, v, *, scale: float | None = None,
     B, Hq, Sq, D = q.shape
     Skv = k.shape[2]
     if block_q is None or block_kv is None:
-        bq, bkv = attention_block_sizes(Sq, Skv, D, q.dtype.itemsize, hw)
+        bq, bkv = attention_block_sizes(Sq, Skv, D, q.dtype.itemsize, hw,
+                                        window=window)
         block_q = block_q or bq
         block_kv = block_kv or bkv
     block_q = min(block_q, Sq) if Sq % min(block_q, Sq) == 0 else 128

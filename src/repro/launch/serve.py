@@ -21,6 +21,8 @@ prompt length; the engine's ``n_prefill_recomputes`` counter stays 0):
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import sys
 import time
 
 import jax
@@ -69,8 +71,14 @@ def main(argv=None) -> None:
                     help="checkpoint dir to load params from")
     ap.add_argument("--program", action="store_true",
                     help="serve LM tokens through the compiled Program "
-                         "(dense family; falls back to legacy decode "
-                         "where no lowering exists)")
+                         "(dense family, windowed attention included; "
+                         "exits non-zero if the config cannot lower — "
+                         "no silent legacy fallback when the program "
+                         "path was explicitly requested)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="override attn_window (sliding-window "
+                         "attention); the program path then sizes the "
+                         "persistent KV regions to min(max_len, window)")
     args = ap.parse_args(argv)
 
     if args.arch in CNN_REGISTRY:
@@ -80,6 +88,8 @@ def main(argv=None) -> None:
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+    if args.window:
+        cfg = dataclasses.replace(cfg, attn_window=args.window)
     api = get_model(cfg)
     params = init_params(api.param_defs(cfg), jax.random.PRNGKey(0))
     if args.ckpt:
@@ -91,6 +101,15 @@ def main(argv=None) -> None:
     # warns (once, at construction) when a family has no lowering.
     eng = ServingEngine(cfg, params, slots=args.slots,
                         max_len=args.max_len, use_program=args.program)
+    if args.program and not eng.on_program_path:
+        # The user *asked* for the program path; a silent legacy-loop
+        # fallback would misreport what was measured.  The engine's
+        # fallback_reason names the specific blocker.
+        print(f"error: --program requested but {cfg.name} has no "
+              f"decode-Program lowering "
+              f"({eng.fallback_reason or 'unknown reason'})",
+              file=sys.stderr)
+        raise SystemExit(2)
     if eng.program is not None:
         print(eng.program.listing().splitlines()[0])
     rng = np.random.default_rng(0)
@@ -105,7 +124,7 @@ def main(argv=None) -> None:
     total_tokens = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
-    if eng._lm_program:
+    if eng.on_program_path:
         print(f"prefills={eng.n_prefills} "
               f"prefill_recomputes={eng.n_prefill_recomputes} "
               f"decode_ticks={eng.n_decode_ticks}")

@@ -35,7 +35,8 @@ from ..core.program import Program, ProgramPair, lower_to_program
 from ..core.regions import (PersistentSpec, allocate_regions,
                             extend_with_persistent)
 from ..core.schedule import compile_model
-from ..kernels.decode_attention import decode_attention
+from ..kernels.decode_attention import (decode_attention, ring_kv_len,
+                                        ring_positions)
 from ..kernels.flash_attention import flash_attention
 from ..kernels.common import apply_activation
 from ..parallel.act_sharding import shard_act
@@ -44,7 +45,7 @@ from .moe import moe_mlp
 
 __all__ = ["param_defs", "forward", "init_cache", "decode_step",
            "to_graph", "to_decode_graph", "compile_program",
-           "compile_program_pair", "program_forward"]
+           "compile_program_pair", "program_forward", "kv_cache_len"]
 
 
 # --- parameter declaration -------------------------------------------------------
@@ -319,12 +320,13 @@ def forward(params, tokens, cfg: ArchConfig, *, vision_embeds=None,
             k_stack = jnp.pad(k_stack, padw)
             v_stack = jnp.pad(v_stack, padw)
         elif CL < S:                         # rolling window: keep last CL
-            idx = jnp.arange(S - CL, S) % CL
-            kw = jnp.zeros(k_stack.shape[:3] + (CL,) + k_stack.shape[4:],
-                           k_stack.dtype)
-            k_stack = kw.at[:, :, :, idx].set(k_stack[:, :, :, S - CL:])
-            v_stack = jnp.zeros_like(kw).at[:, :, :, idx].set(
-                v_stack[:, :, :, S - CL:])
+            # One shared ring-layout rule (kernels/decode_attention):
+            # slot j holds the latest position p < S with p % CL == j —
+            # the same conversion the Program prefill performs at a
+            # runtime length (executor._write_prefill_cache).
+            pos = ring_positions(S, CL, S)
+            k_stack = k_stack[:, :, :, pos]
+            v_stack = v_stack[:, :, :, pos]
         k_stack = k_stack.astype(cfg.kv_jdtype)
         v_stack = v_stack.astype(cfg.kv_jdtype)
         cache = {"k": k_stack, "v": v_stack,
@@ -346,11 +348,39 @@ def _cross_kv(params, cfg, vis):
 
 # --- compile-to-Program lowering (dense family) -----------------------------------
 def _require_dense(cfg: ArchConfig) -> None:
-    if (cfg.family != "dense" or cfg.n_experts or cfg.cross_attn_every
-            or cfg.n_encoder_layers or cfg.shared_attn_every):
+    """Gate non-dense features with the *specific* blocker named, so the
+    serving engine's legacy-fallback warning can say why a config is
+    unlowerable (windowed attention is NOT a blocker — it lowers as a
+    rolling-window region plan)."""
+    blockers = []
+    if cfg.family != "dense":
+        blockers.append(f"family={cfg.family}")
+    if cfg.n_experts:
+        blockers.append("MoE dispatch")
+    if cfg.cross_attn_every:
+        blockers.append("cross-attention")
+    if cfg.n_encoder_layers:
+        blockers.append("encoder-decoder")
+    if cfg.shared_attn_every:
+        blockers.append("shared attention blocks")
+    if blockers:
         raise NotImplementedError(
-            f"Program lowering covers the dense transformer family; "
-            f"{cfg.name} ({cfg.family}) still runs the scan forward")
+            f"Program lowering covers the dense transformer family "
+            f"(windowed attention included); {cfg.name} is blocked by: "
+            f"{', '.join(blockers)} — it still runs the scan forward")
+
+
+def kv_cache_len(cfg: ArchConfig, max_len: int) -> int:
+    """Per-slot KV rows the §5.1 region plan reserves: the paper's
+    "region sized at the largest output it holds" discipline applied to
+    state — a sliding window means positions older than ``attn_window``
+    are never attendable, so the persistent region holds
+    ``min(max_len, attn_window)`` rows and eviction is the rolling
+    overwrite at ``pos % cache_len``.  One rule shared by
+    ``init_cache`` (legacy loop) and ``_kv_cache_specs`` (Programs)."""
+    if cfg.attn_window:
+        return min(max_len, cfg.attn_window)
+    return max_len
 
 
 def _build_lm_graph(cfg: ArchConfig, name: str, M: int, by: int,
@@ -478,23 +508,26 @@ def to_decode_graph(cfg: ArchConfig, slots: int = 8, max_len: int = 256,
     block structure as ``to_graph`` (one shared emitter) but with one
     token per slot (M = slots) and the attention replaced by
     ``decode_attention`` against the persistent per-block KV-cache
-    regions — op-for-op the graph of ``decode_step``."""
+    regions — op-for-op the graph of ``decode_step``.
+
+    Windowed attention lowers as a *region-plan decision*: the decode
+    node's cache extent is ``kv_cache_len`` (= min(max_len,
+    attn_window)), the node carries ``window`` so the schedule's
+    decode-regime block chooser sizes ``block_kv`` against the window,
+    and the executor's rolling write at ``pos % cache_len`` is the
+    eviction — op-for-op the legacy ``_attention_decode`` ring rule."""
     _require_dense(cfg)
-    if cfg.attn_window and cfg.attn_window < max_len:
-        raise NotImplementedError(
-            f"decode Programs do not lower windowed attention yet "
-            f"({cfg.name}: window {cfg.attn_window} < max_len {max_len}); "
-            f"the legacy rolling-window decode_step still serves it")
     by = (dtype_bytes if dtype_bytes is not None
           else jnp.dtype(cfg.jdtype).itemsize)
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cache_len = kv_cache_len(cfg, max_len)
 
     def add_attention(g, i, qkv):
         g.add(decode_attention_node(
-            f"l{i}.attn", cache_len=max_len, heads=H, kv_heads=KV,
+            f"l{i}.attn", cache_len=cache_len, heads=H, kv_heads=KV,
             head_dim=hd, slots=slots, dtype_bytes=by, inputs=qkv,
             k_cache=f"l{i}.k_cache", v_cache=f"l{i}.v_cache",
-            rope_theta=cfg.rope_theta))
+            window=cfg.attn_window, rope_theta=cfg.rope_theta))
 
     return _build_lm_graph(cfg, cfg.name + ".decode", slots, by,
                            add_attention)
@@ -502,11 +535,13 @@ def to_decode_graph(cfg: ArchConfig, slots: int = 8, max_len: int = 256,
 
 def _kv_cache_specs(cfg: ArchConfig, slots: int,
                     max_len: int) -> tuple[PersistentSpec, ...]:
-    """One persistent (slots, max_len, kv_heads, head_dim) region per
-    block and cache side, in the engine's KV dtype."""
+    """One persistent (slots, kv_cache_len, kv_heads, head_dim) region
+    per block and cache side, in the engine's KV dtype.  A sliding
+    window shrinks the resident rows to the window (max_len/W fewer
+    persistent KV bytes), the §5.1 sizing rule applied to state."""
     KV, hd = cfg.n_kv_heads, cfg.hd
     dt = jnp.dtype(cfg.kv_jdtype)
-    shape = (slots, max_len, KV, hd)
+    shape = (slots, kv_cache_len(cfg, max_len), KV, hd)
     size = int(np.prod(shape)) * dt.itemsize
     specs = []
     for i in range(cfg.n_layers):
@@ -523,7 +558,14 @@ def compile_program_pair(cfg: ArchConfig, slots: int = 8,
     (full causal forward + cache writes at the admitted slot) and a
     decode Program (one token per slot against the cache), sharing one
     persistent region table so a single runtime ``ProgramState``
-    addresses both.  Cached per (config, slots, max_len, hw)."""
+    addresses both.  Cached per (config, slots, max_len, hw).
+
+    For a windowed config the persistent regions hold
+    ``kv_cache_len = min(max_len, attn_window)`` rows per slot; the
+    prefill executor converts the full-``max_len`` K/V into the rolling
+    (ring) layout at write time and decode overwrites at ``pos %
+    cache_len`` — the full-cache and windowed plans differ *only* in
+    region shape, never in instruction structure."""
     pre_graph = to_graph(cfg, batch=1, seq=max_len, write_cache=True)
     pre_graph.name = cfg.name + ".prefill"
     dec_graph = to_decode_graph(cfg, slots=slots, max_len=max_len)
@@ -540,7 +582,8 @@ def compile_program_pair(cfg: ArchConfig, slots: int = 8,
     dec_plan = extend_with_persistent(dec_plan, specs, base)
     return ProgramPair(
         prefill=lower_to_program(pre_graph, pre_sched, pre_plan),
-        decode=lower_to_program(dec_graph, dec_sched, dec_plan))
+        decode=lower_to_program(dec_graph, dec_sched, dec_plan),
+        slots=slots, max_len=max_len)
 
 
 def program_forward(params, tokens, cfg: ArchConfig, *,
@@ -565,7 +608,7 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int,
                n_vision: int | None = None) -> dict:
     KV, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
     dt = cfg.kv_jdtype
-    cache_len = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    cache_len = kv_cache_len(cfg, max_len)
     cache = {
         "k": jnp.zeros((L, batch, KV, cache_len, hd), dt),
         "v": jnp.zeros((L, batch, KV, cache_len, hd), dt),
@@ -602,8 +645,7 @@ def _attention_decode(h1, p, cfg, ck, cv, pos, cos, sin, *, impl):
     slot = pos % S                                   # rolling (window) cache
     ck, cv = _write_cache(ck, cv, k.astype(ck.dtype), v.astype(cv.dtype),
                           slot)
-    kv_len = jnp.minimum(pos + 1, S)
-    out = decode_attention(q, ck, cv, kv_len=kv_len, impl=impl)
+    out = decode_attention(q, ck, cv, kv_len=ring_kv_len(pos, S), impl=impl)
     return (out.reshape(B, H * hd) @ p["wo"]), ck, cv
 
 

@@ -49,7 +49,8 @@ import jax.numpy as jnp
 
 from ..core.program import Program, ProgramOp, ProgramPair
 from ..kernels.conv2d import avgpool2d_ref, conv2d, maxpool2d_ref
-from ..kernels.decode_attention import decode_attention
+from ..kernels.decode_attention import (decode_attention, ring_kv_len,
+                                        ring_positions)
 from ..kernels.flash_attention import flash_attention
 from ..kernels.matmul import matmul
 
@@ -199,9 +200,12 @@ class ProgramState:
     """Runtime carrier for a Program pair's persistent regions.
 
     ``caches`` maps the allocator's persistent region ids to their
-    buffers — for the LM pair, (slots, max_len, kv_heads, head_dim)
-    per block and cache side; ``lengths`` is the per-slot sequence
-    length (the decode ops' position operand).  Registered as a pytree
+    buffers — for the LM pair, (slots, cache_len, kv_heads, head_dim)
+    per block and cache side, where cache_len is max_len or the
+    attention window (whichever the §5.1 plan sized the region at);
+    ``lengths`` is the per-slot sequence length (the decode ops'
+    position operand, counting absolute tokens even once the ring has
+    wrapped).  Registered as a pytree
     so the jitted prefill/decode runners can donate it and XLA aliases
     the cache updates in place.
     """
@@ -237,12 +241,27 @@ def init_program_state(pair: ProgramPair | Program) -> ProgramState:
     return ProgramState(caches, jnp.zeros((slots,), jnp.int32))
 
 
-def _write_prefill_cache(caches: dict, op: ProgramOp, k, v, slot) -> None:
+def _write_prefill_cache(caches: dict, op: ProgramOp, k, v, slot,
+                         length) -> None:
     """Store a prefill op's per-head K/V — (1, KVh, S, hd) — into the
-    (slots, max_len, KV, hd) cache regions at the admitted slot."""
+    (slots, cache_len, KV, hd) cache regions at the admitted slot.
+
+    A window-sized region (cache_len < S, the §5.1 rolling-window plan)
+    receives the **ring layout** the decode ops expect, via the shared
+    ``ring_positions`` rule: ring slot j holds the latest prompt
+    position ``p < length`` with ``p % cache_len == j`` — the same
+    keep-last-W conversion ``to_graph``'s cache export performs,
+    generalized to a runtime ``length``.  Every ring slot is written
+    (slots with no valid position duplicate an early row, overwritten
+    by decode before ``ring_kv_len`` ever admits them), so re-admission
+    into a previously used slot can never leak a dead request's stale
+    rows."""
     for rid, val in ((op.k_cache_region, k), (op.v_cache_region, v)):
         buf = caches[rid]
         row = val[0].transpose(1, 0, 2).astype(buf.dtype)     # (S, KV, hd)
+        S, cache_len = row.shape[0], buf.shape[1]
+        if cache_len < S:
+            row = row[ring_positions(length, cache_len, S)]
         caches[rid] = jax.lax.dynamic_update_slice(
             buf, row[None], (slot, 0, 0, 0))
 
@@ -255,8 +274,10 @@ def run_prefill(program: Program, params, tokens: jax.Array,
     tokens: (1, max_len) int32, the prompt right-padded (rows past
     ``length`` are masked downstream by the per-slot length, so their
     K/V content is inert).  Writes each block's K/V into the persistent
-    cache regions at ``slot``, sets ``lengths[slot] = length`` and
-    returns (logits (1, max_len, vocab), new_state).
+    cache regions at ``slot`` — window-sized regions get the rolling
+    (ring) layout, see ``_write_prefill_cache`` — sets
+    ``lengths[slot] = length`` and returns
+    (logits (1, max_len, vocab), new_state).
     """
     regions: dict[int, jax.Array] = {program.input_region: tokens}
     caches = dict(state.caches)
@@ -265,7 +286,7 @@ def run_prefill(program: Program, params, tokens: jax.Array,
         if op.kernel == "flash_attention" and op.k_cache_region is not None:
             out, k, v = _run_attention(op, regions, impl=impl,
                                        interpret=interpret, return_kv=True)
-            _write_prefill_cache(caches, op, k, v, slot)
+            _write_prefill_cache(caches, op, k, v, slot, length)
             regions[op.out_region] = out
             continue
         regions[op.out_region] = _run_op(op, src, regions, params,
@@ -275,23 +296,34 @@ def run_prefill(program: Program, params, tokens: jax.Array,
 
 
 def run_decode(program: Program, params, tokens: jax.Array,
-               state: ProgramState, *, impl: str = "auto",
-               interpret: bool | None = None):
-    """Advance every slot by one token through the decode Program.
+               state: ProgramState, mask: jax.Array | None = None, *,
+               impl: str = "auto", interpret: bool | None = None):
+    """Advance the occupied slots by one token through the decode
+    Program.
 
-    tokens: (slots,) int32.  Each ``decode_attention`` op RoPEs the new
-    q/k at the slot's absolute position, writes the new K/V row into
-    the persistent cache regions at ``position % max_len`` (the legacy
-    rolling-cache rule), and attends over ``min(position + 1,
-    max_len)`` valid rows with the schedule's block_kv.  Returns
-    (logits (slots, vocab), new_state) with every length advanced by
-    one — free slots carry garbage logits their (absent) request never
-    reads.
+    tokens: (slots,) int32; mask: (slots,) bool occupancy (None = all
+    occupied).  Each ``decode_attention`` op RoPEs the new q/k at the
+    slot's absolute position, writes the new K/V row into the
+    persistent cache regions at ``position % cache_len`` (the rolling
+    ring rule — cache_len is the region's allocator-recorded row count,
+    ``min(max_len, attn_window)`` for a windowed plan), and attends
+    over ``ring_kv_len(position, cache_len)`` valid rows with the
+    schedule's block_kv.  Returns (logits (slots, vocab), new_state)
+    with every *occupied* slot's length advanced by one.
+
+    Unoccupied slots are fully inert: their length does not advance and
+    their cache rows are not written — a dead slot can never smear
+    garbage rows into a region a later request's attention window will
+    read (slot-cache hygiene; full-length prefills used to mask this by
+    rewriting the whole row region, rolling-window prefills do not).
+    Their logits are still garbage the (absent) request never reads.
     """
     from ..models.common import Rotary, apply_rope
     regions: dict[int, jax.Array] = {program.input_region: tokens}
     caches = dict(state.caches)
     pos = state.lengths
+    live = (jnp.ones(pos.shape, bool) if mask is None
+            else jnp.asarray(mask, bool))
     for op in program.ops:
         src = regions[op.in_region]
         if op.kernel == "decode_attention":
@@ -308,25 +340,36 @@ def run_decode(program: Program, params, tokens: jax.Array,
             cache_len = ck.shape[1]
             row = pos % cache_len                 # rolling overwrite
 
+            def cur(c, r):
+                return jax.lax.dynamic_slice_in_dim(c, r, 1, axis=0)[0]
+
             def upd(c, x, r):
                 return jax.lax.dynamic_update_slice_in_dim(
                     c, x[None], r, axis=0)
 
-            ck = jax.vmap(upd)(ck, k_new.astype(ck.dtype), row)
-            cv = jax.vmap(upd)(cv, v_new.astype(cv.dtype), row)
+            # Mask the *row*, not the buffer: a dead slot rewrites its
+            # current row with itself (a no-op), so the select stays
+            # row-sized and the bandwidth-bound cache update remains a
+            # single in-place scatter per side.
+            keep = live[:, None, None]
+            k_row = jnp.where(keep, k_new.astype(ck.dtype),
+                              jax.vmap(cur)(ck, row))
+            v_row = jnp.where(keep, v_new.astype(cv.dtype),
+                              jax.vmap(cur)(cv, row))
+            ck = jax.vmap(upd)(ck, k_row, row)
+            cv = jax.vmap(upd)(cv, v_row, row)
             caches[op.k_cache_region] = ck
             caches[op.v_cache_region] = cv
-            kv_len = jnp.minimum(pos + 1, cache_len)
             out = decode_attention(
                 q, ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
-                kv_len=kv_len, block_kv=a.block_kv, impl=impl,
-                interpret=interpret)
+                kv_len=ring_kv_len(pos, cache_len), block_kv=a.block_kv,
+                impl=impl, interpret=interpret)
             regions[op.out_region] = out.reshape(B, a.heads * a.head_dim)
             continue
         regions[op.out_region] = _run_op(op, src, regions, params,
                                          impl=impl, interpret=interpret)
     return (regions[program.output_region],
-            ProgramState(caches, pos + 1))
+            ProgramState(caches, jnp.where(live, pos + 1, pos)))
 
 
 _RUNNERS: "collections.OrderedDict" = collections.OrderedDict()
@@ -376,11 +419,13 @@ def jitted_prefill_runner(program: Program, impl: str = "auto",
 
 def jitted_decode_runner(program: Program, impl: str = "auto",
                          interpret: bool | None = None):
-    """Compiled decode tick: (params, tokens, state) -> (logits, state)
-    with the state donated — the bandwidth-bound serving hot loop."""
+    """Compiled decode tick: (params, tokens, state[, mask]) ->
+    (logits, state) with the state donated — the bandwidth-bound
+    serving hot loop.  ``mask`` is the (slots,) bool occupancy; omitted
+    means every slot is live."""
     def make():
-        def _run(params, tokens, state, _program=program):
-            return run_decode(_program, params, tokens, state,
+        def _run(params, tokens, state, mask=None, _program=program):
+            return run_decode(_program, params, tokens, state, mask,
                               impl=impl, interpret=interpret)
         return jax.jit(_run, donate_argnums=(2,))
     return _cached_runner((id(program), impl, interpret, "decode"), make)

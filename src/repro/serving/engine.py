@@ -27,8 +27,13 @@ written at the admitted slot, first token emitted from the prompt's
 last position — and every subsequent tick runs the decode Program: one
 token per live slot against the cache, O(1) in prompt length.  Nothing
 is ever prefilled twice (``n_prefill_recomputes`` stays 0 by
-construction); families without a lowering fall back to the legacy
-``decode_step`` loop with a single warning at engine construction.
+construction).  Windowed-attention configs serve on the same path with
+persistent KV regions sized to the window (``min(max_len,
+attn_window)`` rows per slot, rolling eviction-by-overwrite — the
+§5.1 plan shrinks resident state by max_len/window).  Families without
+a lowering fall back to the legacy ``decode_step`` loop with a single
+warning at engine construction naming the specific blocker
+(``fallback_reason``).
 """
 from __future__ import annotations
 
@@ -69,6 +74,11 @@ class ServingEngine:
         self.live: dict[int, Request] = {}       # slot -> request
         self.queue: list[Request] = []
         self._lm_program = False
+        # Why an LM config requested on the program path fell back to
+        # the legacy decode loop (None = no fallback happened); callers
+        # that *require* the program path (launch/serve.py --program)
+        # check this instead of re-parsing the warning.
+        self.fallback_reason: str | None = None
         # Stateful-program counters (exposed for benchmarks / CI): the
         # program path prefills each request exactly once at admission,
         # so n_prefill_recomputes stays 0 by construction.
@@ -89,14 +99,25 @@ class ServingEngine:
                     f"compile_program_pair, got {type(program).__name__} "
                     f"(the per-tick prefill-recompute path was removed)")
             if program is not None:
-                # The pair's persistent KV regions are sized
-                # (slots, max_len, ...) — catch a geometry mismatch at
-                # construction, not as a shape error mid-serve.
-                got = program.decode.plan.persistent_regions()[0].shape[:2]
-                if got != (slots, max_len):
-                    raise ValueError(
-                        f"ProgramPair compiled for slots/max_len {got}, "
-                        f"engine configured for ({slots}, {max_len})")
+                # Catch a geometry mismatch at construction, not as a
+                # shape error mid-serve.  The pair records its compiled
+                # (slots, max_len); the persistent-region shapes alone
+                # cannot recover max_len for a windowed config (the row
+                # count collapses to the window), so prefer the
+                # recorded geometry and fall back to the region shape
+                # for externally assembled pairs that left it unset.
+                from ..models.transformer import kv_cache_len
+                checks = [((program.decode.plan
+                            .persistent_regions()[0].shape[:2]),
+                           (slots, kv_cache_len(cfg, max_len)))]
+                if program.max_len is not None:
+                    checks.append(((program.slots, program.max_len),
+                                   (slots, max_len)))
+                for got, want in checks:
+                    if got != want:
+                        raise ValueError(
+                            f"ProgramPair compiled for slots/max_len "
+                            f"{got}, engine configured for {want}")
             pair = program
             if pair is None:
                 try:
@@ -104,9 +125,14 @@ class ServingEngine:
                                                 max_len=max_len)
                 except NotImplementedError as e:
                     # Once per engine construction, never per tick.
+                    # The lowering gate names the *specific* blocker
+                    # (MoE dispatch, cross-attention, ...) — windowed
+                    # attention is no longer one; it serves on the
+                    # program path with window-sized KV regions.
+                    self.fallback_reason = str(e)
                     warnings.warn(
-                        f"no decode-Program lowering for {cfg.name}: {e}; "
-                        f"serving through the legacy decode loop",
+                        f"no decode-Program lowering for {cfg.name} — "
+                        f"{e}; serving through the legacy decode loop",
                         RuntimeWarning, stacklevel=2)
             if pair is not None:
                 self.api = None
@@ -135,6 +161,15 @@ class ServingEngine:
         self.cache = self.api.init_cache(cfg, slots, max_len)
         self._decode = jax.jit(
             lambda p, c, t: self.api.decode_step(p, c, t, cfg, impl=impl))
+
+    @property
+    def on_program_path(self) -> bool:
+        """True when LM tokens are served through the compiled
+        (prefill, decode) Program pair — the public signal for callers
+        that *require* the program path (launch/serve.py --program);
+        False means the legacy decode loop, with ``fallback_reason``
+        naming why."""
+        return self._lm_program
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request):
@@ -256,10 +291,18 @@ class ServingEngine:
         generated token read off the prompt's last position.  Prompts
         longer than ``max_len`` condition on their most recent
         ``max_len`` tokens (the cache holds at most that much
-        history)."""
-        for slot in self._free_slots():
-            if not self.queue:
+        history).
+
+        Free slots are recomputed per admission: a slot freed *during*
+        this loop (EOS or ``max_new_tokens == 1`` on the prefill token
+        retires the request inside ``_retire_if_done``) is immediately
+        reusable for the next queued request instead of idling a
+        tick."""
+        while self.queue:
+            free = self._free_slots()
+            if not free:
                 break
+            slot = free[0]
             req = self.queue.pop(0)
             if len(req.prompt) == 0:
                 raise ValueError(f"request {req.uid}: empty prompt")
@@ -293,10 +336,17 @@ class ServingEngine:
         if not self.live:
             return finished
         toks = np.zeros((self.slots,), np.int32)
+        occupied = np.zeros((self.slots,), bool)
         for slot, req in self.live.items():
             toks[slot] = req._last_token
+            occupied[slot] = True
+        # The occupancy mask keeps dead slots inert inside run_decode:
+        # no length advance, no cache-row write (slot-cache hygiene for
+        # the rolling-window plans, whose prefill does not rewrite the
+        # whole row region on re-admission).
         logits, self.state = self._decode(self.params, jnp.asarray(toks),
-                                          self.state)
+                                          self.state,
+                                          jnp.asarray(occupied))
         self.n_decode_ticks += 1
         logits = np.asarray(logits)
         for slot, req in list(self.live.items()):

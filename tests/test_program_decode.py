@@ -2,7 +2,9 @@
 persistent compiler-owned KV-cache regions, the ProgramState carrier,
 prefill+decode parity vs the legacy ``init_cache``/``decode_step``
 loop, persistent-region lifetime invariants, the serving engine's
-prefill-once/decode-per-tick path, and the decode_attention dispatch."""
+prefill-once/decode-per-tick path, the decode_attention dispatch, and
+the windowed-attention rolling-KV plan (window-sized regions, ring
+prefill conversion, occupancy-masked decode, slot-cache hygiene)."""
 import dataclasses
 
 import jax
@@ -188,10 +190,165 @@ def test_stateless_run_rejects_decode_program():
                      impl="reference")
 
 
-def test_windowed_configs_are_gated():
-    cfg = _cfg(attn_window=8)
-    with pytest.raises(NotImplementedError, match="window"):
-        transformer.to_decode_graph(cfg, slots=1, max_len=16)
+# --- windowed attention: rolling KV regions as a region-plan decision --------------
+def test_windowed_region_plan_shrinks_kv_to_window():
+    """A sliding window sizes every persistent KV region at
+    min(max_len, attn_window) rows per slot — persistent bytes shrink
+    by exactly max_len/W vs the full plan, transient plan unchanged."""
+    slots, max_len, W = 2, 16, 4
+    full = transformer.compile_program_pair(_cfg(), slots=slots,
+                                            max_len=max_len)
+    pair = transformer.compile_program_pair(_cfg(attn_window=W),
+                                            slots=slots, max_len=max_len)
+    cfg = _cfg(attn_window=W)
+    for plan in (pair.prefill.plan, pair.decode.plan):
+        for r in plan.persistent_regions():
+            assert r.shape == (slots, W, cfg.n_kv_heads, cfg.hd)
+    assert pair.persistent_bytes * (max_len // W) == full.persistent_bytes
+    assert pair.decode.plan.n_pingpong == full.decode.plan.n_pingpong
+    assert pair.decode.plan.n_pinned == full.decode.plan.n_pinned
+    # the decode ops carry the window and a window-capped block_kv
+    from repro.core.hw import TPU_V5E
+    from repro.core.tiling import select_attention_blocks
+    want = select_attention_blocks(1, W, cfg.hd, 4, TPU_V5E, window=W)
+    for i in range(cfg.n_layers):
+        op = pair.decode.op(f"l{i}.attn")
+        assert op.attn.window == W
+        assert (op.attn.block_q, op.attn.block_kv) == want
+    assert f"win={W}" in pair.decode.listing()
+
+
+def test_windowed_prefill_and_decode_match_legacy_past_max_len():
+    """Windowed parity: prompt longer than the window, decode past
+    max_len — the ring-converted prefill cache plus rolling decode
+    matches the legacy init_cache/decode_step loop <= 1e-5 at every
+    step (kv_cache_len rows resident, never max_len)."""
+    cfg = _cfg(n_layers=2, attn_window=4)
+    slots, max_len, P, N = 2, 8, 6, 8          # P > W; P + N > max_len
+    params, pair, state = _setup(cfg, slots, max_len)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(slots, P)).astype(np.int32)
+
+    cache = transformer.init_cache(cfg, slots, max_len)
+    assert cache["k"].shape[3] == 4            # legacy ring is window-sized
+    for t in range(P):
+        leg_logits, cache = transformer.decode_step(
+            params, cache, jnp.asarray(prompts[:, t]), cfg,
+            impl="reference")
+
+    for slot in range(slots):
+        logits, state = _prefill_slot(pair, params, state, slot,
+                                      prompts[slot], max_len)
+        np.testing.assert_allclose(
+            np.asarray(logits[0, P - 1]), np.asarray(leg_logits[slot]),
+            rtol=0, atol=1e-5)
+
+    toks = np.argmax(np.asarray(leg_logits), axis=-1).astype(np.int32)
+    for _ in range(N):
+        leg_logits, cache = transformer.decode_step(
+            params, cache, jnp.asarray(toks), cfg, impl="reference")
+        dec_logits, state = executor.run_decode(
+            pair.decode, params, jnp.asarray(toks), state,
+            impl="reference")
+        np.testing.assert_allclose(np.asarray(dec_logits),
+                                   np.asarray(leg_logits),
+                                   rtol=0, atol=1e-5)
+        toks = np.argmax(np.asarray(leg_logits), axis=-1).astype(np.int32)
+    assert list(np.asarray(state.lengths)) == [P + N] * slots
+
+
+def test_decode_mask_keeps_dead_slots_inert():
+    """Unoccupied slots under the occupancy mask neither advance their
+    length nor write cache rows — the live slot's logits are identical
+    to a fully-live run."""
+    cfg = _cfg(n_layers=1, attn_window=4)
+    params, pair, state = _setup(cfg, slots=2, max_len=8)
+    _, state = _prefill_slot(pair, params, state, 0, [3, 1, 4], 8)
+    before = {rid: np.asarray(buf) for rid, buf in state.caches.items()}
+    toks = jnp.asarray([7, 9], jnp.int32)
+    mask = jnp.asarray([True, False])
+    logits, new_state = executor.run_decode(pair.decode, params, toks,
+                                            state, mask, impl="reference")
+    assert list(np.asarray(new_state.lengths)) == [4, 0]   # only slot 0
+    for rid, buf in new_state.caches.items():
+        np.testing.assert_array_equal(np.asarray(buf)[1], before[rid][1])
+    full_logits, _ = executor.run_decode(pair.decode, params, toks, state,
+                                         impl="reference")
+    np.testing.assert_allclose(np.asarray(logits[0]),
+                               np.asarray(full_logits[0]), rtol=0, atol=0)
+
+
+def test_windowed_dead_slot_readmission_has_no_stale_rows():
+    """Admit -> retire -> re-admit on a windowed pair: the re-admitted
+    request attends no stale rows from the dead period (its tokens
+    match a fresh single-request engine), even though the rolling
+    prefill does not rewrite a full max_len row region."""
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg(n_layers=2, attn_window=4)
+    params = init_params(transformer.param_defs(cfg), K0)
+    max_len, max_new = 8, 5
+
+    def serve(reqs):
+        eng = ServingEngine(cfg, params, slots=1, max_len=max_len,
+                            impl="reference", use_program=True)
+        assert eng._lm_program
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run_until_drained()
+        assert eng.n_prefill_recomputes == 0
+        return sorted(done, key=lambda r: r.uid)
+
+    # slot 0 serves A to completion (its ring fills with A's rows),
+    # then B is admitted into the same slot
+    a = Request(uid=0, prompt=np.asarray([9, 8, 7, 6, 5, 4], np.int32),
+                max_new_tokens=max_new)
+    b = Request(uid=1, prompt=np.asarray([2, 7], np.int32),
+                max_new_tokens=max_new)
+    reused = serve([a, b])
+    fresh = serve([Request(uid=1, prompt=np.asarray([2, 7], np.int32),
+                           max_new_tokens=max_new)])
+    assert reused[1].out_tokens == fresh[0].out_tokens
+
+
+def test_lm_admit_reuses_slot_freed_same_tick():
+    """A slot freed during admission (max_new_tokens=1 retires on the
+    prefill token) admits the next queued request in the same tick
+    instead of idling until the next one."""
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg(n_layers=1)
+    params = init_params(transformer.param_defs(cfg), K0)
+    eng = ServingEngine(cfg, params, slots=1, max_len=8,
+                        impl="reference", use_program=True)
+    for i in range(2):
+        eng.submit(Request(uid=i, prompt=np.asarray([5, 6], np.int32),
+                           max_new_tokens=1))
+    finished = eng.step()
+    assert len(finished) == 2 and not eng.queue
+    assert eng.n_prefills == 2 and eng.n_prefill_recomputes == 0
+
+
+def test_unlowerable_family_warns_with_specific_reason():
+    """Fallback to the legacy loop names the *specific* blocker (here
+    MoE dispatch), never a generic 'not lowered' — and the engine
+    records it for callers that require the program path."""
+    from repro.serving import ServingEngine
+    cfg = _cfg(n_experts=2, top_k=1)
+    params = init_params(transformer.param_defs(cfg), K0)
+    with pytest.warns(RuntimeWarning, match="MoE dispatch"):
+        eng = ServingEngine(cfg, params, slots=1, max_len=8,
+                            impl="reference", use_program=True)
+    assert not eng._lm_program
+    assert "MoE dispatch" in eng.fallback_reason
+
+
+def test_serve_program_exits_nonzero_on_fallback():
+    """launch/serve.py --program refuses to silently serve an
+    explicitly-requested program path through the legacy loop."""
+    from repro.launch import serve
+    with pytest.warns(RuntimeWarning), pytest.raises(SystemExit) as ei:
+        serve.main(["--arch", "zamba2-7b", "--smoke", "--program",
+                    "--slots", "1", "--max-len", "8", "--requests", "0"])
+    assert ei.value.code == 2
 
 
 def test_engine_rejects_plain_lm_program():
@@ -207,6 +364,20 @@ def test_engine_rejects_plain_lm_program():
     pair = transformer.compile_program_pair(cfg, slots=2, max_len=8)
     with pytest.raises(ValueError, match="slots/max_len"):
         ServingEngine(cfg, params, slots=4, max_len=8, program=pair)
+    # ...including a windowed max_len mismatch, which the persistent
+    # region shapes alone cannot see (rows collapse to the window)
+    wcfg = _cfg(n_layers=1, attn_window=4)
+    wparams = init_params(transformer.param_defs(wcfg), K0)
+    wpair = transformer.compile_program_pair(wcfg, slots=1, max_len=16)
+    with pytest.raises(ValueError, match="slots/max_len"):
+        ServingEngine(wcfg, wparams, slots=1, max_len=8, program=wpair)
+    # ...and a pair whose window disagrees with the engine's config
+    # (same recorded slots/max_len, different region rows)
+    cfg1 = _cfg(n_layers=1)
+    params1 = init_params(transformer.param_defs(cfg1), K0)
+    wpair8 = transformer.compile_program_pair(wcfg, slots=1, max_len=8)
+    with pytest.raises(ValueError, match="slots/max_len"):
+        ServingEngine(cfg1, params1, slots=1, max_len=8, program=wpair8)
 
 
 # --- serving round trip ------------------------------------------------------------
