@@ -1,8 +1,12 @@
-"""Benchmark utilities: wall-clock timing + CSV emission."""
+"""Benchmark utilities: wall-clock timing + CSV/JSON emission."""
+import json
 import sys
 import time
 
 import jax
+
+# Rows collected by emit() for the --json sidecar (benchmarks/run.py).
+ROWS: list[dict] = []
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -21,3 +25,13 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.2f},{derived}")
     sys.stdout.flush()
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 2),
+                 "derived": derived})
+
+
+def write_json(path: str) -> None:
+    """Dump every row emitted so far as a JSON array — the
+    machine-readable sidecar to the CSV stream (CI uploads it as an
+    artifact so regressions are diffable across runs)."""
+    with open(path, "w") as f:
+        json.dump(ROWS, f, indent=2)

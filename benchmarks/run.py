@@ -14,6 +14,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: modeled suites + shortened "
                          "wallclock runs (CPU interpret mode)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the emitted rows as a JSON array "
+                         "(machine-readable sidecar to the CSV stream)")
     args = ap.parse_args()
 
     from . import (fig4_loop_rearrangement, kernels_wallclock,
@@ -43,9 +46,13 @@ def main() -> None:
         try:
             mod.run()
         except Exception as e:   # keep the suite going; record the failure
-            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+            from .common import emit
+            emit(f"{name}/ERROR", 0.0, f"{type(e).__name__}:{e}")
             import traceback
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        from .common import write_json
+        write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -76,5 +76,69 @@ def run():
          "paper_gap_pct<=0.5")
 
 
+def _layer_config(name, H, cin, cout, k, s, p):
+    from repro.configs.base import CNNConfig, CNNLayer
+    return CNNConfig(name=f"table1m-{name}", input_hw=H, input_ch=cin,
+                     layers=(CNNLayer(kind="conv", c_out=cout, k=k,
+                                      stride=s, pad=p, activation="relu"),),
+                     n_classes=2, dtype="bfloat16")
+
+
+def run_measured(*, impl: str = "auto", interpret: bool | None = None,
+                 repeats: int = 3, top_k: int = 3):
+    """Measured Table-1 analogue: AUTO is the autotuner's winner (top-k
+    by calibrated cost, replay-measured); HAND is the "patient
+    engineer" — *every* feasible candidate replay-measured, min taken.
+    Both execute the same kernels on this host, so the auto/hand ratio
+    is wallclock, not model.  The paper's claim is auto within ~0.5% of
+    hand; here the check is auto_us/hand_us per layer.
+
+    Off-TPU the default impl resolves to "reference", which ignores
+    tilings — candidates then time identically up to dispatch noise and
+    the ratio is a noise floor, not a schedule comparison.  Pass
+    ``--interpret`` (pallas interpret mode) to actually execute each
+    candidate's tiling on CPU; it is slow but schedule-sensitive."""
+    from repro.core.autotune import TunedCache, tune_cnn
+    from repro.core.hw import SNOWFLAKE as hw_snowflake
+    ratios = []
+    for (name, H, W, k, cin, cout, s, p, _hand_ms, _auto_ms) in LAYERS:
+        cfg = _layer_config(name, H, cin, cout, k, s, p)
+        # HAND: exhaustive — no top-k cut, no modeled-traffic filter.
+        hand = tune_cnn(cfg, hw=hw_snowflake, cache=TunedCache(),
+                        impl=impl, interpret=interpret, top_k=10**6,
+                        repeats=repeats, require_no_model_regression=False)
+        # AUTO: the production search path (defaults).
+        auto = tune_cnn(cfg, hw=hw_snowflake, cache=TunedCache(),
+                        impl=impl, interpret=interpret, top_k=top_k,
+                        repeats=repeats)
+        rh, ra = hand.results[0], auto.results[0]
+        t_hand, t_auto = rh.winner_time_s, ra.winner_time_s
+        t_untuned = ra.incumbent_time_s
+        ratio = t_auto / t_hand
+        ratios.append(ratio)
+        emit(f"table1m/{name}/auto", t_auto * 1e6,
+             f"untuned_us={t_untuned * 1e6:.1f};measured={ra.measurements}")
+        emit(f"table1m/{name}/hand", t_hand * 1e6,
+             f"auto_over_hand={ratio:.3f};measured={rh.measurements}")
+    emit("table1m/mean_auto_over_hand",
+         sum(ratios) / len(ratios) * 100, "pct_of_hand;paper<=100.5")
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured", action="store_true",
+                    help="execute AUTO (tuned) vs HAND (exhaustive "
+                         "search) instead of the analytic model")
+    ap.add_argument("--impl", default="auto")
+    ap.add_argument("--interpret", action="store_true", default=None,
+                    help="force pallas interpret mode (exercises the "
+                         "tiled kernels on CPU)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--top-k", type=int, default=3)
+    a = ap.parse_args()
+    if a.measured:
+        run_measured(impl=a.impl, interpret=a.interpret,
+                     repeats=a.repeats, top_k=a.top_k)
+    else:
+        run()

@@ -32,11 +32,13 @@ import math
 from dataclasses import dataclass
 
 from .hw import HardwareModel, MeshDescriptor
-from .tiling import (MatmulTiling, matmul_vmem_bytes, pow2_candidates,
-                     round_up, select_matmul_tiles)
+from .tiling import (MatmulTiling, enumerate_matmul_tilings,
+                     matmul_vmem_bytes, pow2_candidates, round_up,
+                     select_matmul_tiles)
 
 __all__ = [
     "Dataflow",
+    "enumerate_matmul_candidates",
     "matmul_traffic",
     "materialization_roundtrip",
     "conv_strip_traffic",
@@ -235,6 +237,56 @@ def choose_matmul_dataflow(M: int, K: int, N: int, dtype_bytes: int,
     tr, df, t = options[0]
     return DataflowDecision(dataflow=df, tiling=t, traffic_bytes=tr,
                             alternatives=alts)
+
+
+def enumerate_matmul_candidates(M: int, K: int, N: int, dtype_bytes: int,
+                                hw: HardwareModel, *,
+                                allow_output_stationary: bool = True,
+                                out_bytes_per_el: int | None = None
+                                ) -> list[tuple[Dataflow, MatmulTiling,
+                                                float]]:
+    """The autotuner's matmul search space: every feasible
+    (dataflow, tiling) pair with its modeled traffic — the resident-slab
+    flavors from ``_resident_tiling``'s own loops plus the full
+    output-stationary (bm, bk, bn) grid.  Superset of what
+    ``choose_matmul_dataflow`` picks from."""
+    base = hw.mxu_dim
+    budget = hw.vmem_budget()
+    mcap = hw.maps_buffer_bytes or budget
+    wcap = hw.weights_buffer_bytes or budget
+    Kp = round_up(K, base)
+    out: list[tuple[Dataflow, MatmulTiling, float]] = []
+
+    for bm in pow2_candidates(min(round_up(M, base), 4096), base):
+        for bn in pow2_candidates(min(round_up(N, base), 1024), base):
+            vmem = matmul_vmem_bytes(bm, Kp, bn, dtype_bytes, stream_a=False)
+            if (bm * Kp * dtype_bytes > mcap
+                    or 2 * Kp * bn * dtype_bytes > wcap or vmem > budget):
+                continue
+            g = (math.ceil(M / bm), math.ceil(N / bn), 1)
+            t = MatmulTiling(bm, Kp, bn, vmem, g)
+            tr = matmul_traffic(M, K, N, dtype_bytes, Dataflow.MAPS_RESIDENT,
+                                bm, Kp, bn, out_bytes_per_el)
+            out.append((Dataflow.MAPS_RESIDENT, t, tr))
+    for bn in pow2_candidates(min(round_up(N, base), 4096), base):
+        for bm in pow2_candidates(min(round_up(M, base), 1024), base):
+            vmem = matmul_vmem_bytes(bm, Kp, bn, dtype_bytes, stream_b=False)
+            if (Kp * bn * dtype_bytes > wcap
+                    or 2 * bm * Kp * dtype_bytes > mcap or vmem > budget):
+                continue
+            g = (math.ceil(M / bm), math.ceil(N / bn), 1)
+            t = MatmulTiling(bm, Kp, bn, vmem, g)
+            tr = matmul_traffic(M, K, N, dtype_bytes,
+                                Dataflow.WEIGHTS_RESIDENT, bm, Kp, bn,
+                                out_bytes_per_el)
+            out.append((Dataflow.WEIGHTS_RESIDENT, t, tr))
+    if allow_output_stationary:
+        for t in enumerate_matmul_tilings(M, K, N, dtype_bytes, hw):
+            tr = matmul_traffic(M, K, N, dtype_bytes,
+                                Dataflow.OUTPUT_STATIONARY, t.bm, t.bk, t.bn,
+                                out_bytes_per_el)
+            out.append((Dataflow.OUTPUT_STATIONARY, t, tr))
+    return out
 
 
 # --- distributed level (beyond-paper) -------------------------------------------

@@ -32,6 +32,7 @@ __all__ = [
     "embed_node",
     "elementwise_node",
     "pool_out",
+    "kernel_kind",
 ]
 
 
@@ -164,6 +165,26 @@ class LayerNode:
 
 def _conv_out(size: int, k: int, stride: int, pad: int) -> int:
     return (size + 2 * pad - k) // stride + 1
+
+
+def kernel_kind(node: "LayerNode") -> str:
+    """The executor kernel a node lowers to — the kind key shared by
+    trace records (``runtime/executor``), cost-model fits
+    (``core/cost``), and tuned-cache signatures (``core/autotune``)."""
+    if node.kind is LayerKind.CONV2D:
+        return "conv2d"
+    if node.kind in (LayerKind.MATMUL, LayerKind.MOE):
+        return "matmul"
+    if node.kind is LayerKind.ATTENTION:
+        return ("decode_attention" if node.meta.get("decode")
+                else "flash_attention")
+    if node.kind is LayerKind.POOL:
+        return "avgpool" if node.meta.get("op") == "avg" else "maxpool"
+    if node.kind is LayerKind.EMBED:
+        return "embed"
+    if node.kind is LayerKind.NORM:
+        return "norm"
+    return node.meta.get("op", node.kind.value)
 
 
 def pool_out(size: int, window: int, stride: int, pad: int = 0) -> int:

@@ -131,9 +131,10 @@ class ProgramOp:
     norm_kind: str | None = None     # "rmsnorm" | "layernorm" | "nonparametric"
     flatten_input: bool = False      # CNN fc: (B,H,W,C) -> (B, H*W*C)
     transpose_w: bool = False        # tied lm_head: use embed table W^T
-    # modeled cost, carried for the listing / benchmarks
+    # modeled cost, carried for the listing / benchmarks / trace records
     flops: float = 0.0
     traffic_bytes: float = 0.0
+    exec_time_s: float = 0.0         # schedule's (possibly calibrated) price
 
     def trace(self) -> str:
         """One paper-style instruction-trace line."""
@@ -311,7 +312,8 @@ def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
         common = dict(
             index=len(ops), name=node.name, in_region=in_region,
             out_region=out_region, param_key=node.meta.get("param"),
-            flops=ls.flops, traffic_bytes=ls.traffic_bytes)
+            flops=ls.flops, traffic_bytes=ls.traffic_bytes,
+            exec_time_s=ls.exec_time_s)
         if node.kind is LayerKind.CONV2D:
             d = node.dims
             fp = ls.notes.get("fused_pool")

@@ -22,17 +22,22 @@ module walks the ModelGraph and emits a ``LayerSchedule`` per node:
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 from dataclasses import dataclass, field
 
 from .balance import balance_transfers, percent_imbalance
 from .dataflow import (Dataflow, DataflowDecision, DistDecision,
                        choose_conv_dataflow, choose_dist_strategy,
-                       choose_matmul_dataflow, materialization_roundtrip)
+                       choose_matmul_dataflow, materialization_roundtrip,
+                       matmul_traffic)
 from .hw import HardwareModel, MeshDescriptor, TPU_V5E
-from .ir import DepLabel, LayerKind, LayerNode, ModelGraph, _conv_out, pool_out
+from .ir import (DepLabel, LayerKind, LayerNode, ModelGraph, _conv_out,
+                 kernel_kind, pool_out)
 from .regions import allocate_regions
-from .tiling import (ConvTiling, select_attention_blocks,
-                     select_conv_row_strips)
+from .tiling import (ConvTiling, MatmulTiling, conv_tiling_from,
+                     enumerate_attention_blocks, matmul_vmem_bytes,
+                     select_attention_blocks, select_conv_row_strips)
 
 __all__ = ["LayerSchedule", "ModelSchedule", "compile_model"]
 
@@ -101,14 +106,63 @@ def _epilogue_slots(node: LayerNode) -> int:
     return slots
 
 
+def _tuned_matmul_decision(M: int, K: int, N: int, dtype_bytes: int,
+                           hw: HardwareModel, entry: dict, *,
+                           allow_output_stationary: bool
+                           ) -> DataflowDecision | None:
+    """A tuned-cache matmul entry as a DataflowDecision, or None when
+    the entry is malformed or violates the feasibility constraints the
+    chooser enforces (buffer caps, VMEM budget) — the caller then falls
+    back to the analytic chooser, so a stale cache can degrade only to
+    the untuned schedule, never to an unexecutable one."""
+    try:
+        df = Dataflow(entry["dataflow"])
+        bm, bk, bn = (int(v) for v in entry["block"])
+    except (KeyError, ValueError, TypeError):
+        return None
+    if df is Dataflow.OUTPUT_STATIONARY and not allow_output_stationary:
+        return None
+    budget = hw.vmem_budget()
+    mcap = hw.maps_buffer_bytes or budget
+    wcap = hw.weights_buffer_bytes or budget
+    if df is Dataflow.MAPS_RESIDENT:
+        vmem = matmul_vmem_bytes(bm, bk, bn, dtype_bytes, stream_a=False)
+        fits = (bm * bk * dtype_bytes <= mcap
+                and 2 * bk * bn * dtype_bytes <= wcap)
+        grid = (math.ceil(M / bm), math.ceil(N / bn), 1)
+    elif df is Dataflow.WEIGHTS_RESIDENT:
+        vmem = matmul_vmem_bytes(bm, bk, bn, dtype_bytes, stream_b=False)
+        fits = (bk * bn * dtype_bytes <= wcap
+                and 2 * bm * bk * dtype_bytes <= mcap)
+        grid = (math.ceil(M / bm), math.ceil(N / bn), 1)
+    else:
+        vmem = matmul_vmem_bytes(bm, bk, bn, dtype_bytes)
+        fits = (2 * bm * bk * dtype_bytes <= mcap
+                and 2 * bk * bn * dtype_bytes <= wcap)
+        grid = (math.ceil(M / bm), math.ceil(N / bn), math.ceil(K / bk))
+    if not fits or vmem > budget:
+        return None
+    tr = matmul_traffic(M, K, N, dtype_bytes, df, bm, bk, bn)
+    return DataflowDecision(
+        dataflow=df, tiling=MatmulTiling(bm, bk, bn, vmem, grid),
+        traffic_bytes=tr, alternatives={df.value: tr, "tuned": True})
+
+
 def _schedule_matmul(node: LayerNode, hw: HardwareModel,
                      mesh: MeshDescriptor | None,
-                     paper_faithful: bool) -> LayerSchedule:
+                     paper_faithful: bool,
+                     entry: dict | None = None) -> LayerSchedule:
     d = node.dims
     M, K, N = d["M"], d["K"], d["N"]
-    dec: DataflowDecision = choose_matmul_dataflow(
-        M, K, N, node.dtype_bytes, hw,
-        allow_output_stationary=not paper_faithful)
+    dec: DataflowDecision | None = None
+    if entry is not None and entry.get("kind") == "matmul":
+        dec = _tuned_matmul_decision(
+            M, K, N, node.dtype_bytes, hw, entry,
+            allow_output_stationary=not paper_faithful)
+    if dec is None:
+        dec = choose_matmul_dataflow(
+            M, K, N, node.dtype_bytes, hw,
+            allow_output_stationary=not paper_faithful)
     t = dec.tiling
     # Bookkeeping check (paper §5.2): epilogue work per tile vs MAC work.
     # MAC ops per output element along the trace = 2*bk; epilogue slots
@@ -140,12 +194,34 @@ def _schedule_matmul(node: LayerNode, hw: HardwareModel,
 
 def _schedule_conv(node: LayerNode, hw: HardwareModel,
                    paper_faithful: bool,
-                   charge_materialization: bool = True) -> LayerSchedule:
+                   charge_materialization: bool = True,
+                   entry: dict | None = None) -> LayerSchedule:
     d = node.dims
-    ct = select_conv_row_strips(d["H"], d["W"], d["C_in"], d["C_out"],
-                                d["kh"], d["kw"], d["stride"], d["pad"],
-                                node.dtype_bytes, hw,
-                                batch=d.get("batch", 1))
+    # A tuned-cache entry pins (out_rows, kernels_per_tile, storage,
+    # loop order) without calling the chooser; ``conv_tiling_from``
+    # re-validates the feasibility constraints, so a stale entry falls
+    # back to the analytic pick instead of emitting an unexecutable
+    # schedule.
+    ct = forced_df = None
+    if entry is not None and entry.get("kind") == "conv2d":
+        try:
+            ct = conv_tiling_from(
+                d["H"], d["W"], d["C_in"], d["C_out"], d["kh"], d["kw"],
+                d["stride"], d["pad"], node.dtype_bytes, hw,
+                out_rows=entry["out_rows"],
+                kernels_per_tile=entry["kernels_per_tile"],
+                strip_storage=entry["strip_storage"],
+                batch=d.get("batch", 1))
+            forced_df = Dataflow(entry["dataflow"])
+            if paper_faithful and ct.strip_storage != "materialized":
+                ct = forced_df = None
+        except (KeyError, ValueError):
+            ct = forced_df = None
+    if ct is None:
+        ct = select_conv_row_strips(d["H"], d["W"], d["C_in"], d["C_out"],
+                                    d["kh"], d["kw"], d["stride"], d["pad"],
+                                    node.dtype_bytes, hw,
+                                    batch=d.get("batch", 1))
     # Strip storage is a compiler decision (overlap duplication vs
     # in-kernel re-fetch); the paper-faithful mode pins Snowflake's
     # DMA-mandated materialization.
@@ -171,6 +247,11 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
         overlap_frac=ct.overlap_frac, strip_storage=storage,
         charge_materialization=charge_materialization)
     kloop, mloop = alts["kloop"], alts["mloop"]
+    if forced_df is not None:
+        # The tuned loop order may differ from the analytic argmin —
+        # that is the point: the measurement outranks the formula.
+        df = forced_df
+        traffic = kloop if df is Dataflow.MAPS_RESIDENT else mloop
     # The materialization round trip (read maps + write the halo-
     # augmented strips) that conv_strip_traffic charges, made visible.
     roundtrip = 0.0
@@ -199,6 +280,8 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
     t_exec = max(hw.compute_time(flops) * stall, hw.memory_time(traffic))
     notes = {"kloop": kloop, "mloop": mloop, "stall": stall,
              "strip_storage": storage}
+    if forced_df is not None:
+        notes["tuned"] = True
     if roundtrip:
         notes["materialize_roundtrip"] = roundtrip
     if fp:
@@ -212,20 +295,35 @@ def _schedule_conv(node: LayerNode, hw: HardwareModel,
         exec_time_s=t_exec, notes=notes)
 
 
-def _schedule_attention(node: LayerNode, hw: HardwareModel) -> LayerSchedule:
+def _schedule_attention(node: LayerNode, hw: HardwareModel,
+                        entry: dict | None = None) -> LayerSchedule:
     """Flash-attention schedule: the (block_q, block_kv) tile pair is a
     compiler decision (T2 on the score loop), pinned into the Program so
     the kernel wrapper never re-derives it at run time.  A decode node
     (seq_q == 1, persistent KV cache) gets its cache-streaming block
     from the same chooser's decode regime."""
     d = node.dims
-    bq, bkv = select_attention_blocks(d["seq_q"], d["seq_kv"],
-                                      d["head_dim"], node.dtype_bytes, hw,
-                                      window=node.meta.get("window"))
+    bq = bkv = tuned = None
+    if entry is not None and entry.get("kind") in ("flash_attention",
+                                                   "decode_attention"):
+        cand = (int(entry.get("block_q", 1)), int(entry["block_kv"]))
+        # Validate against the same VMEM test the chooser applies: a
+        # tuned pair outside the feasible set falls back.
+        if cand in enumerate_attention_blocks(
+                d["seq_q"], d["seq_kv"], d["head_dim"], node.dtype_bytes,
+                hw, window=node.meta.get("window")):
+            bq, bkv = cand
+            tuned = True
+    if bq is None:
+        bq, bkv = select_attention_blocks(d["seq_q"], d["seq_kv"],
+                                          d["head_dim"], node.dtype_bytes,
+                                          hw, window=node.meta.get("window"))
     flops = node.flops()
     traffic = node.min_bytes()
     notes = {"block_q": bq, "block_kv": bkv,
              "causal": bool(d.get("causal", True))}
+    if tuned:
+        notes["tuned"] = True
     if node.meta.get("decode"):
         notes["decode"] = True
     if node.meta.get("window"):
@@ -264,7 +362,8 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
                   mesh: MeshDescriptor | None = None,
                   paper_faithful: bool = False,
                   charge_materialization: bool = True,
-                  hbm_activation_budget: float | None = None
+                  hbm_activation_budget: float | None = None,
+                  tuned=None, cost_model=None
                   ) -> ModelSchedule:
     """Walk the graph and emit the full model schedule.
 
@@ -274,11 +373,21 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
     ``charge_materialization=False`` drops the materialized-strip round
     trip from the traffic model (the paper's Fig. 4 / Table 2 frame,
     which counts only the conv's own streams).
+
+    ``tuned`` is a measured-schedule lookup (``core/autotune.TunedView``
+    or anything with ``.lookup(node) -> dict | None``): a hit overrides
+    the analytic chooser's decision for that op, after re-validation
+    against this ``hw``'s feasibility constraints.  ``cost_model`` is a
+    calibrated ``core/cost.CostModel``; when given, every layer's
+    ``exec_time_s`` is re-priced from measured coefficients instead of
+    the raw analytic ``hw.exec_time``.
     """
     graph.mark_residuals()
     graph.mark_pool_fusion()
     layers: list[LayerSchedule] = []
     for node in graph:
+        entry = tuned.lookup(node) if tuned is not None and node.kind in (
+            LayerKind.CONV2D, LayerKind.MATMUL, LayerKind.ATTENTION) else None
         if node.kind in (LayerKind.MATMUL, LayerKind.MOE):
             if node.kind is LayerKind.MOE:
                 # Schedule one expert matmul; dispatch handled by T4.
@@ -302,12 +411,13 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
                                      "exec_time_s": hw.exec_time(node.flops(), traffic)})
                 layers.append(s)
             else:
-                layers.append(_schedule_matmul(node, hw, mesh, paper_faithful))
+                layers.append(_schedule_matmul(node, hw, mesh, paper_faithful,
+                                               entry=entry))
         elif node.kind is LayerKind.CONV2D:
             layers.append(_schedule_conv(node, hw, paper_faithful,
-                                         charge_materialization))
+                                         charge_materialization, entry=entry))
         elif node.kind is LayerKind.ATTENTION:
-            layers.append(_schedule_attention(node, hw))
+            layers.append(_schedule_attention(node, hw, entry=entry))
         else:
             # A pool is only free if its producer conv actually fused
             # it (recorded in the conv's schedule notes — requires the
@@ -316,6 +426,17 @@ def compile_model(graph: ModelGraph, hw: HardwareModel = TPU_V5E, *,
             fused = any(ls.name == src and "fused_pool" in ls.notes
                         for ls in layers) if src else False
             layers.append(_schedule_other(node, hw, fused=fused))
+
+    if cost_model is not None:
+        # Re-price from measured coefficients.  Fused-away ops (zero
+        # flops, zero traffic) stay free — γ would otherwise charge a
+        # dispatch that never happens.  layers is 1:1 with graph nodes.
+        layers = [
+            ls if (ls.exec_time_s == 0 and ls.traffic_bytes == 0) else
+            dataclasses.replace(ls, exec_time_s=cost_model.predict(
+                kernel_kind(node), ls.flops, ls.traffic_bytes,
+                ls.exec_time_s))
+            for node, ls in zip(graph, layers)]
 
     # T4: balance each layer's tile transfers across load units and report
     # the residual imbalance (drives the Table 3 reproduction).

@@ -29,9 +29,13 @@ __all__ = [
     "pow2_candidates",
     "MatmulTiling",
     "select_matmul_tiles",
+    "enumerate_matmul_tilings",
     "ConvTiling",
     "select_conv_row_strips",
+    "enumerate_conv_tilings",
+    "conv_tiling_from",
     "select_attention_blocks",
+    "enumerate_attention_blocks",
     "virtual_strips_fit",
 ]
 
@@ -134,6 +138,35 @@ def select_matmul_tiles(M: int, K: int, N: int, dtype_bytes: int,
     return best[1]
 
 
+def enumerate_matmul_tilings(M: int, K: int, N: int, dtype_bytes: int,
+                             hw: HardwareModel) -> list[MatmulTiling]:
+    """Every feasible output-stationary (bm, bk, bn) the chooser's own
+    loops would consider — the autotuner's matmul candidate set (the
+    resident-slab flavors are enumerated by
+    ``dataflow.enumerate_matmul_candidates``, which combines both).
+    Feasibility is exactly ``select_matmul_tiles``'s: VMEM budget plus
+    the split maps/weights buffer caps."""
+    base = hw.mxu_dim
+    budget = hw.vmem_budget()
+    Mp, Kp, Np = (round_up(max(d, 1), base) for d in (M, K, N))
+    mcap = hw.maps_buffer_bytes or budget
+    wcap = hw.weights_buffer_bytes or budget
+    out: list[MatmulTiling] = []
+    for bm in pow2_candidates(min(Mp, 2048), base):
+        for bn in pow2_candidates(min(Np, 2048), base):
+            for bk in pow2_candidates(min(Kp, 4096), base):
+                vmem = matmul_vmem_bytes(bm, bk, bn, dtype_bytes)
+                if vmem > budget:
+                    continue
+                if (2 * bm * bk * dtype_bytes > mcap
+                        or 2 * bk * bn * dtype_bytes > wcap):
+                    continue
+                grid = (math.ceil(Mp / bm), math.ceil(Np / bn),
+                        math.ceil(Kp / bk))
+                out.append(MatmulTiling(bm, bk, bn, vmem, grid))
+    return out
+
+
 # --- attention blocks -------------------------------------------------------------
 def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
                             hw: HardwareModel, *,
@@ -183,6 +216,39 @@ def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
     return best
 
 
+def enumerate_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
+                               hw: HardwareModel, *,
+                               window: int | None = None
+                               ) -> list[tuple[int, int]]:
+    """Every feasible (block_q, block_kv) pair under the same VMEM test
+    ``select_attention_blocks`` applies — the autotuner's attention
+    candidate set.  ``Sq == 1`` enumerates the decode regime: (1, bkv)
+    for every cache-streaming block that fits."""
+    budget = hw.vmem_budget()
+    if window is not None:
+        Skv = min(Skv, window)
+    if Sq == 1:
+        out = [(1, 128)]
+        for b in (256, 512, 1024, 2048, 4096):
+            if b <= max(Skv, 128) and 4 * b * D * dtype_bytes <= budget:
+                out.append((1, b))
+        return out
+    pairs: list[tuple[int, int]] = [(hw.lane, hw.lane)]
+    for bq in (128, 256, 512, 1024, 2048):
+        if bq > max(Sq, 128):
+            break
+        for bkv in (128, 256, 512, 1024, 2048):
+            if bkv > max(Skv, 128):
+                break
+            use = (bq * D * dtype_bytes
+                   + 2 * 2 * bkv * D * dtype_bytes
+                   + bq * D * 4 + 2 * bq * 128 * 4
+                   + bq * bkv * 4)
+            if use <= budget:
+                pairs.append((bq, bkv))
+    return sorted(set(pairs))
+
+
 # --- conv row strips --------------------------------------------------------------
 @dataclass(frozen=True)
 class ConvTiling:
@@ -229,6 +295,70 @@ def virtual_strips_fit(H: int, W: int, C_in: int, kh: int, stride: int,
     return maps_bytes + kernel_tile_bytes + out_tile_bytes <= budget
 
 
+def _strip_candidate(H: int, W: int, C_in: int, C_out: int, kh: int,
+                     kw: int, stride: int, pad: int, dtype_bytes: int,
+                     hw: HardwareModel, batch: int,
+                     out_rows: int) -> ConvTiling | None:
+    """One materialized-storage candidate at the given strip height:
+    the widest kernel tile that fits next to the maps strip, shrunk
+    until the f32 output accumulator also fits — exactly the chooser's
+    per-``out_rows`` step, shared with ``enumerate_conv_tilings`` so
+    the search space and the analytic pick can never drift."""
+    oh = (H + 2 * pad - kh) // stride + 1
+    ow = (W + 2 * pad - kw) // stride + 1
+    budget = hw.vmem_budget()
+    mcap = hw.maps_buffer_bytes or budget
+    wcap = hw.weights_buffer_bytes or budget
+    kernel_bytes_each = C_in * kh * kw * dtype_bytes
+    in_rows = min(H, (out_rows - 1) * stride + kh)
+    maps_bytes = in_rows * W * C_in * dtype_bytes * 2              # dbl buf
+    if maps_bytes > mcap:
+        return None
+    remaining = min(budget - maps_bytes, wcap)
+    if remaining <= kernel_bytes_each * 2:
+        return None
+    kpt = min(C_out, remaining // (kernel_bytes_each * 2))
+    kpt = max(1, min(kpt, C_out))
+    # Align kernel-tile width to the compute unit when possible.
+    if kpt >= hw.mxu_dim:
+        kpt = round_down_multiple(kpt, hw.mxu_dim)
+    # Shrink the kernel tile until the f32 output strip also fits.
+    while kpt > 1:
+        out_acc = out_rows * ow * kpt * 4
+        if maps_bytes + kpt * kernel_bytes_each * 2 + out_acc <= budget:
+            break
+        kpt = max(1, kpt // 2)
+    out_acc = out_rows * ow * kpt * 4
+    vmem = maps_bytes + kpt * kernel_bytes_each * 2 + out_acc
+    if vmem > budget:
+        return None
+    n_map = math.ceil(oh / out_rows) * batch
+    n_ker = math.ceil(C_out / kpt)
+    halo = max(0, in_rows - out_rows * stride)
+    overlap = (halo * (math.ceil(oh / out_rows) - 1)) / max(H, 1)
+    return ConvTiling(out_rows, in_rows, kpt, vmem, n_map, n_ker, overlap)
+
+
+def _virtual_variant(t: ConvTiling, H: int, W: int, C_in: int, C_out: int,
+                     kh: int, kw: int, stride: int, pad: int,
+                     dtype_bytes: int, hw: HardwareModel
+                     ) -> ConvTiling | None:
+    """The zero-copy twin of a materialized tiling, or None when the
+    whole padded per-image maps is not VMEM-resident."""
+    ow = (W + 2 * pad - kw) // stride + 1
+    kernel_bytes_each = C_in * kh * kw * dtype_bytes
+    ker_tile = t.kernels_per_tile * kernel_bytes_each * 2
+    out_tile = t.out_rows * ow * t.kernels_per_tile * 4
+    if not virtual_strips_fit(H, W, C_in, kh, stride, pad, dtype_bytes, hw,
+                              ker_tile, out_tile):
+        return None
+    Hp = H + 2 * pad + max(0, kh - stride)
+    Wp = W + 2 * pad
+    return dataclasses.replace(
+        t, strip_storage="virtual",
+        vmem_bytes=Hp * Wp * C_in * dtype_bytes * 2 + ker_tile + out_tile)
+
+
 def select_conv_row_strips(H: int, W: int, C_in: int, C_out: int, kh: int,
                            kw: int, stride: int, pad: int,
                            dtype_bytes: int, hw: HardwareModel,
@@ -243,40 +373,14 @@ def select_conv_row_strips(H: int, W: int, C_in: int, C_out: int, kh: int,
     """
     oh = (H + 2 * pad - kh) // stride + 1
     ow = (W + 2 * pad - kw) // stride + 1
-    budget = hw.vmem_budget()
-    mcap = hw.maps_buffer_bytes or budget
-    wcap = hw.weights_buffer_bytes or budget
     kernel_bytes_each = C_in * kh * kw * dtype_bytes
 
     best: ConvTiling | None = None
     for out_rows in range(1, oh + 1):
-        in_rows = min(H, (out_rows - 1) * stride + kh)
-        maps_bytes = in_rows * W * C_in * dtype_bytes * 2          # dbl buf
-        if maps_bytes > mcap:
+        cand = _strip_candidate(H, W, C_in, C_out, kh, kw, stride, pad,
+                                dtype_bytes, hw, batch, out_rows)
+        if cand is None:
             break  # strips only grow from here
-        remaining = min(budget - maps_bytes, wcap)
-        if remaining <= kernel_bytes_each * 2:
-            break
-        kpt = min(C_out, remaining // (kernel_bytes_each * 2))
-        kpt = max(1, min(kpt, C_out))
-        # Align kernel-tile width to the compute unit when possible.
-        if kpt >= hw.mxu_dim:
-            kpt = round_down_multiple(kpt, hw.mxu_dim)
-        # Shrink the kernel tile until the f32 output strip also fits.
-        while kpt > 1:
-            out_acc = out_rows * ow * kpt * 4
-            if maps_bytes + kpt * kernel_bytes_each * 2 + out_acc <= budget:
-                break
-            kpt = max(1, kpt // 2)
-        out_acc = out_rows * ow * kpt * 4
-        vmem = maps_bytes + kpt * kernel_bytes_each * 2 + out_acc
-        if vmem > budget:
-            continue
-        n_map = math.ceil(oh / out_rows) * batch
-        n_ker = math.ceil(C_out / kpt)
-        halo = max(0, in_rows - out_rows * stride)
-        overlap = (halo * (math.ceil(oh / out_rows) - 1)) / max(H, 1)
-        cand = ConvTiling(out_rows, in_rows, kpt, vmem, n_map, n_ker, overlap)
         # Objective: fewest total tile-loads weighted by overlap waste.
         def cost(t: ConvTiling) -> float:
             return (t.n_map_tiles * t.n_kernel_tiles
@@ -292,13 +396,85 @@ def select_conv_row_strips(H: int, W: int, C_in: int, C_out: int, kh: int,
                           oh * batch, C_out, 0.0)
     # Strip-storage decision (overlap re-fetch vs duplication): go
     # zero-copy when the whole padded per-image maps is VMEM-resident.
-    ker_tile = best.kernels_per_tile * kernel_bytes_each * 2
-    out_tile = best.out_rows * ow * best.kernels_per_tile * 4
-    if virtual_strips_fit(H, W, C_in, kh, stride, pad, dtype_bytes, hw,
-                          ker_tile, out_tile):
-        Hp = H + 2 * pad + max(0, kh - stride)
-        Wp = W + 2 * pad
-        best = dataclasses.replace(
-            best, strip_storage="virtual",
-            vmem_bytes=Hp * Wp * C_in * dtype_bytes * 2 + ker_tile + out_tile)
-    return best
+    virt = _virtual_variant(best, H, W, C_in, C_out, kh, kw, stride, pad,
+                            dtype_bytes, hw)
+    return virt if virt is not None else best
+
+
+def enumerate_conv_tilings(H: int, W: int, C_in: int, C_out: int, kh: int,
+                           kw: int, stride: int, pad: int, dtype_bytes: int,
+                           hw: HardwareModel, batch: int = 1
+                           ) -> list[ConvTiling]:
+    """The autotuner's conv candidate set: every feasible row-strip
+    height (with its derived kernel tile) in both storages the hardware
+    admits.  Superset of ``select_conv_row_strips``'s pick — same
+    per-``out_rows`` feasibility step, just not reduced to one winner."""
+    oh = (H + 2 * pad - kh) // stride + 1
+    out: list[ConvTiling] = []
+    seen: set[tuple] = set()
+    for out_rows in range(1, oh + 1):
+        cand = _strip_candidate(H, W, C_in, C_out, kh, kw, stride, pad,
+                                dtype_bytes, hw, batch, out_rows)
+        if cand is None:
+            break
+        for t in (cand, _virtual_variant(cand, H, W, C_in, C_out, kh, kw,
+                                         stride, pad, dtype_bytes, hw)):
+            if t is None:
+                continue
+            key = (t.out_rows, t.kernels_per_tile, t.strip_storage)
+            if key not in seen:
+                seen.add(key)
+                out.append(t)
+    return out
+
+
+def conv_tiling_from(H: int, W: int, C_in: int, C_out: int, kh: int,
+                     kw: int, stride: int, pad: int, dtype_bytes: int,
+                     hw: HardwareModel, *, out_rows: int,
+                     kernels_per_tile: int,
+                     strip_storage: str = "materialized",
+                     batch: int = 1) -> ConvTiling:
+    """Reconstruct a ConvTiling from pinned (out_rows, kernels_per_tile,
+    strip_storage) — how a tuned-cache entry becomes a schedule without
+    re-searching.  Validates the same feasibility constraints the
+    analytic chooser enforces (maps/weights buffer caps, VMEM budget,
+    virtual residency) and raises ``ValueError`` on violation, so a
+    stale or hand-edited cache can never emit an unexecutable schedule."""
+    oh = (H + 2 * pad - kh) // stride + 1
+    ow = (W + 2 * pad - kw) // stride + 1
+    if not 1 <= out_rows <= oh:
+        raise ValueError(f"out_rows {out_rows} outside [1, {oh}]")
+    if not 1 <= kernels_per_tile <= C_out:
+        raise ValueError(
+            f"kernels_per_tile {kernels_per_tile} outside [1, {C_out}]")
+    budget = hw.vmem_budget()
+    mcap = hw.maps_buffer_bytes or budget
+    wcap = hw.weights_buffer_bytes or budget
+    kernel_bytes_each = C_in * kh * kw * dtype_bytes
+    in_rows = min(H, (out_rows - 1) * stride + kh)
+    maps_bytes = in_rows * W * C_in * dtype_bytes * 2
+    ker_tile = kernels_per_tile * kernel_bytes_each * 2
+    out_acc = out_rows * ow * kernels_per_tile * 4
+    if maps_bytes > mcap:
+        raise ValueError(f"maps strip {maps_bytes}B exceeds the maps "
+                         f"buffer cap {mcap}B")
+    if ker_tile > wcap:
+        raise ValueError(f"kernel tile {ker_tile}B exceeds the weights "
+                         f"buffer cap {wcap}B")
+    if maps_bytes + ker_tile + out_acc > budget:
+        raise ValueError(f"working set {maps_bytes + ker_tile + out_acc}B "
+                         f"exceeds the VMEM budget {budget}B")
+    n_map = math.ceil(oh / out_rows) * batch
+    n_ker = math.ceil(C_out / kernels_per_tile)
+    halo = max(0, in_rows - out_rows * stride)
+    overlap = (halo * (math.ceil(oh / out_rows) - 1)) / max(H, 1)
+    t = ConvTiling(out_rows, in_rows, kernels_per_tile,
+                   maps_bytes + ker_tile + out_acc, n_map, n_ker, overlap)
+    if strip_storage == "virtual":
+        virt = _virtual_variant(t, H, W, C_in, C_out, kh, kw, stride, pad,
+                                dtype_bytes, hw)
+        if virt is None:
+            raise ValueError("virtual strips do not fit the VMEM budget "
+                             "(or the hardware lacks random buffer access)")
+        return virt
+    return t

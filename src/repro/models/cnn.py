@@ -72,16 +72,36 @@ def param_defs(cfg: CNNConfig) -> dict:
     return defs
 
 
-@functools.lru_cache(maxsize=128)
 def compile_program(cfg: CNNConfig, batch: int = 1,
                     hw: HardwareModel = TPU_V5E, *,
                     paper_faithful: bool = False) -> Program:
     """graph -> schedule -> regions -> Program, cached per (config, hw,
-    batch).  Every fusion / tiling / storage decision in the returned
-    Program comes from ``compile_model`` — the single source of truth."""
+    batch, tuned-cache generation).  Every fusion / tiling / storage
+    decision in the returned Program comes from ``compile_model`` — the
+    single source of truth.  When a tuned cache is active
+    (``core/autotune.activate``), its measured schedule decisions and
+    calibrated cost model are threaded into the compile; the generation
+    (content hash) in the memo key means re-tuning can never serve a
+    stale Program."""
+    from ..core import autotune
+    return _compile_program(cfg, batch, hw, paper_faithful,
+                            autotune.active_generation())
+
+
+@functools.lru_cache(maxsize=128)
+def _compile_program(cfg: CNNConfig, batch: int, hw: HardwareModel,
+                     paper_faithful: bool, generation: str) -> Program:
+    from ..core import autotune
+    tuned = cost_model = None
+    cache = autotune.active()
+    if cache is not None and generation != "empty":
+        fp = autotune.hw_fingerprint(hw)
+        tuned = cache.view(cfg.name, fp, batch)
+        cost_model = cache.cost_model(fp)
     dtype_bytes = jax.numpy.dtype(cfg.jdtype).itemsize
     graph = to_graph(cfg, batch=batch, dtype_bytes=dtype_bytes)
-    schedule = compile_model(graph, hw, paper_faithful=paper_faithful)
+    schedule = compile_model(graph, hw, paper_faithful=paper_faithful,
+                             tuned=tuned, cost_model=cost_model)
     return lower_to_program(graph, schedule)
 
 

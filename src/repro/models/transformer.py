@@ -489,16 +489,39 @@ def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
     return _build_lm_graph(cfg, cfg.name, batch * seq, by, add_attention)
 
 
-@functools.lru_cache(maxsize=64)
+def _tuned_context(cfg_name: str, batch: int, hw: HardwareModel,
+                   generation: str):
+    """(tuned_view, cost_model) from the active autotune cache, or
+    (None, None).  Shared by the compile entry points below; the
+    ``generation`` threaded through their memo keys is what makes
+    re-tuning invalidate memoized Programs (the stale-Program bugfix)."""
+    from ..core import autotune
+    cache = autotune.active()
+    if cache is None or generation == "empty":
+        return None, None
+    fp = autotune.hw_fingerprint(hw)
+    return cache.view(cfg_name, fp, batch), cache.cost_model(fp)
+
+
 def compile_program(cfg: ArchConfig, batch: int = 1, seq: int = 64,
                     hw: HardwareModel = TPU_V5E) -> Program:
     """graph -> schedule -> regions -> Program for a dense-transformer
-    config, cached per (config, batch, seq, hw).  Every tiling /
-    attention-block / fusion decision in the returned Program comes
-    from ``compile_model`` — the single source of truth, exactly as for
-    the CNNs (models/cnn.py::compile_program)."""
+    config, cached per (config, batch, seq, hw, tuned-cache
+    generation).  Every tiling / attention-block / fusion decision in
+    the returned Program comes from ``compile_model`` — the single
+    source of truth, exactly as for the CNNs
+    (models/cnn.py::compile_program)."""
+    from ..core import autotune
+    return _compile_program(cfg, batch, seq, hw,
+                            autotune.active_generation())
+
+
+@functools.lru_cache(maxsize=64)
+def _compile_program(cfg: ArchConfig, batch: int, seq: int,
+                     hw: HardwareModel, generation: str) -> Program:
+    tuned, cost_model = _tuned_context(cfg.name, batch, hw, generation)
     graph = to_graph(cfg, batch=batch, seq=seq)
-    schedule = compile_model(graph, hw)
+    schedule = compile_model(graph, hw, tuned=tuned, cost_model=cost_model)
     return lower_to_program(graph, schedule)
 
 
@@ -550,15 +573,26 @@ def _kv_cache_specs(cfg: ArchConfig, slots: int,
     return tuple(specs)
 
 
-@functools.lru_cache(maxsize=32)
 def compile_program_pair(cfg: ArchConfig, slots: int = 8,
                          max_len: int = 256,
                          hw: HardwareModel = TPU_V5E) -> ProgramPair:
+    from ..core import autotune
+    return _compile_program_pair(cfg, slots, max_len, hw,
+                                 autotune.active_generation())
+
+
+@functools.lru_cache(maxsize=32)
+def _compile_program_pair(cfg: ArchConfig, slots: int, max_len: int,
+                          hw: HardwareModel,
+                          generation: str) -> ProgramPair:
     """Compile the stateful serving pair: a batch-1 prefill Program
     (full causal forward + cache writes at the admitted slot) and a
     decode Program (one token per slot against the cache), sharing one
     persistent region table so a single runtime ``ProgramState``
-    addresses both.  Cached per (config, slots, max_len, hw).
+    addresses both.  Cached per (config, slots, max_len, hw,
+    tuned-cache generation); tuned decode entries are looked up at
+    ``batch=slots`` (matching ``core/autotune.tune_lm_decode``) and
+    prefill entries at ``batch=1``.
 
     For a windowed config the persistent regions hold
     ``kv_cache_len = min(max_len, attn_window)`` rows per slot; the
@@ -566,11 +600,15 @@ def compile_program_pair(cfg: ArchConfig, slots: int = 8,
     (ring) layout at write time and decode overwrites at ``pos %
     cache_len`` — the full-cache and windowed plans differ *only* in
     region shape, never in instruction structure."""
+    pre_tuned, cost_model = _tuned_context(cfg.name, 1, hw, generation)
+    dec_tuned, _ = _tuned_context(cfg.name, slots, hw, generation)
     pre_graph = to_graph(cfg, batch=1, seq=max_len, write_cache=True)
     pre_graph.name = cfg.name + ".prefill"
     dec_graph = to_decode_graph(cfg, slots=slots, max_len=max_len)
-    pre_sched = compile_model(pre_graph, hw)
-    dec_sched = compile_model(dec_graph, hw)
+    pre_sched = compile_model(pre_graph, hw, tuned=pre_tuned,
+                              cost_model=cost_model)
+    dec_sched = compile_model(dec_graph, hw, tuned=dec_tuned,
+                              cost_model=cost_model)
     pre_plan = allocate_regions(pre_graph, pre_sched)
     dec_plan = allocate_regions(dec_graph, dec_sched)
     # One persistent table, one base: the minted KV region ids coincide

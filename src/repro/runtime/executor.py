@@ -42,7 +42,10 @@ programs (the first op is then the ``embed`` gather).
 from __future__ import annotations
 
 import collections
-from dataclasses import dataclass
+import dataclasses
+import json
+import time
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +59,8 @@ from ..kernels.matmul import matmul
 
 __all__ = ["run", "jitted_runner", "ProgramState", "init_program_state",
            "run_prefill", "run_decode", "jitted_prefill_runner",
-           "jitted_decode_runner"]
+           "jitted_decode_runner", "TraceRecord", "ExecutorTrace",
+           "trace_program"]
 
 
 def _param(params, key: str | None):
@@ -295,6 +299,52 @@ def run_prefill(program: Program, params, tokens: jax.Array,
     return regions[program.output_region], ProgramState(caches, lengths)
 
 
+def _run_decode_attention(op: ProgramOp, src: jax.Array, k_src: jax.Array,
+                          v_src: jax.Array, ck: jax.Array, cv: jax.Array,
+                          pos: jax.Array, live: jax.Array, *, impl: str,
+                          interpret: bool | None):
+    """One decode_attention step against explicit cache buffers: RoPE
+    the new q/k at each slot's absolute position, write the new K/V row
+    at ``position % cache_len`` (masked per-slot by ``live``), attend
+    over the ring-valid rows.  Returns (out (B, heads*head_dim),
+    new_k_cache, new_v_cache).  Shared verbatim by ``run_decode`` and
+    the replay harness, so a replayed op cannot drift from the
+    executor."""
+    from ..models.common import Rotary, apply_rope
+    a = op.attn
+    B = src.shape[0]
+    q = src.reshape(B, a.heads, a.head_dim)
+    k_new = k_src.reshape(B, a.kv_heads, a.head_dim)
+    v_new = v_src.reshape(B, a.kv_heads, a.head_dim)
+    if a.rope_theta:
+        cos, sin = Rotary(a.head_dim, a.rope_theta).freqs(pos)
+        q = apply_rope(q, cos[:, None], sin[:, None])
+        k_new = apply_rope(k_new, cos[:, None], sin[:, None])
+    cache_len = ck.shape[1]
+    row = pos % cache_len                 # rolling overwrite
+
+    def cur(c, r):
+        return jax.lax.dynamic_slice_in_dim(c, r, 1, axis=0)[0]
+
+    def upd(c, x, r):
+        return jax.lax.dynamic_update_slice_in_dim(c, x[None], r, axis=0)
+
+    # Mask the *row*, not the buffer: a dead slot rewrites its
+    # current row with itself (a no-op), so the select stays
+    # row-sized and the bandwidth-bound cache update remains a
+    # single in-place scatter per side.
+    keep = live[:, None, None]
+    k_row = jnp.where(keep, k_new.astype(ck.dtype), jax.vmap(cur)(ck, row))
+    v_row = jnp.where(keep, v_new.astype(cv.dtype), jax.vmap(cur)(cv, row))
+    ck = jax.vmap(upd)(ck, k_row, row)
+    cv = jax.vmap(upd)(cv, v_row, row)
+    out = decode_attention(
+        q, ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
+        kv_len=ring_kv_len(pos, cache_len), block_kv=a.block_kv,
+        impl=impl, interpret=interpret)
+    return out.reshape(B, a.heads * a.head_dim), ck, cv
+
+
 def run_decode(program: Program, params, tokens: jax.Array,
                state: ProgramState, mask: jax.Array | None = None, *,
                impl: str = "auto", interpret: bool | None = None):
@@ -318,7 +368,6 @@ def run_decode(program: Program, params, tokens: jax.Array,
     rewriting the whole row region, rolling-window prefills do not).
     Their logits are still garbage the (absent) request never reads.
     """
-    from ..models.common import Rotary, apply_rope
     regions: dict[int, jax.Array] = {program.input_region: tokens}
     caches = dict(state.caches)
     pos = state.lengths
@@ -327,44 +376,13 @@ def run_decode(program: Program, params, tokens: jax.Array,
     for op in program.ops:
         src = regions[op.in_region]
         if op.kernel == "decode_attention":
-            a = op.attn
-            B = src.shape[0]
-            q = src.reshape(B, a.heads, a.head_dim)
-            k_new = regions[op.k_region].reshape(B, a.kv_heads, a.head_dim)
-            v_new = regions[op.v_region].reshape(B, a.kv_heads, a.head_dim)
-            if a.rope_theta:
-                cos, sin = Rotary(a.head_dim, a.rope_theta).freqs(pos)
-                q = apply_rope(q, cos[:, None], sin[:, None])
-                k_new = apply_rope(k_new, cos[:, None], sin[:, None])
-            ck, cv = caches[op.k_cache_region], caches[op.v_cache_region]
-            cache_len = ck.shape[1]
-            row = pos % cache_len                 # rolling overwrite
-
-            def cur(c, r):
-                return jax.lax.dynamic_slice_in_dim(c, r, 1, axis=0)[0]
-
-            def upd(c, x, r):
-                return jax.lax.dynamic_update_slice_in_dim(
-                    c, x[None], r, axis=0)
-
-            # Mask the *row*, not the buffer: a dead slot rewrites its
-            # current row with itself (a no-op), so the select stays
-            # row-sized and the bandwidth-bound cache update remains a
-            # single in-place scatter per side.
-            keep = live[:, None, None]
-            k_row = jnp.where(keep, k_new.astype(ck.dtype),
-                              jax.vmap(cur)(ck, row))
-            v_row = jnp.where(keep, v_new.astype(cv.dtype),
-                              jax.vmap(cur)(cv, row))
-            ck = jax.vmap(upd)(ck, k_row, row)
-            cv = jax.vmap(upd)(cv, v_row, row)
+            out, ck, cv = _run_decode_attention(
+                op, src, regions[op.k_region], regions[op.v_region],
+                caches[op.k_cache_region], caches[op.v_cache_region],
+                pos, live, impl=impl, interpret=interpret)
             caches[op.k_cache_region] = ck
             caches[op.v_cache_region] = cv
-            out = decode_attention(
-                q, ck.transpose(0, 2, 1, 3), cv.transpose(0, 2, 1, 3),
-                kv_len=ring_kv_len(pos, cache_len), block_kv=a.block_kv,
-                impl=impl, interpret=interpret)
-            regions[op.out_region] = out.reshape(B, a.heads * a.head_dim)
+            regions[op.out_region] = out
             continue
         regions[op.out_region] = _run_op(op, src, regions, params,
                                          impl=impl, interpret=interpret)
@@ -429,3 +447,214 @@ def jitted_decode_runner(program: Program, impl: str = "auto",
                               impl=impl, interpret=interpret)
         return jax.jit(_run, donate_argnums=(2,))
     return _cached_runner((id(program), impl, interpret, "decode"), make)
+
+
+# --- trace recorder (measured-cost loop, stage 7) ----------------------------------
+def _shape_dtype(x) -> list:
+    return [list(x.shape), str(jnp.asarray(x).dtype)]
+
+
+def _op_operands(op: ProgramOp, regions: dict, params,
+                 caches: dict | None = None) -> dict:
+    """role -> [shape, dtype] for everything the op touches."""
+    out: dict[str, list] = {"in": _shape_dtype(regions[op.in_region])}
+    for role, rid in (("k", op.k_region), ("v", op.v_region),
+                      ("in2", op.in2_region)):
+        if rid is not None:
+            out[role] = _shape_dtype(regions[rid])
+    if op.fuse_bypass and op.bypass_region is not None:
+        out["bypass"] = _shape_dtype(regions[op.bypass_region])
+    if op.param_key is not None:
+        p = _param(params, op.param_key)
+        if isinstance(p, dict):
+            out["w"] = _shape_dtype(p["w"])
+            if "b" in p:
+                out["b"] = _shape_dtype(p["b"])
+        else:
+            out["w"] = _shape_dtype(p)
+        out["param_dict"] = [[], "dict" if isinstance(p, dict) else "array"]
+    if op.param_key_b is not None:
+        out["b"] = _shape_dtype(_param(params, op.param_key_b))
+    if caches is not None and op.k_cache_region is not None:
+        out["k_cache"] = _shape_dtype(caches[op.k_cache_region])
+        out["v_cache"] = _shape_dtype(caches[op.v_cache_region])
+    return out
+
+
+def _op_schedule(op: ProgramOp) -> dict:
+    """The op's resolved schedule decisions, JSON-shaped — every field
+    the kernels receive verbatim, so a trace record fully determines
+    the dispatch (replay invariant)."""
+    d: dict = {
+        "strip_storage": op.strip_storage,
+        "dataflow": op.dataflow.value if op.dataflow else None,
+        "block": list(op.block) if op.block else None,
+        "stride": op.stride, "pad": op.pad, "window": op.window,
+        "fuse_bias": op.fuse_bias, "fuse_activation": op.fuse_activation,
+        "fuse_bypass": op.fuse_bypass, "bypass_first": op.bypass_first,
+        "fuse_pool": list(op.fuse_pool) if op.fuse_pool else None,
+        "norm_kind": op.norm_kind, "flatten_input": op.flatten_input,
+        "transpose_w": op.transpose_w,
+    }
+    if op.conv_tiling is not None:
+        d["conv_tiling"] = dataclasses.asdict(op.conv_tiling)
+    if op.attn is not None:
+        a = op.attn
+        d["attn"] = {"heads": a.heads, "kv_heads": a.kv_heads,
+                     "head_dim": a.head_dim, "causal": a.causal,
+                     "window": a.window, "rope_theta": a.rope_theta,
+                     "block_q": a.block_q, "block_kv": a.block_kv}
+    return d
+
+
+@dataclass
+class TraceRecord:
+    """One executed ProgramOp: identity, resolved schedule, operand
+    shapes, modeled cost, and measured wallclock.  ``measured_time_s``
+    is the only run-to-run varying field (``static_dict`` drops it);
+    everything else is a pure function of the Program + inputs."""
+    index: int
+    name: str
+    kind: str                        # ProgramOp.kernel
+    operands: dict
+    schedule: dict
+    flops: float
+    traffic_bytes: float
+    modeled_time_s: float
+    measured_time_s: float | None = None
+    repeats: int = 0
+    # runtime operand *values* a replay needs beyond shapes — e.g. the
+    # decode slots' positions (kv_len drives the attention work).
+    extras: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TraceRecord":
+        return cls(**d)
+
+    def static_dict(self) -> dict:
+        d = self.to_dict()
+        d.pop("measured_time_s")
+        d.pop("repeats")
+        return d
+
+
+@dataclass
+class ExecutorTrace:
+    """A traced Program execution: one TraceRecord per op + the context
+    needed to interpret the timings.  Serializes to JSONL (meta header
+    line, then one record per line) — the interchange format between
+    the executor, ``core/cost.fit_cost_model`` and ``core/autotune``."""
+    program: str
+    hw: str
+    impl: str
+    interpret: bool | None
+    repeats: int
+    records: list = field(default_factory=list)
+
+    def record_dicts(self) -> list[dict]:
+        return [r.to_dict() for r in self.records]
+
+    def to_jsonl(self) -> str:
+        meta = {"trace_meta": {"program": self.program, "hw": self.hw,
+                               "impl": self.impl, "interpret": self.interpret,
+                               "repeats": self.repeats}}
+        lines = [json.dumps(meta)]
+        lines += [json.dumps(d, sort_keys=True) for d in self.record_dicts()]
+        return "\n".join(lines) + "\n"
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_jsonl())
+
+    @classmethod
+    def from_jsonl(cls, text: str) -> "ExecutorTrace":
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        meta = json.loads(lines[0])["trace_meta"]
+        recs = [TraceRecord.from_dict(json.loads(ln)) for ln in lines[1:]]
+        return cls(records=recs, **meta)
+
+    @classmethod
+    def load(cls, path) -> "ExecutorTrace":
+        with open(path) as f:
+            return cls.from_jsonl(f.read())
+
+
+def _time_thunk(thunk, repeats: int) -> float:
+    """Min-of-``repeats`` wallclock of ``thunk`` with block-until-ready
+    (one untimed warmup absorbs tracing/compilation)."""
+    jax.block_until_ready(thunk())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def trace_program(program: Program, params, x: jax.Array, *,
+                  impl: str = "auto", interpret: bool | None = None,
+                  repeats: int = 3, measure: bool = True,
+                  state: ProgramState | None = None,
+                  mask: jax.Array | None = None) -> ExecutorTrace:
+    """Execute ``program`` op by op, recording each op's resolved
+    schedule, operand shapes, modeled cost and measured wallclock.
+
+    Opt-in (the fast path is ``jitted_runner``): ops dispatch eagerly
+    so each can be individually blocked on and timed; the per-call
+    dispatch overhead is uniform and lands in the calibration's
+    ``gamma`` term.  Stateless Programs take (params, x); decode
+    Programs additionally need ``state`` (and optional ``mask``), and
+    the cache write is timed as part of its ``decode_attention`` op —
+    that *is* the op's memory traffic.  ``measure=False`` skips the
+    timing loops (schema-only traces, e.g. on CI).
+    """
+    is_decode = any(op.kernel == "decode_attention" for op in program.ops)
+    if is_decode and state is None:
+        raise ValueError("decode Programs need state=; see run_decode")
+    regions: dict[int, jax.Array] = {program.input_region: x}
+    caches = dict(state.caches) if state is not None else None
+    pos = state.lengths if state is not None else None
+    live = None
+    if is_decode:
+        live = (jnp.ones(pos.shape, bool) if mask is None
+                else jnp.asarray(mask, bool))
+    trace = ExecutorTrace(program=program.name, hw=program.hw_name,
+                          impl=impl, interpret=interpret,
+                          repeats=repeats if measure else 0)
+    for op in program.ops:
+        src = regions[op.in_region]
+        if op.kernel == "decode_attention":
+            ck0, cv0 = caches[op.k_cache_region], caches[op.v_cache_region]
+
+            def thunk(op=op, src=src, ck0=ck0, cv0=cv0):
+                return _run_decode_attention(
+                    op, src, regions[op.k_region], regions[op.v_region],
+                    ck0, cv0, pos, live, impl=impl, interpret=interpret)
+
+            out, ck, cv = thunk()
+            caches[op.k_cache_region] = ck
+            caches[op.v_cache_region] = cv
+        else:
+            def thunk(op=op, src=src):
+                return _run_op(op, src, regions, params, impl=impl,
+                               interpret=interpret)
+
+            out = thunk()
+        regions[op.out_region] = out
+        operands = _op_operands(op, regions, params, caches)
+        operands["out"] = _shape_dtype(out)
+        extras = {}
+        if op.kernel == "decode_attention":
+            extras = {"pos": [int(p) for p in pos],
+                      "live": [bool(b) for b in live]}
+        trace.records.append(TraceRecord(
+            index=op.index, name=op.name, kind=op.kernel,
+            operands=operands, schedule=_op_schedule(op),
+            flops=op.flops, traffic_bytes=op.traffic_bytes,
+            modeled_time_s=op.exec_time_s,
+            measured_time_s=_time_thunk(thunk, repeats) if measure else None,
+            repeats=repeats if measure else 0, extras=extras))
+    return trace

@@ -1,0 +1,260 @@
+"""Measured cost model + schedule autotuner: trace schema and
+round-trip, replay-vs-executor parity, calibration fits, the tuned
+cache bypassing the analytic choosers, feasibility of every tuned
+schedule, and the generation key invalidating memoized Programs."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import CNNConfig, CNNLayer as C
+from repro.core import TPU_V5E, compile_model
+from repro.core import autotune
+from repro.core.cost import (CostModel, error_table, fit_cost_model,
+                             format_error_table)
+from repro.core.ir import kernel_kind
+from repro.models import cnn, init_params
+from repro.models import transformer
+from repro.runtime import replay
+from repro.runtime.executor import ExecutorTrace, TraceRecord, trace_program
+
+K0 = jax.random.PRNGKey(0)
+
+TINY = CNNConfig(
+    name="tiny-tune", input_hw=16, input_ch=4, n_classes=8,
+    layers=(
+        C("conv", 8, 3, 1, 1),
+        C("maxpool", k=2, stride=2),           # fuses into conv 0
+        C("conv", 16, 3, 1, 1),
+        C("fc", 8, activation=None),
+    ))
+
+
+def _tiny_setup(batch=1):
+    params = init_params(cnn.param_defs(TINY), K0)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (batch, 16, 16, 4), jnp.float32)
+    program = cnn.compile_program(TINY, batch=batch)
+    return program, params, x
+
+
+# --- trace schema ------------------------------------------------------------------
+def test_trace_roundtrip_and_determinism(tmp_path):
+    program, params, x = _tiny_setup()
+    tr = trace_program(program, params, x, impl="reference", measure=False)
+    assert len(tr.records) == len(program.ops)
+    for rec in tr.records:
+        assert rec.kind and "in" in rec.operands
+        assert rec.traffic_bytes >= 0 and rec.flops >= 0
+    p = tmp_path / "t.jsonl"
+    tr.save(str(p))
+    tr2 = ExecutorTrace.load(str(p))
+    assert [r.static_dict() for r in tr.records] == \
+           [r.static_dict() for r in tr2.records]
+    # tracing twice is deterministic modulo wallclock
+    tr3 = trace_program(program, params, x, impl="reference", measure=False)
+    assert [r.static_dict() for r in tr.records] == \
+           [r.static_dict() for r in tr3.records]
+
+
+def test_trace_measures_wallclock():
+    program, params, x = _tiny_setup()
+    tr = trace_program(program, params, x, impl="reference", repeats=2)
+    for rec in tr.records:
+        assert rec.measured_time_s is not None and rec.measured_time_s > 0
+        assert rec.repeats == 2
+
+
+# --- replay parity -----------------------------------------------------------------
+def test_replay_matches_recorded_output_shapes():
+    program, params, x = _tiny_setup()
+    tr = trace_program(program, params, x, impl="reference", measure=False)
+    for rec in tr.records:
+        out = replay.replay_outputs(rec, impl="reference")
+        assert list(out.shape) == rec.operands["out"][0], rec.name
+
+
+@pytest.mark.parametrize("kind", ["conv2d", "matmul"])
+def test_replay_candidate_parity(kind):
+    """Substituting a feasible candidate changes where bytes move, never
+    the math: replayed outputs agree with the incumbent's to <= 1e-5."""
+    program, params, x = _tiny_setup()
+    tr = trace_program(program, params, x, impl="reference", measure=False)
+    recs = [r for r in tr.records if r.kind == kind]
+    assert recs, f"no {kind} in tiny program"
+    graph = cnn.to_graph(TINY, batch=1, dtype_bytes=4)
+    nodes = {n.name: n for n in graph}
+    checked = 0
+    for rec in recs:
+        base = replay.replay_outputs(rec, impl="reference")
+        for cand in autotune.enumerate_candidates(nodes[rec.name],
+                                                  TPU_V5E)[:4]:
+            try:
+                rc = autotune.entry_to_replay_candidate(
+                    nodes[rec.name], cand, TPU_V5E)
+            except ValueError:
+                continue
+            out = replay.replay_outputs(rec, candidate=rc, impl="reference")
+            np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                       atol=1e-5, rtol=1e-5)
+            checked += 1
+    assert checked >= 1
+
+
+def test_replay_flash_attention_parity():
+    cfg = get_config("smollm-360m-smoke")
+    params = init_params(transformer.param_defs(cfg), K0)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0, cfg.vocab)
+    program = transformer.compile_program(cfg, batch=1, seq=16)
+    tr = trace_program(program, params, toks, impl="reference",
+                       measure=False)
+    recs = [r for r in tr.records if r.kind == "flash_attention"]
+    assert recs
+    rec = recs[0]
+    base = replay.replay_outputs(rec, impl="reference")
+    out = replay.replay_outputs(rec, candidate={"block_kv": 8},
+                                impl="reference")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               atol=1e-5, rtol=1e-5)
+
+
+# --- calibration -------------------------------------------------------------------
+def _synthetic_records(alpha=2e-13, beta=5e-12, gamma=3e-5, n=8):
+    recs = []
+    for i in range(1, n + 1):
+        # independent columns (a linear relation between flops and
+        # traffic would make the coefficients unidentifiable)
+        flops = i * 1e8
+        traffic = ((i * 5) % n + 1) * 1e6
+        recs.append({"kind": "conv2d", "flops": flops,
+                     "traffic_bytes": traffic,
+                     "modeled_time_s": flops / 1e12,
+                     "measured_time_s": alpha * flops + beta * traffic
+                     + gamma})
+    return recs
+
+
+def test_calibration_recovers_synthetic_coefficients():
+    recs = _synthetic_records()
+    model = fit_cost_model(recs)
+    fit = model.fits["conv2d"]
+    assert fit.mode == "lsq"
+    assert fit.mean_abs_rel_err < 1e-6
+    # prediction on a held-out point
+    pred = model.predict("conv2d", 3.3e8, 2.2e6, 1.0)
+    want = 2e-13 * 3.3e8 + 5e-12 * 2.2e6 + 3e-5
+    assert abs(pred - want) / want < 1e-6
+
+
+def test_calibration_scale_mode_and_json_roundtrip():
+    # two records -> not enough for lsq -> median-ratio scale mode
+    recs = _synthetic_records(n=2)
+    model = fit_cost_model(recs)
+    assert model.fits["conv2d"].mode == "scale"
+    m2 = CostModel.from_json(model.to_json())
+    assert m2.fits == model.fits
+    # unseen kind passes the analytic estimate through
+    assert model.predict("matmul", 1e9, 1e6, 0.123) == 0.123
+
+
+def test_error_table_emits_calibrated_column():
+    recs = _synthetic_records()
+    rows = error_table(recs, fit_cost_model(recs))
+    assert rows and rows[0]["kind"] == "conv2d"
+    assert rows[0]["calibrated_abs_rel_err"] <= \
+        rows[0]["analytic_abs_rel_err"] + 1e-12
+    assert "conv2d" in format_error_table(rows)
+
+
+# --- tuner + cache -----------------------------------------------------------------
+def _tuned_cache(tmp_path, top_k=2):
+    cache = autotune.TunedCache.load(str(tmp_path / "tuned.json"))
+    rep = autotune.tune_cnn(TINY, batch=1, hw=TPU_V5E, cache=cache,
+                            impl="reference", top_k=top_k, repeats=1)
+    return cache, rep
+
+
+def test_tune_populates_cache_and_second_pass_hits(tmp_path):
+    cache, rep = _tuned_cache(tmp_path)
+    assert rep.n_measurements > 0 and cache.entries
+    assert rep.error_rows
+    gen = cache.generation()
+    assert gen not in ("empty", "none")
+    rep2 = autotune.tune_cnn(TINY, batch=1, hw=TPU_V5E, cache=cache,
+                             impl="reference", top_k=2, repeats=1)
+    assert rep2.n_measurements == 0
+    assert all(r.cached for r in rep2.results)
+    # decisions are byte-stable across the no-op retune
+    cache2 = autotune.TunedCache.load(str(tmp_path / "tuned.json"))
+    assert cache2.entries == cache.entries
+
+
+def test_tuned_cache_bypasses_analytic_choosers(tmp_path, monkeypatch):
+    """With every tunable op cache-hit, compile must not consult the
+    analytic conv chooser at all — the dispatch-spy regression."""
+    cache, _ = _tuned_cache(tmp_path)
+    fp = autotune.hw_fingerprint(TPU_V5E)
+    view = cache.view(TINY.name, fp, 1)
+    import repro.core.schedule as S
+
+    def boom(*a, **k):
+        raise AssertionError("analytic chooser called despite tuned hit")
+
+    monkeypatch.setattr(S, "select_conv_row_strips", boom)
+    sched = compile_model(cnn.to_graph(TINY, 1, 4), TPU_V5E, tuned=view)
+    convs = [ls for ls in sched.layers if ls.kind.value == "conv2d"]
+    assert convs and all("tuned" in ls.notes for ls in convs)
+
+
+def test_tuned_schedule_never_infeasible(tmp_path):
+    """Every tuned decision re-validates against hardware constraints at
+    compile time; the resulting tilings respect the VMEM budget."""
+    cache, _ = _tuned_cache(tmp_path, top_k=4)
+    fp = autotune.hw_fingerprint(TPU_V5E)
+    view = cache.view(TINY.name, fp, 1)
+    sched = compile_model(cnn.to_graph(TINY, 1, 4), TPU_V5E, tuned=view)
+    for ls in sched.layers:
+        if ls.conv_tiling is not None:
+            assert ls.conv_tiling.vmem_bytes <= TPU_V5E.vmem_budget()
+    # modeled cost never regresses vs the untuned compile
+    plain = compile_model(cnn.to_graph(TINY, 1, 4), TPU_V5E)
+    assert sched.total_traffic_bytes <= plain.total_traffic_bytes
+
+
+def test_generation_key_invalidates_compile_cache(tmp_path):
+    """The stale-Program bugfix: mutating the tuned cache must produce a
+    fresh Program on the next compile, and tuned-vs-untuned outputs
+    agree (schedule decisions never change math)."""
+    params = init_params(cnn.param_defs(TINY), K0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 16, 4),
+                          jnp.float32)
+    p0 = cnn.compile_program(TINY, batch=1)
+    y0 = cnn.forward(params, x, TINY, impl="reference")
+    cache, _ = _tuned_cache(tmp_path)
+    autotune.activate(cache)
+    try:
+        p1 = cnn.compile_program(TINY, batch=1)
+        assert p1 is not p0
+        y1 = cnn.forward(params, x, TINY, impl="reference")
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                                   atol=1e-5, rtol=1e-5)
+        # simulate a re-tune: any content change bumps the generation
+        k = next(iter(cache.entries))
+        cache.entries[k] = dict(cache.entries[k], measured_time_s=1.0)
+        p2 = cnn.compile_program(TINY, batch=1)
+        assert p2 is not p1, "re-tune served a stale Program"
+    finally:
+        autotune.deactivate()
+    assert cnn.compile_program(TINY, batch=1) is p0
+
+
+def test_op_signature_collapses_identical_blocks():
+    cfg = get_config("smollm-360m-smoke")
+    graph = transformer.to_decode_graph(cfg, slots=2, max_len=16)
+    sigs = {autotune.op_signature(n) for n in graph
+            if kernel_kind(n) in autotune.TUNABLE}
+    ops = [n for n in graph if kernel_kind(n) in autotune.TUNABLE]
+    assert len(sigs) < len(ops), "identical blocks should share signatures"
