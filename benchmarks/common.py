@@ -29,9 +29,35 @@ def emit(name: str, us_per_call: float, derived: str = ""):
                  "derived": derived})
 
 
+def _sidecar_meta() -> dict:
+    """Provenance stamp for the JSON sidecar: which machine the numbers
+    are valid on (``core/autotune.hw_fingerprint`` — model params +
+    physical backend), which tuned-cache generation produced the
+    schedules, and the exact source revision.  Without these a sidecar
+    diffed across CI runs can silently compare a CPU-interpret run
+    against a TPU run or a stale tuned cache against a fresh one."""
+    import subprocess
+
+    from repro.core.autotune import active_generation, hw_fingerprint
+    from repro.core.hw import TPU_V5E
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {
+        "hw_fingerprint": hw_fingerprint(TPU_V5E),
+        "tuned_generation": active_generation(),
+        "git_sha": sha,
+        "created": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
 def write_json(path: str) -> None:
-    """Dump every row emitted so far as a JSON array — the
-    machine-readable sidecar to the CSV stream (CI uploads it as an
-    artifact so regressions are diffable across runs)."""
+    """Dump every row emitted so far, wrapped with a provenance ``meta``
+    header — the machine-readable sidecar to the CSV stream (CI uploads
+    it as an artifact so regressions are diffable across runs, and the
+    meta says *which* runs are comparable)."""
     with open(path, "w") as f:
-        json.dump(ROWS, f, indent=2)
+        json.dump({"meta": _sidecar_meta(), "rows": ROWS}, f, indent=2)

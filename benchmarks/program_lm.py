@@ -149,6 +149,128 @@ def run_decode_bench():
          f"kv_resident_full_mb={pair.persistent_bytes / 1e6:.3f};"
          f"kv_resident_win_mb={win_pair.persistent_bytes / 1e6:.3f};"
          f"kv_shrink={pair.persistent_bytes / win_pair.persistent_bytes:.1f}x")
+    run_paged_bench(cfg, params, pair, win_pair, slots, max_len,
+                    prompt_len, prompts, toks, t_prog, warmup, iters)
+
+
+def run_paged_bench(cfg, params, pair, win_pair, slots, max_len,
+                    prompt_len, prompts, toks, t_contig, warmup, iters):
+    """Paged-KV region plan rows: concurrent sequences at a fixed HBM
+    budget (prefix sharing), shared-prefix admission cost, int8
+    resident-page bytes, and single-tick decode latency vs the
+    contiguous plan."""
+    from repro.core.regions import paged_kv_specs, pages_for_len
+
+    page_size = max(max_len // 4, 2)
+
+    # -- concurrent sequences at a fixed KV HBM budget ------------------------
+    # Budget = what `slots` contiguous slots occupy.  The contiguous and
+    # windowed plans admit a fixed sequence count regardless of content;
+    # the paged plan shares the prompts' common full-page prefix, so the
+    # same pool bytes admit every sequence whose *private* pages fit.
+    pps = max_len // page_size
+    _, plan = paged_kv_specs(
+        n_layers=cfg.n_layers, kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        slots=64, max_len=max_len, page_size=page_size,
+        n_pages=1 + slots * pps)              # same rows as `slots` slots
+    pool = executor.PagePool(plan, slots=64)
+    donor = tuple(int(t) for t in prompts[0])
+    seqs = [tuple(int(t) for t in prompts[0][:-1]) + (int(s),)
+            for s in range(64)]               # shared prefix, unique tail
+    admitted = 0
+    shared = ()
+    for s, seq in enumerate(seqs):
+        if admitted:
+            shared = pool.shared_prefix_pages(0, donor, seq)
+        if not pool.can_admit(len(seq), len(shared)):
+            break
+        pool.admit(s, len(seq), shared)
+        admitted += 1
+    win_rows = min(max_len, max(max_len // 4, 2))
+    emit(f"program_lm/decode/{cfg.name}/paged_kv/concurrency", 0.0,
+         f"page_size={page_size};pool_pages={plan.n_pages - 1};"
+         f"contig_seqs={slots};"
+         f"windowed_seqs={slots};windowed_rows_per_seq={win_rows};"
+         f"paged_seqs={admitted};"
+         f"paged_over_contig={admitted / slots:.1f}x;"
+         f"shared_pages={int((pool.refcount > 1).sum())}")
+
+    # -- shared-prefix admission cost vs a full prefill -----------------------
+    paged_pair = transformer.compile_program_pair(
+        cfg, slots=slots, max_len=max_len, paged=True, page_size=page_size)
+    pstate = executor.init_program_state(paged_pair)
+    ppool = executor.PagePool(paged_pair.paged, slots)
+    pprefill = executor.jitted_prefill_runner(paged_pair.prefill,
+                                              impl="reference")
+    padded = np.zeros((1, max_len), np.int32)
+    padded[0, :prompt_len] = prompts[0]
+    ptoks = jnp.asarray(padded)
+
+    def admit(slot, shared):
+        nonlocal pstate
+        ppool.release(slot)
+        wf = ppool.admit(slot, prompt_len, shared)
+        executor.sync_page_table(pstate, paged_pair, ppool)
+        out, pstate = pprefill(params, ptoks, pstate, slot, prompt_len, wf)
+        return out
+
+    jax.block_until_ready(admit(0, ()))       # donor + jit warmup
+    donor_pages = ppool.slot_pages(0, (prompt_len // page_size) * page_size)
+    t_full = t_shared = 0.0
+    for kind, shared in (("full", ()), ("shared", donor_pages)):
+        times = []
+        for _ in range(warmup + iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(admit(1, shared))
+            times.append(time.perf_counter() - t0)
+        times = sorted(times[warmup:])
+        t = times[len(times) // 2] * 1e6
+        if kind == "full":
+            t_full = t
+        else:
+            t_shared = t
+    emit(f"program_lm/decode/{cfg.name}/paged_kv/admission", t_shared,
+         f"full_prefill_us={t_full:.1f};shared_prefix_us={t_shared:.1f};"
+         f"shared_pages={len(donor_pages)};"
+         f"rows_not_written={len(donor_pages) * page_size}/{prompt_len}")
+
+    # -- int8 pages: resident KV bytes ----------------------------------------
+    int8_pair = transformer.compile_program_pair(
+        cfg, slots=slots, max_len=max_len, paged=True,
+        page_size=page_size, kv_quant="int8")
+    emit(f"program_lm/decode/{cfg.name}/paged_kv/int8_resident", 0.0,
+         f"paged_fp_mb={paged_pair.persistent_bytes / 1e6:.3f};"
+         f"paged_int8_mb={int8_pair.persistent_bytes / 1e6:.3f};"
+         f"bytes_cut={paged_pair.persistent_bytes / int8_pair.persistent_bytes:.1f}x")
+
+    # -- decode tick vs the contiguous plan -----------------------------------
+    # Host page decisions + table sync ride inside the timed step, as
+    # they do in the serving engine's hot loop.
+    for s in range(1, slots):
+        jax.block_until_ready(admit(s, ()))
+    pdecode = executor.jitted_decode_runner(paged_pair.decode,
+                                            impl="reference")
+    lens = [prompt_len] * slots
+
+    def paged_tick(p, t, st):
+        copies = []
+        for s in range(slots):
+            c = ppool.prepare_decode(s, lens[s])
+            if c is not None:
+                copies.append(c)
+        executor.sync_page_table(st, paged_pair, ppool)
+        executor.apply_page_copies(st, paged_pair, copies)
+        out, st = pdecode(p, t, st)
+        for s in range(slots):
+            lens[s] += 1
+        return out, st
+
+    t_paged = _time_threaded(paged_tick, params, toks, pstate,
+                             warmup=warmup, iters=iters)
+    emit(f"program_lm/decode/{cfg.name}/paged_kv/tick", t_paged,
+         f"paged_tps={slots / (t_paged * 1e-6):.1f};"
+         f"contig_tps={slots / (t_contig * 1e-6):.1f};"
+         f"paged_over_contig={t_paged / max(t_contig, 1e-9):.3f}")
 
 
 def run():

@@ -262,15 +262,17 @@ class ModelGraph:
                         f"bypass source {n.bypass_of} does not precede {n.name}")
 
     def mark_pool_fusion(self) -> None:
-        """Mark conv -> maxpool pairs fusable into the conv's epilogue.
+        """Mark conv -> pool pairs fusable into the conv's epilogue.
 
         Fusable when the pool directly follows the conv, consumes only
         it, and the raw conv output has no other reader (no residual /
         parallel path off it) — then the pool can run on-chip before
-        writeback and its HBM round trip vanishes.  This is a *graph*
-        property; whether the fusion actually executes is the
-        scheduler's call (it needs the zero-copy strip path), recorded
-        in the conv's ``LayerSchedule.notes``.
+        writeback and its HBM round trip vanishes.  Both max and avg
+        pools fuse; the pool op rides along in the meta so the epilogue
+        knows whether to take a running max or a window-sum/divide.
+        This is a *graph* property; whether the fusion actually
+        executes is the scheduler's call (it needs the zero-copy strip
+        path), recorded in the conv's ``LayerSchedule.notes``.
         """
         consumers = self._consumers()
         bypass_sources = {n.bypass_of for n in self.nodes if n.bypass_of}
@@ -278,7 +280,7 @@ class ModelGraph:
             nxt = self.nodes[i + 1]
             if (n.kind is not LayerKind.CONV2D
                     or nxt.kind is not LayerKind.POOL
-                    or nxt.meta.get("op", "max") != "max"
+                    or nxt.meta.get("op", "max") not in ("max", "avg")
                     or "window" not in nxt.meta
                     or nxt.inputs != [n.name]
                     or n.name in bypass_sources
@@ -286,7 +288,8 @@ class ModelGraph:
                 continue
             n.meta["fused_pool"] = {"window": nxt.meta["window"],
                                     "stride": nxt.meta["stride"],
-                                    "pad": nxt.meta.get("pad", 0)}
+                                    "pad": nxt.meta.get("pad", 0),
+                                    "op": nxt.meta.get("op", "max")}
             nxt.meta["fused_into"] = n.name
 
     # --- aggregates ------------------------------------------------------------

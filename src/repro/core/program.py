@@ -44,7 +44,7 @@ from dataclasses import dataclass
 
 from .dataflow import Dataflow
 from .ir import LayerKind, ModelGraph
-from .regions import RegionPlan, allocate_regions
+from .regions import PAGE_TABLE_REGION, PagedPlan, RegionPlan, allocate_regions
 from .schedule import LayerSchedule, ModelSchedule
 from .tiling import ConvTiling
 
@@ -75,6 +75,11 @@ class AttentionSpec:
     * ``block_q`` / ``block_kv`` — the compiler's T2 score-loop tiles
       (core/tiling.py::select_attention_blocks), pinned so the kernel
       wrapper re-derives nothing at run time.
+    * ``page_size`` — rows per KV page when the §5.1 plan paged the
+      persistent cache (``regions.paged_kv_specs``), else None.  On a
+      paged decode op the kv block IS the page (``block_kv ==
+      page_size``, pinned by the tiling chooser) and the history is
+      gathered through the op's page-table region.
     """
 
     heads: int
@@ -85,6 +90,7 @@ class AttentionSpec:
     rope_theta: float = 0.0
     block_q: int = 128
     block_kv: int = 128
+    page_size: int | None = None
 
 
 @dataclass(frozen=True)
@@ -111,6 +117,16 @@ class ProgramOp:
     # never baked into the stream.
     k_cache_region: int | None = None
     v_cache_region: int | None = None
+    # Paged KV (§5.1 paged plan).  When the allocator paged the cache,
+    # k_cache_region / v_cache_region point at the page *pools* and
+    # page_table_region at the shared (slots, pages_per_slot) int32
+    # table that maps logical cache rows to pool pages; k/v_scale
+    # regions hold per-page dequant scales when the plan quantized the
+    # pool to int8.  All four resolve by name through the plan's
+    # persistent table, like the caches themselves.
+    page_table_region: int | None = None
+    k_scale_region: int | None = None
+    v_scale_region: int | None = None
     # geometry
     stride: int = 1
     pad: int = 0
@@ -120,7 +136,7 @@ class ProgramOp:
     fuse_activation: str | None = None
     fuse_bypass: bool = False
     bypass_first: bool = True
-    fuse_pool: tuple[int, int, int] | None = None   # (window, stride, pad)
+    fuse_pool: tuple[int, int, int, str] | None = None  # (window,stride,pad,op)
     # resolved schedule
     strip_storage: str | None = None
     dataflow: Dataflow | None = None
@@ -172,6 +188,9 @@ class ProgramOp:
             if self.k_cache_region is not None:
                 sched += (f" cache>r{self.k_cache_region},"
                           f"r{self.v_cache_region}@slot")
+                if self.page_table_region is not None:
+                    sched += (f" pt=r{self.page_table_region}"
+                              f" pg={self.attn.page_size}")
         elif self.kernel == "decode_attention" and self.attn is not None:
             a = self.attn
             sched = (f"h={a.heads}/{a.kv_heads}x{a.head_dim} "
@@ -180,13 +199,18 @@ class ProgramOp:
                      f"{' rope' if a.rope_theta else ''}"
                      f" cache=r{self.k_cache_region},"
                      f"r{self.v_cache_region}@pos")
+            if self.page_table_region is not None:
+                sched += f" pt=r{self.page_table_region} pg={a.page_size}"
+                if self.k_scale_region is not None:
+                    sched += " int8"
         elif self.kernel == "norm":
             sched = self.norm_kind or ""
         epi = "".join(
             [" +bias" if self.fuse_bias else "",
              f" +{self.fuse_activation}" if self.fuse_activation else "",
              " +bypass" if self.fuse_bypass else "",
-             (f" +pool{self.fuse_pool[0]}s{self.fuse_pool[1]}"
+             (f" +{'avg' if self.fuse_pool[3] == 'avg' else ''}pool"
+              f"{self.fuse_pool[0]}s{self.fuse_pool[1]}"
               if self.fuse_pool else "")])
         return (f"%{self.index:02d} {self.kernel:8s} {self.name:14s} "
                 f"{io:10s} {sched}{epi}")
@@ -252,12 +276,26 @@ class ProgramPair:
     ``max_len`` once a sliding window collapses the row count to
     ``min(max_len, attn_window)``, yet the prefill stream is still
     pinned to (1, max_len) token batches — so the engine validates a
-    caller-supplied pair against these fields, not just the shapes."""
+    caller-supplied pair against these fields, not just the shapes.
+
+    ``paged`` records the §5.1 paged-plan decision
+    (``regions.PagedPlan``) when the persistent cache is a page pool +
+    page table instead of contiguous (slots, cache_len) rows; None
+    means contiguous.  The executor's host-side page allocator and the
+    engine's COW admission both read their geometry from it."""
 
     prefill: Program
     decode: Program
     slots: int | None = None
     max_len: int | None = None
+    paged: PagedPlan | None = None
+
+    @property
+    def page_table_region(self) -> int | None:
+        """Region id of the shared page table, None when contiguous."""
+        if self.paged is None:
+            return None
+        return self.decode.plan.persistent[PAGE_TABLE_REGION]
 
     @property
     def persistent(self) -> dict:
@@ -280,8 +318,8 @@ def _pool_kernel(node) -> str:
     return "avgpool" if node.meta.get("op") == "avg" else "maxpool"
 
 
-def _norm_pool(fp: dict) -> tuple[int, int, int]:
-    return (fp["window"], fp["stride"], fp.get("pad", 0))
+def _norm_pool(fp: dict) -> tuple[int, int, int, str]:
+    return (fp["window"], fp["stride"], fp.get("pad", 0), fp.get("op", "max"))
 
 
 def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
@@ -355,15 +393,26 @@ def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
             # plan's allocator-owned persistent table (shared across a
             # prefill/decode pair).
             k_cache = v_cache = None
+            page_table = k_scale = v_scale = None
             if node.meta.get("k_cache") is not None:
                 k_cache = plan.persistent[node.meta["k_cache"]]
                 v_cache = plan.persistent[node.meta["v_cache"]]
+                # Paged plan: the cache names resolve to page pools and
+                # the op additionally carries the shared table (and the
+                # per-page scale regions when the pool is int8).
+                if node.meta.get("page_table") is not None:
+                    page_table = plan.persistent[node.meta["page_table"]]
+                    if node.meta.get("k_scale") is not None:
+                        k_scale = plan.persistent[node.meta["k_scale"]]
+                        v_scale = plan.persistent[node.meta["v_scale"]]
             ops.append(ProgramOp(
                 kernel=("decode_attention" if node.meta.get("decode")
                         else "flash_attention"),
                 k_region=plan.out_region[node.inputs[1]],
                 v_region=plan.out_region[node.inputs[2]],
                 k_cache_region=k_cache, v_cache_region=v_cache,
+                page_table_region=page_table,
+                k_scale_region=k_scale, v_scale_region=v_scale,
                 attn=AttentionSpec(
                     heads=d["heads"], kv_heads=d["kv_heads"],
                     head_dim=d["head_dim"],
@@ -371,7 +420,8 @@ def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
                     window=ls.notes.get("window"),
                     rope_theta=node.meta.get("rope_theta", 0.0),
                     block_q=ls.notes.get("block_q", 128),
-                    block_kv=ls.notes.get("block_kv", 128)),
+                    block_kv=ls.notes.get("block_kv", 128),
+                    page_size=ls.notes.get("page_size")),
                 **common))
         elif (node.kind is LayerKind.ELEMENTWISE
               and node.meta.get("op") in ("mul", "add")):

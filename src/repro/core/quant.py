@@ -23,6 +23,9 @@ __all__ = [
     "validate_layerwise",
     "int8_quantize_per_channel",
     "int8_matmul",
+    "int8_quantize_pages",
+    "int8_dequantize_pages",
+    "int8_requantize_page",
 ]
 
 
@@ -123,3 +126,40 @@ def int8_matmul(x: jax.Array, w_q: jax.Array, w_scale: jax.Array
     acc = jnp.matmul(x.astype(jnp.float32),
                      w_q.astype(jnp.float32) * w_scale)
     return acc.astype(x.dtype)
+
+
+# --- int8 KV pages (paged region plan, §5.1) --------------------------------------
+def int8_quantize_pages(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-page int8 quantization of a page-shaped array.
+
+    ``x`` is (n_pages, ...) — every axis after the first belongs to one
+    page (rows, kv_heads, head_dim for a KV pool).  One float32 scale
+    per page: scale = amax(page)/127, with empty/zero pages mapped to
+    scale 1.0 so dequantization is always well-defined.  Returns
+    (q int8 of x.shape, scales (n_pages,) float32)."""
+    axes = tuple(range(1, x.ndim))
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    sh = scale.reshape((-1,) + (1,) * (x.ndim - 1))
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / sh), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def int8_dequantize_pages(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of :func:`int8_quantize_pages` — broadcast each page's
+    scale back over its rows."""
+    sh = scales.reshape((-1,) + (1,) * (q.ndim - 1))
+    return q.astype(jnp.float32) * sh
+
+
+def int8_requantize_page(q: jax.Array, old_scale: jax.Array,
+                         new_scale: jax.Array) -> jax.Array:
+    """Re-express an int8 page under a larger scale: q * old/new,
+    rounded.  Exact (a round of integers) when the scale is unchanged —
+    the common decode case, where a new row's magnitude fits the page's
+    existing scale and only that row is rewritten."""
+    ratio = jnp.asarray(old_scale / new_scale)
+    if ratio.ndim == 1 and q.ndim > 1:        # (n_pages,) over page axes
+        ratio = ratio.reshape((-1,) + (1,) * (q.ndim - 1))
+    return jnp.clip(jnp.round(q.astype(jnp.float32) * ratio),
+                    -127, 127).astype(jnp.int8)

@@ -51,12 +51,14 @@ Invariants:
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field, replace
 
 from .ir import ModelGraph
 
-__all__ = ["Region", "RegionPlan", "PersistentSpec", "allocate_regions",
-           "extend_with_persistent"]
+__all__ = ["Region", "RegionPlan", "PersistentSpec", "PagedPlan",
+           "allocate_regions", "extend_with_persistent", "paged_kv_specs",
+           "pages_for_len", "PAGE_TABLE_REGION"]
 
 N_PINGPONG = 2          # the paper's sequential double-buffer pair
 
@@ -281,3 +283,104 @@ def extend_with_persistent(plan: RegionPlan, specs: tuple,
                             dtype=spec.dtype))
     return replace(plan, regions=plan.regions + tuple(extra),
                    persistent=persistent)
+
+
+# --- paged KV plan (§5.1 third scheme: ping-pong, rolling-ring, paged) -------------
+PAGE_TABLE_REGION = "page_table"     # the pair's one per-slot page-table region
+
+
+@dataclass(frozen=True)
+class PagedPlan:
+    """The §5.1 allocator's paged-KV decision record.
+
+    Instead of one contiguous (slots, cache_len) row table per block
+    and side, the plan reserves a **fixed-size page pool** — ``n_pages``
+    pages of ``page_size`` rows each, shared by every slot — plus one
+    per-slot **page table** (slots, pages_per_slot) int32 mapping each
+    slot's virtual row range onto pool pages.  Page ids are *slot
+    agnostic*: two slots whose tables name the same page share its rows
+    (copy-on-write prefix sharing), and a short sequence holds only the
+    pages it has touched — admission stops reserving worst-case rows.
+
+    Page 0 is the **null page**: never handed out by the runtime
+    allocator, it is the write target for masked rows (dead slots, the
+    shared span of a prefill) so scatters stay dense and branch-free.
+
+    ``kv_dtype`` is the pool element type — "int8" stores quantized
+    pages with one float32 scale per page and side (dequantized in the
+    gather), any float dtype stores rows verbatim.  The virtual extent
+    rule is ``ring_kv_len(pos, cache_len)`` with ``cache_len =
+    pages_per_slot * page_size`` — the same shared rule as the rolling
+    ring, applied through the table."""
+
+    page_size: int
+    n_pages: int                     # pool pages per block+side (incl. null)
+    pages_per_slot: int
+    kv_dtype: str = "float32"
+
+    @property
+    def cache_len(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype == "int8"
+
+
+def paged_kv_specs(*, n_layers: int, kv_heads: int, head_dim: int,
+                   slots: int, max_len: int, page_size: int,
+                   n_pages: int | None = None,
+                   kv_dtype: str = "float32"
+                   ) -> tuple[tuple[PersistentSpec, ...], PagedPlan]:
+    """Mint the paged persistent table: per block+side a page pool
+    ``l{i}.k_pages`` / ``l{i}.v_pages`` of (n_pages, page_size,
+    kv_heads, head_dim) — int8 pools additionally carry per-page scale
+    vectors ``l{i}.k_scale`` / ``l{i}.v_scale`` (n_pages,) float32 —
+    plus the single shared ``page_table`` region (slots,
+    pages_per_slot) int32.
+
+    ``n_pages`` defaults to worst case (every slot fully resident plus
+    the null page); a caller fixing an HBM budget passes fewer pages
+    and the runtime allocator admits only what fits — the
+    serve-more-sequences-per-byte knob."""
+    if max_len % page_size:
+        raise ValueError(
+            f"paged KV needs max_len ({max_len}) divisible by "
+            f"page_size ({page_size}) so prefill rows tile into pages")
+    pages_per_slot = max_len // page_size
+    if n_pages is None:
+        # +1 null page, and never below the floor (one full slot + a
+        # spare COW/fork page) even for a single-slot pool.
+        n_pages = max(1 + slots * pages_per_slot, 2 + pages_per_slot)
+    if n_pages < 2 + pages_per_slot:
+        raise ValueError(
+            f"page pool of {n_pages} cannot hold even one full slot "
+            f"({pages_per_slot} pages) plus the null page")
+    from jax import numpy as jnp          # bfloat16/float8 dtype names
+    pool_shape = (n_pages, page_size, kv_heads, head_dim)
+    by = jnp.dtype(kv_dtype).itemsize
+    pool_bytes = math.prod(pool_shape) * by
+    specs: list[PersistentSpec] = []
+    for i in range(n_layers):
+        specs.append(PersistentSpec(f"l{i}.k_pages", pool_shape,
+                                    "int8" if kv_dtype == "int8" else kv_dtype,
+                                    pool_bytes))
+        specs.append(PersistentSpec(f"l{i}.v_pages", pool_shape,
+                                    "int8" if kv_dtype == "int8" else kv_dtype,
+                                    pool_bytes))
+        if kv_dtype == "int8":
+            specs.append(PersistentSpec(f"l{i}.k_scale", (n_pages,),
+                                        "float32", n_pages * 4))
+            specs.append(PersistentSpec(f"l{i}.v_scale", (n_pages,),
+                                        "float32", n_pages * 4))
+    specs.append(PersistentSpec(PAGE_TABLE_REGION, (slots, pages_per_slot),
+                                "int32", slots * pages_per_slot * 4))
+    plan = PagedPlan(page_size=page_size, n_pages=n_pages,
+                     pages_per_slot=pages_per_slot, kv_dtype=kv_dtype)
+    return tuple(specs), plan
+
+
+def pages_for_len(length: int, page_size: int) -> int:
+    """Pages a sequence of ``length`` rows occupies (host-side rule the
+    runtime page allocator and the admission path share)."""
+    return max(0, math.ceil(length / page_size))

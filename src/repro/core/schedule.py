@@ -303,21 +303,24 @@ def _schedule_attention(node: LayerNode, hw: HardwareModel,
     (seq_q == 1, persistent KV cache) gets its cache-streaming block
     from the same chooser's decode regime."""
     d = node.dims
+    page_size = node.meta.get("page_size")
     bq = bkv = tuned = None
     if entry is not None and entry.get("kind") in ("flash_attention",
                                                    "decode_attention"):
         cand = (int(entry.get("block_q", 1)), int(entry["block_kv"]))
         # Validate against the same VMEM test the chooser applies: a
-        # tuned pair outside the feasible set falls back.
+        # tuned pair outside the feasible set falls back.  A paged
+        # decode node's feasible set is the singleton (1, page_size).
         if cand in enumerate_attention_blocks(
                 d["seq_q"], d["seq_kv"], d["head_dim"], node.dtype_bytes,
-                hw, window=node.meta.get("window")):
+                hw, window=node.meta.get("window"), page_size=page_size):
             bq, bkv = cand
             tuned = True
     if bq is None:
         bq, bkv = select_attention_blocks(d["seq_q"], d["seq_kv"],
                                           d["head_dim"], node.dtype_bytes,
-                                          hw, window=node.meta.get("window"))
+                                          hw, window=node.meta.get("window"),
+                                          page_size=page_size)
     flops = node.flops()
     traffic = node.min_bytes()
     notes = {"block_q": bq, "block_kv": bkv,
@@ -328,6 +331,8 @@ def _schedule_attention(node: LayerNode, hw: HardwareModel,
         notes["decode"] = True
     if node.meta.get("window"):
         notes["window"] = node.meta["window"]
+    if page_size:
+        notes["page_size"] = page_size
     return LayerSchedule(
         name=node.name, kind=node.kind, dataflow=None, block=None,
         conv_tiling=None, fuse_bias=False, fuse_activation=None,

@@ -170,7 +170,8 @@ def enumerate_matmul_tilings(M: int, K: int, N: int, dtype_bytes: int,
 # --- attention blocks -------------------------------------------------------------
 def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
                             hw: HardwareModel, *,
-                            window: int | None = None) -> tuple[int, int]:
+                            window: int | None = None,
+                            page_size: int | None = None) -> tuple[int, int]:
     """Pick (block_q, block_kv) for flash attention — T2 applied to the
     attention score loop: the q tile, double-buffered k+v tiles, the f32
     accumulator and the (bq, bkv) score tile must fit the VMEM budget.
@@ -190,10 +191,19 @@ def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
     touches: no score-loop tile should outgrow the window, so the
     effective Skv is ``min(Skv, window)``.  For a windowed *decode*
     node the cache region itself is already window-sized (the §5.1
-    rolling plan), so both arguments agree."""
+    rolling plan), so both arguments agree.
+
+    ``page_size`` marks a **paged** decode node (the §5.1 paged plan):
+    the KV rows live in fixed-size pool pages gathered through a
+    per-slot page table, so the kv stream has no contiguity beyond one
+    page — the natural (and only) kv block IS the page.  The chooser
+    pins ``block_kv = page_size`` and the paged kernel's grid walks the
+    table one page per step."""
     budget = hw.vmem_budget()
     if window is not None:
         Skv = min(Skv, window)
+    if Sq == 1 and page_size is not None:
+        return (1, page_size)
     if Sq == 1:
         bkv = 128
         for b in (256, 512, 1024, 2048, 4096):
@@ -218,15 +228,20 @@ def select_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
 
 def enumerate_attention_blocks(Sq: int, Skv: int, D: int, dtype_bytes: int,
                                hw: HardwareModel, *,
-                               window: int | None = None
+                               window: int | None = None,
+                               page_size: int | None = None
                                ) -> list[tuple[int, int]]:
     """Every feasible (block_q, block_kv) pair under the same VMEM test
     ``select_attention_blocks`` applies — the autotuner's attention
     candidate set.  ``Sq == 1`` enumerates the decode regime: (1, bkv)
-    for every cache-streaming block that fits."""
+    for every cache-streaming block that fits.  A paged decode node has
+    no block freedom at all (the page is the kv tile), so its candidate
+    set is the singleton (1, page_size)."""
     budget = hw.vmem_budget()
     if window is not None:
         Skv = min(Skv, window)
+    if Sq == 1 and page_size is not None:
+        return [(1, page_size)]
     if Sq == 1:
         out = [(1, 128)]
         for b in (256, 512, 1024, 2048, 4096):

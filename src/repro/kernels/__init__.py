@@ -7,7 +7,8 @@ CPU in the test suite.
 from .matmul import matmul, scheduled_matmul, matmul_ref
 from .conv2d import conv2d, conv2d_ref, maxpool2d_ref, avgpool2d_ref
 from .flash_attention import flash_attention, attention_ref, flash_ref
-from .decode_attention import decode_attention, decode_attention_ref
+from .decode_attention import (decode_attention, decode_attention_ref,
+                               paged_decode_attention)
 from .mamba2 import mamba2_scan, mamba2_decode_step, mamba2_scan_ref
 from .rwkv6 import wkv6, wkv6_decode_step, wkv6_ref
 
@@ -15,7 +16,7 @@ __all__ = [
     "matmul", "scheduled_matmul", "matmul_ref",
     "conv2d", "conv2d_ref", "maxpool2d_ref", "avgpool2d_ref",
     "flash_attention", "attention_ref", "flash_ref",
-    "decode_attention", "decode_attention_ref",
+    "decode_attention", "decode_attention_ref", "paged_decode_attention",
     "mamba2_scan", "mamba2_decode_step", "mamba2_scan_ref",
     "wkv6", "wkv6_decode_step", "wkv6_ref",
 ]

@@ -202,21 +202,24 @@ def _virtual_body(*refs, n_prefetch, strip_axis, out_rows, OH, OW, stride,
         o_ref[0] = acc.astype(out_dtype)
         return
 
-    # Fused maxpool epilogue.  This strip owns pool rows
+    # Fused pool epilogue.  This strip owns pool rows
     # [s*SR, (s+1)*SR); pool row p needs conv rows [p*ps - pp,
     # p*ps - pp + pw), so local conv row l is global row
-    # s*out_rows - pp + l.  Rows outside [0, OH) are the pool's -inf
-    # padding (or bottom fill) — mask them before taking the max.
-    pw, ps, pp = pool
+    # s*out_rows - pp + l.  Rows outside [0, OH) are the pool's
+    # padding (or bottom fill) — mask them with the op's identity
+    # before reducing: -inf for max, 0 for avg (avgpool2d_ref divides
+    # by the fixed window^2, counting pad as zeros, so a zero identity
+    # reproduces it exactly).
+    pw, ps, pp, pop = pool
     SR = out_rows // ps
-    neg = jnp.float32(-jnp.inf)
+    ident = jnp.float32(0.0 if pop == "avg" else -jnp.inf)
     gr = (s * out_rows - pp
           + jax.lax.broadcasted_iota(jnp.int32, (rows_c, 1, 1), 0))
-    acc = jnp.where((gr >= 0) & (gr < OH), acc, neg)
+    acc = jnp.where((gr >= 0) & (gr < OH), acc, ident)
     wpad_r = max(0, (OWo - 1) * ps + pw - OW - pp)
     if pp or wpad_r:
         acc = jnp.pad(acc, ((0, 0), (pp, wpad_r), (0, 0)),
-                      constant_values=neg)
+                      constant_values=ident)
     pooled = None
     for py in range(pw):
         for px in range(pw):
@@ -224,7 +227,14 @@ def _virtual_body(*refs, n_prefetch, strip_axis, out_rows, OH, OW, stride,
                 acc, (py, px, 0),
                 (py + (SR - 1) * ps + 1, px + (OWo - 1) * ps + 1, kpt),
                 (ps, ps, 1))
-            pooled = tap if pooled is None else jnp.maximum(pooled, tap)
+            if pooled is None:
+                pooled = tap
+            elif pop == "avg":
+                pooled = pooled + tap
+            else:
+                pooled = jnp.maximum(pooled, tap)
+    if pop == "avg":
+        pooled = pooled / jnp.float32(pw * pw)
     o_ref[0] = pooled.astype(out_dtype)
 
 
@@ -239,8 +249,8 @@ def conv2d_virtual_pallas(xp, w, *, out_rows: int, OH: int, OW: int,
     """Zero-copy row-strip conv: xp is the whole padded maps
     (B, Hp, Wp, Cin) — no strip duplication; strips are gathered
     in-kernel.  bypass: (B, n_strips*out_rows, OW, Cout) or None (not
-    combinable with ``pool``).  pool: (window, stride, pad) maxpool
-    fused after the epilogue.  row_starts: optional (n_strips,) int32
+    combinable with ``pool``).  pool: (window, stride, pad, op) max or
+    avg pool fused after the epilogue.  row_starts: optional (n_strips,) int32
     per-strip *input* row offsets, scalar-prefetched so the gather
     address is known before the body runs — for input-side offset
     tables an affine ``s * out_rows * stride`` cannot express (e.g.
@@ -264,7 +274,7 @@ def conv2d_virtual_pallas(xp, w, *, out_rows: int, OH: int, OW: int,
     if pool is None:
         rows_c, SR, OWo = out_rows, out_rows, OW
     else:
-        pw, ps, pp = pool
+        pw, ps, pp, _ = pool
         assert not has_bypass, "fused pool is not combinable with bypass"
         assert out_rows % ps == 0, (out_rows, ps)
         rows_c = out_rows + pw - ps            # extra rows: overlapping windows

@@ -11,8 +11,10 @@ DMA engine can issue contiguous single-burst loads — survives as the
 VMEM access the overlap-duplication-vs-refetch tradeoff is a compiler
 decision (``core/tiling.py``), not a constraint.
 
-``fuse_pool=(window, stride[, pad])`` fuses a following maxpool into
-the kernel epilogue (AlexNet / ResNet stem conv→pool), eliminating the
+``fuse_pool=(window, stride[, pad[, op]])`` fuses a following max or
+avg pool into the kernel epilogue (AlexNet / ResNet stem conv→pool,
+GoogLeNet-style avg downsampling; stride-2 convs fuse the same way —
+the strip geometry already carries the conv stride), eliminating the
 pool layer's HBM round trip; on the materialized/reference paths it
 degrades gracefully to a separate reference pool with identical
 numerics.
@@ -29,7 +31,7 @@ from ...core.hw import TPU_V5E, HardwareModel
 from ...core.ir import pool_out
 from ...core.tiling import ConvTiling, select_conv_row_strips
 from .kernel import conv2d_strips_pallas, conv2d_virtual_pallas
-from .ref import conv2d_ref, maxpool2d_ref
+from .ref import avgpool2d_ref, conv2d_ref, maxpool2d_ref
 
 __all__ = ["conv2d"]
 
@@ -51,11 +53,26 @@ def _materialize_strips(xp, n_strips, out_rows, in_rows, stride):
 
 
 def _norm_pool(fuse_pool):
+    """Normalize to (window, stride, pad, op): pad defaults to 0, op to
+    "max" (matching core/ir.py's fused_pool meta)."""
     if fuse_pool is None:
         return None
-    if len(fuse_pool) == 2:
-        return (fuse_pool[0], fuse_pool[1], 0)
-    return tuple(fuse_pool)
+    fp = tuple(fuse_pool)
+    if len(fp) == 2:
+        fp = fp + (0,)
+    if len(fp) == 3:
+        fp = fp + ("max",)
+    if fp[3] not in ("max", "avg"):
+        raise ValueError(f"fuse_pool op must be max|avg, got {fp[3]!r}")
+    return fp
+
+
+def _pool_ref(out, pool):
+    """The separate-pool fallback (reference / materialized / bypass
+    paths) — identical numerics to the fused epilogue."""
+    pw, ps, pp, op = pool
+    ref = avgpool2d_ref if op == "avg" else maxpool2d_ref
+    return ref(out, window=pw, stride=ps, pad=pp)
 
 
 def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
@@ -73,9 +90,9 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
 
     strip_storage: "auto" (tiler's VMEM-residency decision) |
     "virtual" (zero-copy in-kernel gather) | "materialized" (HBM halo
-    duplication, paper-faithful).  fuse_pool: (window, stride[, pad])
-    maxpool fused into the epilogue (virtual path; other paths apply an
-    equivalent reference pool).  strip_offsets: "affine" derives strip
+    duplication, paper-faithful).  fuse_pool: (window, stride[, pad[,
+    op]]) max/avg pool fused into the epilogue (virtual path; other
+    paths apply an equivalent reference pool).  strip_offsets: "affine" derives strip
     row offsets from the program id; "prefetch" routes them through a
     scalar-prefetched offset table instead.  tiling: a pre-resolved
     ``ConvTiling`` (the schedule's exact decision, as carried by a
@@ -95,8 +112,7 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
                          activation=activation, bypass=bypass,
                          bypass_first=bypass_first, out_dtype=out_dtype)
         if pool is not None:
-            out = maxpool2d_ref(out, window=pool[0], stride=pool[1],
-                                pad=pool[2])
+            out = _pool_ref(out, pool)
         return out
 
     B, H, W, Cin = x.shape
@@ -119,8 +135,7 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
             dataflow=dataflow, ct=ct, out_rows=out_rows, kpt=kpt,
             OH=OH, OW=OW, interpret=interpret)
         if pool is not None:
-            out = maxpool2d_ref(out, window=pool[0], stride=pool[1],
-                                pad=pool[2])
+            out = _pool_ref(out, pool)
         return out
 
     if pool is not None and bypass is not None:
@@ -132,8 +147,7 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
                      impl=impl, dataflow=dataflow, hw=hw,
                      strip_storage="virtual", tiling=tiling,
                      strip_offsets=strip_offsets, interpret=interpret)
-        return maxpool2d_ref(out, window=pool[0], stride=pool[1],
-                             pad=pool[2])
+        return _pool_ref(out, pool)
 
     # --- zero-copy path ------------------------------------------------------
     top_pad = pad
@@ -141,7 +155,7 @@ def conv2d(x, w, *, stride: int = 1, pad: int = 0, bias=None,
         rows_c, SR, OHo, OWo = out_rows, out_rows, OH, OW
         n_strips = math.ceil(OH / out_rows)
     else:
-        pw, ps, pp = pool
+        pw, ps, pp, _ = pool
         out_rows = max(ps, (out_rows // ps) * ps)   # strips own whole windows
         rows_c = out_rows + pw - ps
         SR = out_rows // ps

@@ -27,7 +27,7 @@ from jax.experimental import pallas as pl
 
 from ..common import compiler_params, default_interpret, vmem_scratch
 
-__all__ = ["decode_attention_pallas"]
+__all__ = ["decode_attention_pallas", "paged_decode_attention_pallas"]
 
 NEG_INF = -1e30
 
@@ -112,4 +112,123 @@ def decode_attention_pallas(q, k, v, kv_len, *, scale: float,
         interpret=interpret,
         **kwargs,
     )(lenf, qf, kf, vf)
+    return out.reshape(B, Hq, D)
+
+
+def _paged_body(len_ref, pt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                o_ref, m_ref, l_ref, acc_ref, *, scale, page_size, Hq, Hkv):
+    """One (sequence*head, page) grid step of paged decode attention.
+
+    The kv block IS the page: the page table block (1, 1) names which
+    pool page this step reads, and the page's rows are loaded with a
+    dynamic ``pl.ds`` gather from the whole-pool ref — the page id is a
+    runtime value, so it cannot appear in a BlockSpec index map without
+    TPU-only scalar prefetch; keeping the gather in the body keeps the
+    kernel portable to interpret mode.  Quantized pools (ks/vs scale
+    refs present) are dequantized per page right after the load."""
+    h = pl.program_id(0)
+    kb = pl.program_id(1)
+    nkv = pl.num_programs(1)
+    kvh = (h % Hq) // (Hq // Hkv)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    sk0 = kb * page_size
+
+    @pl.when(sk0 < kv_len)
+    def _compute():
+        page = pt_ref[0, 0]
+        idx = (pl.ds(page, 1), slice(None), pl.ds(kvh, 1), slice(None))
+        k = pl.load(k_ref, idx)[0, :, 0, :].astype(jnp.float32)  # (pg, D)
+        v = pl.load(v_ref, idx)[0, :, 0, :].astype(jnp.float32)
+        if ks_ref is not None:
+            k = k * pl.load(ks_ref, (pl.ds(page, 1),))[0]
+            v = v * pl.load(vs_ref, (pl.ds(page, 1),))[0]
+        q = q_ref[0].astype(jnp.float32)                         # (1, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        ki = sk0 + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        s = jnp.where(ki < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+        p = jnp.exp(s - m_new[:, :1])
+        l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+            p.sum(-1, keepdims=True), l_ref.shape)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kb == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, page_table, kv_len, *,
+                                  scale: float,
+                                  k_scale=None, v_scale=None,
+                                  interpret: bool | None = None) -> jax.Array:
+    """q: (B, Hq, D); k_pages, v_pages: (n_pages, page_size, Hkv, D)
+    pools; page_table: (B, pages_per_slot) int32; kv_len: (B,) int32
+    ring extents.  k_scale / v_scale: (n_pages,) float32 per-page
+    dequant scales for int8 pools, or None for float pools.
+
+    Grid (B * Hq, pages_per_slot) — the page table is blocked (1, 1)
+    per grid step and the pools ride along whole (their index map is
+    constant) because the page id is runtime data.  block_kv ==
+    page_size by construction (core/tiling.py pins it)."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, Hq, D = q.shape
+    n_pages, page_size, Hkv, _ = k_pages.shape
+    pages_per_slot = page_table.shape[1]
+    quant = k_scale is not None
+
+    qf = q.reshape(B * Hq, 1, D)
+    lenf = kv_len.astype(jnp.int32)
+
+    whole_pool = pl.BlockSpec((n_pages, page_size, Hkv, D),
+                              lambda h, kb: (0, 0, 0, 0))
+    in_specs = [pl.BlockSpec((1,), lambda h, kb: (h // Hq,)),
+                pl.BlockSpec((1, 1), lambda h, kb: (h // Hq, kb)),
+                pl.BlockSpec((1, 1, D), lambda h, kb: (h, 0, 0)),
+                whole_pool, whole_pool]
+    args = [lenf, page_table.astype(jnp.int32), qf, k_pages, v_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((n_pages,), lambda h, kb: (0,))] * 2
+        args += [k_scale, v_scale]
+
+    def body(*refs):
+        if quant:
+            len_ref, pt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref = refs[:7]
+            rest = refs[7:]
+        else:
+            len_ref, pt_ref, q_ref, k_ref, v_ref = refs[:5]
+            ks_ref = vs_ref = None
+            rest = refs[5:]
+        _paged_body(len_ref, pt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                    *rest, scale=scale, page_size=page_size, Hq=Hq, Hkv=Hkv)
+
+    params = compiler_params(("parallel", "arbitrary"), interpret)
+    kwargs = {"compiler_params": params} if params is not None else {}
+    out = pl.pallas_call(
+        body,
+        grid=(B * Hq, pages_per_slot),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, D), lambda h, kb: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, 1, D), q.dtype),
+        scratch_shapes=[vmem_scratch((1, 128), jnp.float32),
+                        vmem_scratch((1, 128), jnp.float32),
+                        vmem_scratch((1, D), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(*args)
     return out.reshape(B, Hq, D)

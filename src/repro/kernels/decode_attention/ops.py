@@ -18,10 +18,11 @@ import jax
 import jax.numpy as jnp
 
 from ...core.hw import TPU_V5E, HardwareModel
-from .kernel import decode_attention_pallas
+from .kernel import decode_attention_pallas, paged_decode_attention_pallas
 from .ref import decode_attention_ref
 
-__all__ = ["decode_attention", "ring_kv_len", "ring_positions"]
+__all__ = ["decode_attention", "paged_decode_attention", "gather_pages",
+           "ring_kv_len", "ring_positions"]
 
 
 def ring_positions(length, cache_len: int, seq_len: int):
@@ -91,3 +92,60 @@ def decode_attention(q, k, v, *, kv_len=None, scale: float | None = None,
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
     return decode_attention_pallas(q, k, v, kv_len, scale=scale,
                                    block_kv=block_kv, interpret=interpret)
+
+
+def gather_pages(pages, table, scale=None):
+    """Materialize the contiguous (B, Hkv, S, D) cache view of a page
+    pool through a page table — THE table-indirection rule, shared by
+    the reference paged-attention path below and any caller that needs
+    the flat layout (tests, the engine's debug dumps).
+
+    pages: (n_pages, page_size, Hkv, D) pool (any dtype; int8 pools are
+    dequantized when ``scale`` — per-page (n_pages,) float32 — is
+    given); table: (B, pages_per_slot) int32.  Row ``s`` of slot ``b``
+    is pool row ``(table[b, s // page_size], s % page_size)``; the null
+    page 0 supplies whatever masked writes left there, which is fine
+    because every row it backs sits beyond the caller's ``kv_len`` or
+    below its shared-prefix redirect."""
+    gathered = pages[table]          # (B, pages_per_slot, page_size, Hkv, D)
+    if scale is not None:
+        gathered = gathered.astype(jnp.float32) * scale[table][
+            :, :, None, None, None]
+    B, P, G, Hkv, D = gathered.shape
+    return gathered.reshape(B, P * G, Hkv, D).transpose(0, 2, 1, 3)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, *, kv_len,
+                           scale: float | None = None,
+                           k_scale=None, v_scale=None,
+                           impl: str = "auto",
+                           interpret: bool | None = None) -> jax.Array:
+    """Single-token decode against a **paged** KV cache (§5.1 paged
+    region plan): q (B, Hq, D) vs pools (n_pages, page_size, Hkv, D)
+    addressed through ``page_table`` (B, pages_per_slot) int32.
+
+    The virtual row range of slot ``b`` is its table row flattened —
+    ``cache_len = pages_per_slot * page_size`` — and the same ring
+    rules apply *through the table*: callers pass ``kv_len =
+    ring_kv_len(pos, cache_len)`` and write the new token's K/V at
+    virtual row ``pos % cache_len`` (i.e. into page ``row //
+    page_size``), so rolling overwrite past ``cache_len`` works
+    unchanged.  int8 pools carry one float32 scale per page
+    (``k_scale`` / ``v_scale``), applied in the gather.
+
+    There is no block_kv knob: the kv block IS the page
+    (core/tiling.py pins block_kv == page_size for paged decode ops)."""
+    B, Hq, D = q.shape
+    scale = scale if scale is not None else D ** -0.5
+    if kv_len is None:
+        kv_len = jnp.full((B,), page_table.shape[1] * k_pages.shape[1],
+                          jnp.int32)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl == "reference":
+        k = gather_pages(k_pages, page_table, k_scale)
+        v = gather_pages(v_pages, page_table, v_scale)
+        return decode_attention_ref(q, k, v, kv_len=kv_len, scale=scale)
+    return paged_decode_attention_pallas(
+        q, k_pages, v_pages, page_table, kv_len, scale=scale,
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret)

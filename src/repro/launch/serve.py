@@ -17,6 +17,14 @@ prompt length; the engine's ``n_prefill_recomputes`` counter stays 0):
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --smoke --program --requests 4 --max-new 8
+
+``--paged`` swaps in the paged §5.1 region plan (KV page pools + page
+table, copy-on-write prefix sharing, optional ``--kv-quant int8``
+pages); ``--shared-prefix N`` makes every prompt open with the same N
+tokens so admission actually shares pages:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --smoke --program --paged --shared-prefix 32 --requests 4
 """
 from __future__ import annotations
 
@@ -79,7 +87,25 @@ def main(argv=None) -> None:
                     help="override attn_window (sliding-window "
                          "attention); the program path then sizes the "
                          "persistent KV regions to min(max_len, window)")
+    ap.add_argument("--paged", action="store_true",
+                    help="compile the paged §5.1 region plan: KV page "
+                         "pools + per-slot page table, host-side page "
+                         "allocator with copy-on-write prefix sharing "
+                         "(requires --program)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="rows per KV page (must divide --max-len)")
+    ap.add_argument("--kv-quant", choices=["int8"], default=None,
+                    help="quantize paged KV pages to int8 with "
+                         "per-page scales (~2x resident cache bytes)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical tokens to every "
+                         "prompt (exercises paged copy-on-write prefix "
+                         "sharing; CI asserts shared pages > 0)")
     args = ap.parse_args(argv)
+    if args.paged and not args.program:
+        print("error: --paged requires --program (the paged plan only "
+              "exists on the stateful Program path)", file=sys.stderr)
+        raise SystemExit(2)
 
     if args.arch in CNN_REGISTRY:
         _serve_cnn(args)
@@ -100,7 +126,9 @@ def main(argv=None) -> None:
     # The engine compiles the (prefill, decode) Program pair itself and
     # warns (once, at construction) when a family has no lowering.
     eng = ServingEngine(cfg, params, slots=args.slots,
-                        max_len=args.max_len, use_program=args.program)
+                        max_len=args.max_len, use_program=args.program,
+                        paged=args.paged, page_size=args.page_size,
+                        kv_quant=args.kv_quant)
     if args.program and not eng.on_program_path:
         # The user *asked* for the program path; a silent legacy-loop
         # fallback would misreport what was measured.  The engine's
@@ -114,9 +142,13 @@ def main(argv=None) -> None:
         print(eng.program.listing().splitlines()[0])
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
+    prefix = rng.integers(0, cfg.vocab,
+                          size=args.shared_prefix).astype(np.int32)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab,
                               size=rng.integers(1, 8)).astype(np.int32)
+        if args.shared_prefix:
+            prompt = np.concatenate([prefix, prompt])
         eng.submit(Request(uid=i, prompt=prompt,
                            max_new_tokens=args.max_new))
     done = eng.run_until_drained()
@@ -128,6 +160,11 @@ def main(argv=None) -> None:
         print(f"prefills={eng.n_prefills} "
               f"prefill_recomputes={eng.n_prefill_recomputes} "
               f"decode_ticks={eng.n_decode_ticks}")
+    if args.paged:
+        print(f"shared_pages={eng.n_shared_pages} "
+              f"cow_forks={eng.n_cow_forks} "
+              f"pool_used={eng._pool.used_pages} "
+              f"pool_free={eng._pool.free_pages}")
     for r in sorted(done, key=lambda r: r.uid)[:4]:
         print(f"  req {r.uid}: {list(r.prompt)} -> {r.out_tokens}")
 

@@ -32,8 +32,9 @@ from ..core.hw import TPU_V5E, HardwareModel
 from ..core.ir import (ModelGraph, attention_node, decode_attention_node,
                        elementwise_node, embed_node, matmul_node, norm_node)
 from ..core.program import Program, ProgramPair, lower_to_program
-from ..core.regions import (PersistentSpec, allocate_regions,
-                            extend_with_persistent)
+from ..core.regions import (PAGE_TABLE_REGION, PersistentSpec,
+                            allocate_regions, extend_with_persistent,
+                            paged_kv_specs)
 from ..core.schedule import compile_model
 from ..kernels.decode_attention import (decode_attention, ring_kv_len,
                                         ring_positions)
@@ -451,9 +452,24 @@ def _build_lm_graph(cfg: ArchConfig, name: str, M: int, by: int,
     return g
 
 
+def _paged_cache_meta(i: int, page_size: int, kv_quant: str | None) -> dict:
+    """Attention-node meta for the paged region plan: the cache names
+    resolve to the §5.1 page *pools*, the shared table and (for int8
+    pools) the per-page scale regions ride along, and ``page_size``
+    reaches the schedule so the decode kv block is pinned to the page."""
+    meta = {"k_cache": f"l{i}.k_pages", "v_cache": f"l{i}.v_pages",
+            "page_table": PAGE_TABLE_REGION, "page_size": page_size}
+    if kv_quant == "int8":
+        meta["k_scale"] = f"l{i}.k_scale"
+        meta["v_scale"] = f"l{i}.v_scale"
+    return meta
+
+
 def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
              dtype_bytes: int | None = None,
-             write_cache: bool = False) -> ModelGraph:
+             write_cache: bool = False,
+             page_size: int | None = None,
+             kv_quant: str | None = None) -> ModelGraph:
     """Lower a dense-transformer config to the compiler IR (§5.1
     steps 1-2), mirroring ``forward``'s op-for-op structure:
 
@@ -471,15 +487,21 @@ def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
     serving pair's first half): each attention node additionally names
     the persistent ``l{i}.k_cache`` / ``l{i}.v_cache`` regions it
     writes the computed (post-RoPE) K and raw V into at the admitted
-    slot — a runtime operand carried by the executor's ProgramState."""
+    slot — a runtime operand carried by the executor's ProgramState.
+    ``page_size`` switches those names to the paged plan's page pools
+    (plus the shared page-table region, and per-page scale regions when
+    ``kv_quant="int8"``) — see ``regions.paged_kv_specs``."""
     _require_dense(cfg)
     by = (dtype_bytes if dtype_bytes is not None
           else jnp.dtype(cfg.jdtype).itemsize)
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
 
     def add_attention(g, i, qkv):
-        cache_meta = ({"k_cache": f"l{i}.k_cache",
-                       "v_cache": f"l{i}.v_cache"} if write_cache else {})
+        cache_meta = {}
+        if write_cache:
+            cache_meta = ({"k_cache": f"l{i}.k_cache",
+                           "v_cache": f"l{i}.v_cache"} if page_size is None
+                          else _paged_cache_meta(i, page_size, kv_quant))
         g.add(attention_node(
             f"l{i}.attn", seq_q=seq, seq_kv=seq, heads=H, kv_heads=KV,
             head_dim=hd, batch=batch, causal=True, dtype_bytes=by,
@@ -526,7 +548,9 @@ def _compile_program(cfg: ArchConfig, batch: int, seq: int,
 
 
 def to_decode_graph(cfg: ArchConfig, slots: int = 8, max_len: int = 256,
-                    dtype_bytes: int | None = None) -> ModelGraph:
+                    dtype_bytes: int | None = None,
+                    page_size: int | None = None,
+                    kv_quant: str | None = None) -> ModelGraph:
     """Lower the per-token decode step to the compiler IR: the same
     block structure as ``to_graph`` (one shared emitter) but with one
     token per slot (M = slots) and the attention replaced by
@@ -546,11 +570,16 @@ def to_decode_graph(cfg: ArchConfig, slots: int = 8, max_len: int = 256,
     cache_len = kv_cache_len(cfg, max_len)
 
     def add_attention(g, i, qkv):
+        if page_size is None:
+            cache_meta = {"k_cache": f"l{i}.k_cache",
+                          "v_cache": f"l{i}.v_cache"}
+        else:
+            cache_meta = _paged_cache_meta(i, page_size, kv_quant)
         g.add(decode_attention_node(
             f"l{i}.attn", cache_len=cache_len, heads=H, kv_heads=KV,
             head_dim=hd, slots=slots, dtype_bytes=by, inputs=qkv,
-            k_cache=f"l{i}.k_cache", v_cache=f"l{i}.v_cache",
-            window=cfg.attn_window, rope_theta=cfg.rope_theta))
+            window=cfg.attn_window, rope_theta=cfg.rope_theta,
+            **cache_meta))
 
     return _build_lm_graph(cfg, cfg.name + ".decode", slots, by,
                            add_attention)
@@ -575,16 +604,22 @@ def _kv_cache_specs(cfg: ArchConfig, slots: int,
 
 def compile_program_pair(cfg: ArchConfig, slots: int = 8,
                          max_len: int = 256,
-                         hw: HardwareModel = TPU_V5E) -> ProgramPair:
+                         hw: HardwareModel = TPU_V5E, *,
+                         paged: bool = False, page_size: int = 16,
+                         page_pool: int | None = None,
+                         kv_quant: str | None = None) -> ProgramPair:
     from ..core import autotune
     return _compile_program_pair(cfg, slots, max_len, hw,
-                                 autotune.active_generation())
+                                 autotune.active_generation(),
+                                 paged, page_size, page_pool, kv_quant)
 
 
 @functools.lru_cache(maxsize=32)
 def _compile_program_pair(cfg: ArchConfig, slots: int, max_len: int,
-                          hw: HardwareModel,
-                          generation: str) -> ProgramPair:
+                          hw: HardwareModel, generation: str,
+                          paged: bool = False, page_size: int = 16,
+                          page_pool: int | None = None,
+                          kv_quant: str | None = None) -> ProgramPair:
     """Compile the stateful serving pair: a batch-1 prefill Program
     (full causal forward + cache writes at the admitted slot) and a
     decode Program (one token per slot against the cache), sharing one
@@ -599,12 +634,29 @@ def _compile_program_pair(cfg: ArchConfig, slots: int, max_len: int,
     prefill executor converts the full-``max_len`` K/V into the rolling
     (ring) layout at write time and decode overwrites at ``pos %
     cache_len`` — the full-cache and windowed plans differ *only* in
-    region shape, never in instruction structure."""
+    region shape, never in instruction structure.
+
+    ``paged=True`` selects the third region-plan scheme: the allocator
+    mints page pools + a page table (``regions.paged_kv_specs``)
+    instead of contiguous rows — ``page_pool`` caps the pool (the HBM
+    budget knob, default worst-case) and ``kv_quant="int8"`` stores
+    quantized pages with per-page scales.  Paged is mutually exclusive
+    with a sliding window (the window is already a shrunk contiguous
+    plan; paging it would page a ring, which buys nothing)."""
+    if paged and cfg.attn_window:
+        raise NotImplementedError(
+            f"paged KV and attn_window are mutually exclusive "
+            f"({cfg.name} has window={cfg.attn_window}); the window "
+            f"plan already bounds resident rows")
     pre_tuned, cost_model = _tuned_context(cfg.name, 1, hw, generation)
     dec_tuned, _ = _tuned_context(cfg.name, slots, hw, generation)
-    pre_graph = to_graph(cfg, batch=1, seq=max_len, write_cache=True)
+    pg = page_size if paged else None
+    pre_graph = to_graph(cfg, batch=1, seq=max_len, write_cache=True,
+                         page_size=pg, kv_quant=kv_quant if paged else None)
     pre_graph.name = cfg.name + ".prefill"
-    dec_graph = to_decode_graph(cfg, slots=slots, max_len=max_len)
+    dec_graph = to_decode_graph(cfg, slots=slots, max_len=max_len,
+                                page_size=pg,
+                                kv_quant=kv_quant if paged else None)
     pre_sched = compile_model(pre_graph, hw, tuned=pre_tuned,
                               cost_model=cost_model)
     dec_sched = compile_model(dec_graph, hw, tuned=dec_tuned,
@@ -615,13 +667,22 @@ def _compile_program_pair(cfg: ArchConfig, slots: int, max_len: int,
     # across the pair (regions.py invariant), so prefill-written cache
     # buffers are read by decode ops under the same ids.
     base = max(len(pre_plan.regions), len(dec_plan.regions))
-    specs = _kv_cache_specs(cfg, slots, max_len)
+    paged_plan = None
+    if paged:
+        specs, paged_plan = paged_kv_specs(
+            n_layers=cfg.n_layers, kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            slots=slots, max_len=max_len, page_size=page_size,
+            n_pages=page_pool,
+            kv_dtype=("int8" if kv_quant == "int8"
+                      else jnp.dtype(cfg.kv_jdtype).name))
+    else:
+        specs = _kv_cache_specs(cfg, slots, max_len)
     pre_plan = extend_with_persistent(pre_plan, specs, base)
     dec_plan = extend_with_persistent(dec_plan, specs, base)
     return ProgramPair(
         prefill=lower_to_program(pre_graph, pre_sched, pre_plan),
         decode=lower_to_program(dec_graph, dec_sched, dec_plan),
-        slots=slots, max_len=max_len)
+        slots=slots, max_len=max_len, paged=paged_plan)
 
 
 def program_forward(params, tokens, cfg: ArchConfig, *,

@@ -50,17 +50,22 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from ..core.program import Program, ProgramOp, ProgramPair
+from ..core.regions import PAGE_TABLE_REGION, PagedPlan, pages_for_len
 from ..kernels.conv2d import avgpool2d_ref, conv2d, maxpool2d_ref
-from ..kernels.decode_attention import (decode_attention, ring_kv_len,
+from ..kernels.decode_attention import (decode_attention,
+                                        paged_decode_attention, ring_kv_len,
                                         ring_positions)
 from ..kernels.flash_attention import flash_attention
 from ..kernels.matmul import matmul
 
 __all__ = ["run", "jitted_runner", "ProgramState", "init_program_state",
            "run_prefill", "run_decode", "jitted_prefill_runner",
-           "jitted_decode_runner", "TraceRecord", "ExecutorTrace",
-           "trace_program"]
+           "jitted_decode_runner", "PagePool", "paged_pool_regions",
+           "sync_page_table", "apply_page_copies", "TraceRecord",
+           "ExecutorTrace", "trace_program"]
 
 
 def _param(params, key: str | None):
@@ -241,7 +246,10 @@ def init_program_state(pair: ProgramPair | Program) -> ProgramState:
             f"(e.g. transformer.compile_program_pair)")
     caches = {r.rid: jnp.zeros(r.shape, jnp.dtype(r.dtype))
               for r in persistent}
-    slots = persistent[0].shape[0]
+    # Paged plans key slot count off the page table (pools are
+    # slot-agnostic); contiguous plans off any cache region's axis 0.
+    pt = next((r for r in persistent if r.name == PAGE_TABLE_REGION), None)
+    slots = (pt if pt is not None else persistent[0]).shape[0]
     return ProgramState(caches, jnp.zeros((slots,), jnp.int32))
 
 
@@ -270,9 +278,48 @@ def _write_prefill_cache(caches: dict, op: ProgramOp, k, v, slot,
             buf, row[None], (slot, 0, 0, 0))
 
 
+def _write_prefill_cache_paged(caches: dict, op: ProgramOp, k, v, slot,
+                               length, write_from) -> None:
+    """Paged flavor of the prefill cache write: scatter the prompt's
+    K/V into the slot's table-mapped pool pages, one whole page per
+    scatter row.
+
+    ``write_from`` is the shared-prefix redirect (a page multiple): the
+    pages covering rows ``< write_from`` are COW-mapped from a donor
+    slot and must not be touched, so their scatter destination is the
+    null page 0 — the write stays dense and branch-free.  Unallocated
+    tail entries are already 0 in the table and land there too.  Rows
+    at ``>= length`` (prompt right-padding) are zeroed before the write
+    so an int8 tail page's scale is set by real rows only."""
+    a = op.attn
+    pg = a.page_size
+    pt = caches[op.page_table_region]
+    pt_row = jax.lax.dynamic_slice_in_dim(pt, slot, 1, axis=0)[0]
+    quant = op.k_scale_region is not None
+    scales = ((op.k_scale_region, op.v_scale_region) if quant
+              else (None, None))
+    for rid, srid, val in ((op.k_cache_region, scales[0], k),
+                          (op.v_cache_region, scales[1], v)):
+        buf = caches[rid]
+        row = val[0].transpose(1, 0, 2)                       # (S, KV, hd)
+        S = row.shape[0]
+        row = jnp.where(jnp.arange(S)[:, None, None] < length, row, 0)
+        pages = row.reshape(S // pg, pg, row.shape[1], row.shape[2])
+        dest = jnp.where(jnp.arange(S // pg) * pg
+                         >= jnp.asarray(write_from, jnp.int32),
+                         pt_row, 0)
+        if quant:
+            from ..core.quant import int8_quantize_pages
+            q, sc = int8_quantize_pages(pages)
+            caches[rid] = buf.at[dest].set(q)
+            caches[srid] = caches[srid].at[dest].set(sc)
+        else:
+            caches[rid] = buf.at[dest].set(pages.astype(buf.dtype))
+
+
 def run_prefill(program: Program, params, tokens: jax.Array,
-                state: ProgramState, slot, length, *, impl: str = "auto",
-                interpret: bool | None = None):
+                state: ProgramState, slot, length, write_from=0, *,
+                impl: str = "auto", interpret: bool | None = None):
     """Execute the prefill Program for one admitted request.
 
     tokens: (1, max_len) int32, the prompt right-padded (rows past
@@ -290,7 +337,11 @@ def run_prefill(program: Program, params, tokens: jax.Array,
         if op.kernel == "flash_attention" and op.k_cache_region is not None:
             out, k, v = _run_attention(op, regions, impl=impl,
                                        interpret=interpret, return_kv=True)
-            _write_prefill_cache(caches, op, k, v, slot, length)
+            if op.page_table_region is not None:
+                _write_prefill_cache_paged(caches, op, k, v, slot, length,
+                                           write_from)
+            else:
+                _write_prefill_cache(caches, op, k, v, slot, length)
             regions[op.out_region] = out
             continue
         regions[op.out_region] = _run_op(op, src, regions, params,
@@ -345,6 +396,77 @@ def _run_decode_attention(op: ProgramOp, src: jax.Array, k_src: jax.Array,
     return out.reshape(B, a.heads * a.head_dim), ck, cv
 
 
+def _run_decode_attention_paged(op: ProgramOp, src: jax.Array,
+                                k_src: jax.Array, v_src: jax.Array,
+                                ck, cv, ks, vs, pt, pos, live, *,
+                                impl: str, interpret: bool | None):
+    """Paged flavor of the decode step: the new K/V row scatters into
+    the pool page named by the slot's table entry for virtual row ``pos
+    % cache_len`` — the same rolling-ring rule as the contiguous path,
+    applied through the table — and attention gathers every valid page
+    via ``paged_decode_attention``.
+
+    The engine's host-side ``PagePool`` guarantees the write page is
+    allocated and private (COW-forked if shared) *before* this runs, so
+    the scatter never needs a branch; dead slots redirect to the null
+    page 0, which keeps the write dense (their garbage row lands where
+    nothing valid ever reads — see ``regions.PagedPlan``).
+
+    int8 pools rewrite the whole target page: the page scale grows to
+    admit the new row when needed (``max(old, |row|/127)``) and the
+    page is requantized under it — exact when the scale is unchanged,
+    the common case.  Returns (out, ck, cv, ks, vs)."""
+    from ..models.common import Rotary, apply_rope
+    a = op.attn
+    B = src.shape[0]
+    pg = a.page_size
+    pages_per_slot = pt.shape[1]
+    cache_len = pages_per_slot * pg
+    q = src.reshape(B, a.heads, a.head_dim)
+    k_new = k_src.reshape(B, a.kv_heads, a.head_dim)
+    v_new = v_src.reshape(B, a.kv_heads, a.head_dim)
+    if a.rope_theta:
+        cos, sin = Rotary(a.head_dim, a.rope_theta).freqs(pos)
+        q = apply_rope(q, cos[:, None], sin[:, None])
+        k_new = apply_rope(k_new, cos[:, None], sin[:, None])
+    row = pos % cache_len                           # rolling overwrite
+    offs = row % pg
+    page = jnp.take_along_axis(pt, (row // pg)[:, None], axis=1)[:, 0]
+    page = jnp.where(live, page, 0)                 # dead slots -> null page
+
+    if ks is None:
+        ck = ck.at[page, offs].set(k_new.astype(ck.dtype))
+        cv = cv.at[page, offs].set(v_new.astype(cv.dtype))
+    else:
+        from ..core.quant import int8_requantize_page
+
+        def write_row(pool, scales, new_row):
+            old_page = pool[page]                   # (B, pg, KV, hd)
+            old_scale = scales[page]
+            amax = jnp.max(jnp.abs(new_row.astype(jnp.float32)),
+                           axis=(1, 2))
+            new_scale = jnp.maximum(old_scale, amax / 127.0)
+            new_scale = jnp.where(new_scale > 0, new_scale, 1.0)
+            qp = int8_requantize_page(old_page, old_scale[:, None, None,
+                                                          None],
+                                      new_scale[:, None, None, None])
+            qrow = jnp.clip(jnp.round(new_row.astype(jnp.float32)
+                                      / new_scale[:, None, None]),
+                            -127, 127).astype(jnp.int8)
+            qp = jax.vmap(lambda p, r, o:
+                          jax.lax.dynamic_update_slice_in_dim(
+                              p, r[None], o, axis=0))(qp, qrow, offs)
+            return pool.at[page].set(qp), scales.at[page].set(new_scale)
+
+        ck, ks = write_row(ck, ks, k_new)
+        cv, vs = write_row(cv, vs, v_new)
+
+    out = paged_decode_attention(
+        q, ck, cv, pt, kv_len=ring_kv_len(pos, cache_len),
+        k_scale=ks, v_scale=vs, impl=impl, interpret=interpret)
+    return out.reshape(B, a.heads * a.head_dim), ck, cv, ks, vs
+
+
 def run_decode(program: Program, params, tokens: jax.Array,
                state: ProgramState, mask: jax.Array | None = None, *,
                impl: str = "auto", interpret: bool | None = None):
@@ -376,10 +498,23 @@ def run_decode(program: Program, params, tokens: jax.Array,
     for op in program.ops:
         src = regions[op.in_region]
         if op.kernel == "decode_attention":
-            out, ck, cv = _run_decode_attention(
-                op, src, regions[op.k_region], regions[op.v_region],
-                caches[op.k_cache_region], caches[op.v_cache_region],
-                pos, live, impl=impl, interpret=interpret)
+            if op.page_table_region is not None:
+                quant = op.k_scale_region is not None
+                out, ck, cv, ks, vs = _run_decode_attention_paged(
+                    op, src, regions[op.k_region], regions[op.v_region],
+                    caches[op.k_cache_region], caches[op.v_cache_region],
+                    caches[op.k_scale_region] if quant else None,
+                    caches[op.v_scale_region] if quant else None,
+                    caches[op.page_table_region], pos, live,
+                    impl=impl, interpret=interpret)
+                if quant:
+                    caches[op.k_scale_region] = ks
+                    caches[op.v_scale_region] = vs
+            else:
+                out, ck, cv = _run_decode_attention(
+                    op, src, regions[op.k_region], regions[op.v_region],
+                    caches[op.k_cache_region], caches[op.v_cache_region],
+                    pos, live, impl=impl, interpret=interpret)
             caches[op.k_cache_region] = ck
             caches[op.v_cache_region] = cv
             regions[op.out_region] = out
@@ -424,13 +559,16 @@ def _cached_runner(key, make):
 
 def jitted_prefill_runner(program: Program, impl: str = "auto",
                           interpret: bool | None = None):
-    """Compiled prefill: (params, tokens, state, slot, length) ->
-    (logits, state).  The state argument is donated so the cache
-    buffers update in place."""
+    """Compiled prefill: (params, tokens, state, slot, length[,
+    write_from]) -> (logits, state).  The state argument is donated so
+    the cache buffers update in place; ``write_from`` (paged plans
+    only) is the shared-prefix row the cache writes start at."""
     def make():
-        def _run(params, tokens, state, slot, length, _program=program):
+        def _run(params, tokens, state, slot, length, write_from=0,
+                 _program=program):
             return run_prefill(_program, params, tokens, state, slot,
-                               length, impl=impl, interpret=interpret)
+                               length, write_from, impl=impl,
+                               interpret=interpret)
         return jax.jit(_run, donate_argnums=(2,))
     return _cached_runner((id(program), impl, interpret, "prefill"), make)
 
@@ -447,6 +585,183 @@ def jitted_decode_runner(program: Program, impl: str = "auto",
                               impl=impl, interpret=interpret)
         return jax.jit(_run, donate_argnums=(2,))
     return _cached_runner((id(program), impl, interpret, "decode"), make)
+
+
+# --- paged KV runtime (host-side page allocator, §5.1 paged plan) ------------------
+class PagePool:
+    """Host-side allocator for a pair's §5.1 paged-KV plan.
+
+    The compiler minted the *capacity* (``regions.paged_kv_specs``:
+    pool shape, table shape, null page 0); this object owns the
+    *assignment* — a free list, per-page refcounts, and a host mirror
+    of the device page table.  All decisions (admission, on-demand
+    decode pages, COW forks, retirement) happen here between jitted
+    calls; the device only ever sees the decided table
+    (``sync_page_table``) and whole-page copies (``apply_page_copies``),
+    so the jitted prefill/decode runners stay branch-free.
+
+    Refcounts are table-granular, shared by every block's pools: slot
+    tables are identical across blocks (the same virtual rows), so one
+    count per page id covers all of them.
+
+    Invariants:
+
+    * page 0 is never allocated — it is the dense-scatter target for
+      masked writes (dead slots, shared-prefix prefill rows);
+    * a page a slot is about to *write* (``prepare_decode``) always has
+      refcount 1 — shared pages are forked first (copy-on-write);
+    * a freed page returns to the free list only at refcount 0, so a
+      donor's retirement never invalidates a sharer's prefix.
+    """
+
+    def __init__(self, plan: PagedPlan, slots: int):
+        self.plan = plan
+        self.slots = slots
+        self.free: list[int] = list(range(plan.n_pages - 1, 0, -1))
+        self.refcount = np.zeros(plan.n_pages, np.int32)
+        self.table = np.zeros((slots, plan.pages_per_slot), np.int32)
+        # True whenever the host table has edits the device copy hasn't
+        # seen; ``sync_page_table`` clears it.  Steady-state decode
+        # (write row inside an already-owned page) leaves the table
+        # untouched, so the per-tick sync becomes a no-op.
+        self.dirty = True
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def used_pages(self) -> int:
+        return int((self.refcount > 0).sum())
+
+    def _alloc(self) -> int:
+        if not self.free:
+            raise RuntimeError(
+                f"page pool exhausted ({self.plan.n_pages} pages, "
+                f"page_size={self.plan.page_size}) — retire a slot or "
+                f"compile with a larger page_pool")
+        p = self.free.pop()
+        self.refcount[p] = 1
+        return p
+
+    def _unref(self, p: int) -> None:
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0:
+            self.free.append(p)
+
+    def can_admit(self, length: int, shared_pages: int = 0) -> bool:
+        need = pages_for_len(length, self.plan.page_size) - shared_pages
+        return need <= len(self.free)
+
+    def admit(self, slot: int, length: int,
+              shared: tuple[int, ...] = ()) -> int:
+        """Map ``shared`` donor pages (full-page common prefix, in
+        order) into ``slot``'s table, allocate fresh pages for the
+        rest of the ``length``-row prompt, and return ``write_from`` —
+        the first row the prefill must actually write (= the shared
+        row count)."""
+        pg = self.plan.page_size
+        need = pages_for_len(length, pg)
+        shared = tuple(shared)[:need]
+        row = np.zeros(self.plan.pages_per_slot, np.int32)
+        for i, p in enumerate(shared):
+            self.refcount[p] += 1
+            row[i] = p
+        for i in range(len(shared), need):
+            row[i] = self._alloc()
+        self.table[slot] = row
+        self.dirty = True
+        return len(shared) * pg
+
+    def release(self, slot: int) -> None:
+        """Retire a slot: unref every mapped page (freed at refcount 0)
+        and null the table row so re-admission starts clean."""
+        for p in self.table[slot]:
+            if p:
+                self._unref(int(p))
+        self.table[slot] = 0
+        self.dirty = True
+
+    def slot_pages(self, slot: int, length: int) -> tuple[int, ...]:
+        """The slot's first ``pages_for_len(length)`` page ids — what a
+        donor exposes for prefix sharing."""
+        n = pages_for_len(length, self.plan.page_size)
+        return tuple(int(p) for p in self.table[slot, :n])
+
+    def shared_prefix_pages(self, slot: int, donor_prompt: tuple,
+                            prompt: tuple) -> tuple[int, ...]:
+        """Donor pages coverable by the common *full-page* prompt
+        prefix of ``donor_prompt`` and ``prompt`` (partial pages can't
+        be shared — the donor's rows past the common prefix live in
+        the same page)."""
+        pg = self.plan.page_size
+        common = 0
+        for a, b in zip(donor_prompt, prompt):
+            if a != b:
+                break
+            common += 1
+        return self.slot_pages(slot, (common // pg) * pg)
+
+    def prepare_decode(self, slot: int, pos: int):
+        """Make the page receiving the write at ``pos % cache_len``
+        writable: allocate it if the table entry is still null, fork it
+        (new page, caller copies rows) if shared.  Returns the (src,
+        dst) copy a COW fork requires, else None."""
+        pg = self.plan.page_size
+        idx = (pos % self.plan.cache_len) // pg
+        p = int(self.table[slot, idx])
+        if p == 0:
+            self.table[slot, idx] = self._alloc()
+            self.dirty = True
+            return None
+        if self.refcount[p] > 1:
+            fresh = self._alloc()
+            self._unref(p)
+            self.table[slot, idx] = fresh
+            self.dirty = True
+            return (p, fresh)
+        return None
+
+
+def paged_pool_regions(pair: ProgramPair) -> list[tuple]:
+    """(k_pages, v_pages, k_scale, v_scale) region-id tuples of every
+    paged decode op — the buffers a COW fork must copy (scale rids are
+    None for float pools)."""
+    out = []
+    for op in pair.decode.ops:
+        if (op.kernel == "decode_attention"
+                and op.page_table_region is not None):
+            out.append((op.k_cache_region, op.v_cache_region,
+                        op.k_scale_region, op.v_scale_region))
+    return out
+
+
+def sync_page_table(state: ProgramState, pair: ProgramPair,
+                    pool: PagePool) -> None:
+    """Push the host mirror of the page table to the device state (the
+    jitted runners read the device copy; all mutation is host-side).
+    No-op when the table is unchanged since the last sync — the
+    steady-state decode tick transfers nothing."""
+    if not pool.dirty:
+        return
+    state.caches[pair.page_table_region] = jnp.asarray(pool.table)
+    pool.dirty = False
+
+
+def apply_page_copies(state: ProgramState, pair: ProgramPair,
+                      copies) -> None:
+    """Apply COW forks: device-copy pool page ``src -> dst`` (rows and,
+    for int8 pools, the per-page scale) across every block's K and V
+    pools.  Runs between jitted calls; each copy is one small
+    dynamic-slice update per buffer."""
+    if not copies:
+        return
+    rids = [r for quad in paged_pool_regions(pair) for r in quad
+            if r is not None]
+    for src, dst in copies:
+        for rid in rids:
+            buf = state.caches[rid]
+            state.caches[rid] = buf.at[dst].set(buf[src])
 
 
 # --- trace recorder (measured-cost loop, stage 7) ----------------------------------
@@ -503,7 +818,8 @@ def _op_schedule(op: ProgramOp) -> dict:
         d["attn"] = {"heads": a.heads, "kv_heads": a.kv_heads,
                      "head_dim": a.head_dim, "causal": a.causal,
                      "window": a.window, "rope_theta": a.rope_theta,
-                     "block_q": a.block_q, "block_kv": a.block_kv}
+                     "block_q": a.block_q, "block_kv": a.block_kv,
+                     "page_size": a.page_size}
     return d
 
 
@@ -628,13 +944,30 @@ def trace_program(program: Program, params, x: jax.Array, *,
         src = regions[op.in_region]
         if op.kernel == "decode_attention":
             ck0, cv0 = caches[op.k_cache_region], caches[op.v_cache_region]
+            if op.page_table_region is not None:
+                quant = op.k_scale_region is not None
+                ks0 = caches[op.k_scale_region] if quant else None
+                vs0 = caches[op.v_scale_region] if quant else None
+                pt0 = caches[op.page_table_region]
 
-            def thunk(op=op, src=src, ck0=ck0, cv0=cv0):
-                return _run_decode_attention(
-                    op, src, regions[op.k_region], regions[op.v_region],
-                    ck0, cv0, pos, live, impl=impl, interpret=interpret)
+                def thunk(op=op, src=src, ck0=ck0, cv0=cv0, ks0=ks0,
+                          vs0=vs0, pt0=pt0):
+                    return _run_decode_attention_paged(
+                        op, src, regions[op.k_region], regions[op.v_region],
+                        ck0, cv0, ks0, vs0, pt0, pos, live,
+                        impl=impl, interpret=interpret)
 
-            out, ck, cv = thunk()
+                out, ck, cv, ks, vs = thunk()
+                if quant:
+                    caches[op.k_scale_region] = ks
+                    caches[op.v_scale_region] = vs
+            else:
+                def thunk(op=op, src=src, ck0=ck0, cv0=cv0):
+                    return _run_decode_attention(
+                        op, src, regions[op.k_region], regions[op.v_region],
+                        ck0, cv0, pos, live, impl=impl, interpret=interpret)
+
+                out, ck, cv = thunk()
             caches[op.k_cache_region] = ck
             caches[op.v_cache_region] = cv
         else:

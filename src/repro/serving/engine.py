@@ -30,7 +30,13 @@ is ever prefilled twice (``n_prefill_recomputes`` stays 0 by
 construction).  Windowed-attention configs serve on the same path with
 persistent KV regions sized to the window (``min(max_len,
 attn_window)`` rows per slot, rolling eviction-by-overwrite — the
-§5.1 plan shrinks resident state by max_len/window).  Families without
+§5.1 plan shrinks resident state by max_len/window).  ``paged=True``
+compiles the third region scheme — the paged plan: fixed-size page
+pools plus a per-slot page table, with admission, copy-on-write prefix
+sharing, and on-demand page allocation decided host-side by a
+``runtime/executor.py::PagePool`` between jitted calls
+(``n_shared_pages`` / ``n_cow_forks`` count the wins; ``kv_quant=
+"int8"`` additionally halves resident page bytes).  Families without
 a lowering fall back to the legacy ``decode_step`` loop with a single
 warning at engine construction naming the specific blocker
 (``fallback_reason``).
@@ -63,7 +69,9 @@ class ServingEngine:
     def __init__(self, cfg, params, *, slots: int = 8,
                  max_len: int = 256, eos_id: int | None = None,
                  impl: str = "auto", greedy: bool = True, program=None,
-                 use_program: bool = False):
+                 use_program: bool = False, paged: bool = False,
+                 page_size: int = 16, page_pool: int | None = None,
+                 kv_quant: str | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -85,6 +93,15 @@ class ServingEngine:
         self.n_prefills = 0
         self.n_prefill_recomputes = 0
         self.n_decode_ticks = 0
+        # Paged-KV counters: donor pages mapped at admission (prompt
+        # rows *not* prefilled thanks to prefix sharing) and pages
+        # forked by copy-on-write when a sharer's ring write reached a
+        # shared page.
+        self.n_shared_pages = 0
+        self.n_cow_forks = 0
+        self._pool = None                 # runtime/executor.py::PagePool
+        self._slot_prompts: dict[int, tuple] = {}   # donor registry
+        self._slot_len: dict[int, int] = {}         # host length mirror
         lm = isinstance(cfg, ArchConfig)
         if (program is not None or use_program) and lm:
             # Stateful LM program path: (prefill, decode) Program pair
@@ -107,9 +124,21 @@ class ServingEngine:
                 # recorded geometry and fall back to the region shape
                 # for externally assembled pairs that left it unset.
                 from ..models.transformer import kv_cache_len
-                checks = [((program.decode.plan
-                            .persistent_regions()[0].shape[:2]),
-                           (slots, kv_cache_len(cfg, max_len)))]
+                if program.paged is not None:
+                    # Paged plans: pools are slot-agnostic, so geometry
+                    # lives in the page table (slots rows) and the
+                    # plan's virtual extent (pages_per_slot * page_size
+                    # == max_len).
+                    pt = next(s for s in program.decode.plan
+                              .persistent_regions()
+                              if s.name == "page_table")
+                    checks = [(pt.shape,
+                               (slots, program.paged.pages_per_slot)),
+                              ((program.paged.cache_len,), (max_len,))]
+                else:
+                    checks = [((program.decode.plan
+                                .persistent_regions()[0].shape[:2]),
+                               (slots, kv_cache_len(cfg, max_len)))]
                 if program.max_len is not None:
                     checks.append(((program.slots, program.max_len),
                                    (slots, max_len)))
@@ -122,7 +151,11 @@ class ServingEngine:
             if pair is None:
                 try:
                     pair = compile_program_pair(cfg, slots=slots,
-                                                max_len=max_len)
+                                                max_len=max_len,
+                                                paged=paged,
+                                                page_size=page_size,
+                                                page_pool=page_pool,
+                                                kv_quant=kv_quant)
                 except NotImplementedError as e:
                     # Once per engine construction, never per tick.
                     # The lowering gate names the *specific* blocker
@@ -143,6 +176,12 @@ class ServingEngine:
                     pair.prefill, impl=impl)
                 self._decode = executor.jitted_decode_runner(
                     pair.decode, impl=impl)
+                if pair.paged is not None:
+                    # Host-side page allocator: admission, on-demand
+                    # decode pages, and COW forks are decided here
+                    # between jitted calls; the device sees only the
+                    # synced table and whole-page copies.
+                    self._pool = executor.PagePool(pair.paged, slots)
                 self._lm_program = True
                 return
         if (program is not None and not lm) or isinstance(cfg, CNNConfig):
@@ -282,6 +321,13 @@ class ServingEngine:
             req.done = True
             finished.append(req)
             self.live.pop(slot, None)
+            if self._pool is not None:
+                # Retire the slot's pages: unref (a donor's shared
+                # prefix stays resident while any sharer holds a
+                # refcount) and drop it from the donor registry.
+                self._pool.release(slot)
+                self._slot_prompts.pop(slot, None)
+                self._slot_len.pop(slot, None)
 
     def _lm_admit(self, finished: list) -> None:
         """Prefill queued prompts into free slots — once per request,
@@ -307,11 +353,19 @@ class ServingEngine:
             if len(req.prompt) == 0:
                 raise ValueError(f"request {req.uid}: empty prompt")
             win = np.asarray(req.prompt, np.int32)[-self.max_len:]
+            write_from = 0
+            if self._pool is not None:
+                write_from = self._paged_admit(slot, win)
+                if write_from is None:
+                    # Pool exhausted: the request waits (at the head of
+                    # the queue) until a retirement frees pages.
+                    self.queue.insert(0, req)
+                    break
             padded = np.zeros((1, self.max_len), np.int32)
             padded[0, :len(win)] = win
             logits, self.state = self._prefill(
                 self.params, jnp.asarray(padded), self.state, slot,
-                len(win))
+                len(win), write_from)
             # Real accounting, not a constant: a second prefill of the
             # same request (any future re-admission/recompute path)
             # shows up here — CI asserts the count stays at zero.
@@ -323,6 +377,39 @@ class ServingEngine:
             nxt = self._next_token(
                 req, np.asarray(logits[0, len(win) - 1]))
             self._retire_if_done(slot, req, nxt, finished)
+
+    def _paged_admit(self, slot: int, win: np.ndarray) -> int | None:
+        """Map an admitted prompt onto pool pages.  Finds the live
+        donor with the longest *full-page* common prompt prefix,
+        refcount-shares those donor pages into the slot's table row,
+        and allocates fresh pages for the private remainder.  Returns
+        ``write_from`` — the first prompt row the prefill Program
+        actually writes (shared rows are scatter-redirected to the null
+        page) — or None when the pool cannot hold the private pages.
+
+        Donors whose ring write wrapped past ``max_len`` are skipped:
+        the rolling overwrite has recycled their early pages, so the
+        prompt is no longer resident there (sharers that mapped those
+        pages *before* the wrap stay safe — the wrap write saw
+        refcount > 1 and forked)."""
+        from ..runtime import executor
+        pool = self._pool
+        prompt = tuple(int(t) for t in win)
+        shared: tuple[int, ...] = ()
+        for s, donor in self._slot_prompts.items():
+            if self._slot_len.get(s, 0) > pool.plan.cache_len:
+                continue
+            cand = pool.shared_prefix_pages(s, donor, prompt)
+            if len(cand) > len(shared):
+                shared = cand
+        if not pool.can_admit(len(prompt), len(shared)):
+            return None
+        write_from = pool.admit(slot, len(prompt), shared)
+        self.n_shared_pages += len(shared)
+        self._slot_prompts[slot] = prompt
+        self._slot_len[slot] = len(prompt)
+        executor.sync_page_table(self.state, self.program, pool)
+        return write_from
 
     def _lm_program_step(self) -> list[Request]:
         """One tick on the stateful LM program path: prefill-admit
@@ -344,10 +431,29 @@ class ServingEngine:
         # no length advance, no cache-row write (slot-cache hygiene for
         # the rolling-window plans, whose prefill does not rewrite the
         # whole row region on re-admission).
+        if self._pool is not None:
+            # Make each live slot's write page real and private before
+            # the jitted tick: allocate on-demand past the prompt,
+            # COW-fork shared pages (device page copy), then push the
+            # decided table.
+            from ..runtime import executor
+            copies = []
+            for slot in self.live:
+                c = self._pool.prepare_decode(slot, self._slot_len[slot])
+                if c is not None:
+                    copies.append(c)
+            executor.sync_page_table(self.state, self.program, self._pool)
+            if copies:
+                executor.apply_page_copies(self.state, self.program,
+                                           copies)
+                self.n_cow_forks += len(copies)
         logits, self.state = self._decode(self.params, jnp.asarray(toks),
                                           self.state,
                                           jnp.asarray(occupied))
         self.n_decode_ticks += 1
+        if self._pool is not None:
+            for slot in self.live:
+                self._slot_len[slot] += 1
         logits = np.asarray(logits)
         for slot, req in list(self.live.items()):
             nxt = self._next_token(req, logits[slot])

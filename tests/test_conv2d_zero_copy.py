@@ -222,7 +222,7 @@ def test_schedule_records_fusion_and_storage():
     s = compile_model(g, TPU_V5E)
     conv0 = s.layer("conv_00")
     assert conv0.notes.get("fused_pool") == {"window": 3, "stride": 2,
-                                             "pad": 0}
+                                             "pad": 0, "op": "max"}
     assert conv0.notes.get("strip_storage") == "virtual"
     pool1 = s.layer("maxpool_01")
     assert pool1.traffic_bytes == 0.0           # runs in conv_00's epilogue

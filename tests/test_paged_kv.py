@@ -1,0 +1,430 @@
+"""Paged KV regions (§5.1 third region scheme): the paged plan's
+specs/geometry, the host-side PagePool (admission, refcounts,
+copy-on-write forks, exhaustion), paged prefill+decode parity vs the
+contiguous plan (including past-page-boundary, ring wrap, and
+post-COW-fork ticks), int8 cache pages within the per-page quantization
+tolerance, the paged Pallas kernel in interpret mode, and the serving
+engine's prefix-sharing admission path.  Also the standalone
+``core/quant.py`` round-trip coverage (fixed-point oracle + per-page
+int8 helpers)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.core import quant
+from repro.core.regions import paged_kv_specs, pages_for_len
+from repro.models import init_params, transformer
+from repro.runtime import executor
+
+K0 = jax.random.PRNGKey(0)
+
+
+def _cfg(name="smollm-360m", **over):
+    cfg = REGISTRY[name].smoke()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _setup_contiguous(cfg, slots, max_len):
+    params = init_params(transformer.param_defs(cfg), K0)
+    pair = transformer.compile_program_pair(cfg, slots=slots,
+                                            max_len=max_len)
+    return params, pair, executor.init_program_state(pair)
+
+
+def _setup_paged(cfg, slots, max_len, page_size, kv_quant=None,
+                 page_pool=None):
+    params = init_params(transformer.param_defs(cfg), K0)
+    pair = transformer.compile_program_pair(
+        cfg, slots=slots, max_len=max_len, paged=True,
+        page_size=page_size, page_pool=page_pool, kv_quant=kv_quant)
+    state = executor.init_program_state(pair)
+    pool = executor.PagePool(pair.paged, slots)
+    return params, pair, state, pool
+
+
+def _prefill(pair, params, state, slot, prompt, max_len, write_from=0):
+    padded = np.zeros((1, max_len), np.int32)
+    padded[0, :len(prompt)] = prompt
+    return executor.run_prefill(pair.prefill, params, jnp.asarray(padded),
+                                state, slot, len(prompt), write_from,
+                                impl="reference")
+
+
+def _paged_tick(pair, params, state, pool, toks, lens, occupied=None):
+    """One decode tick on the paged path: host page decisions, table
+    sync, COW copies, then the jit-free decode.  Returns the fork count
+    of this tick; the caller advances ``lens``."""
+    copies = []
+    for s in range(len(lens)):
+        if occupied is None or occupied[s]:
+            c = pool.prepare_decode(s, lens[s])
+            if c is not None:
+                copies.append(c)
+    executor.sync_page_table(state, pair, pool)
+    executor.apply_page_copies(state, pair, copies)
+    mask = None if occupied is None else jnp.asarray(occupied)
+    logits, state = executor.run_decode(pair.decode, params,
+                                        jnp.asarray(toks), state, mask,
+                                        impl="reference")
+    return logits, state, len(copies)
+
+
+# --- core/quant.py round trips (satellite) -----------------------------------------
+def test_fixed_point_round_trip_within_half_lsb():
+    rng = np.random.default_rng(0)
+    for fmt in (quant.Q8_8, quant.Q5_11):
+        hi = float(1 << fmt.int_bits) - 2.0 / fmt.scale   # in-range values
+        x = jnp.asarray(rng.uniform(-hi, hi, size=(64,)), jnp.float32)
+        back = quant.dequantize(quant.quantize(x, fmt), fmt)
+        assert float(jnp.abs(back - x).max()) <= 0.5 / fmt.scale + 1e-7
+
+
+def test_fixed_point_saturates():
+    q = quant.quantize(jnp.asarray([1e6, -1e6]), quant.Q8_8)
+    assert int(q[0]) == quant.Q8_8.qmax and int(q[1]) == quant.Q8_8.qmin
+
+
+def test_int8_per_channel_round_trip():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    q, scale = quant.int8_quantize_per_channel(w, axis=0)
+    back = q.astype(jnp.float32) * scale
+    # symmetric quant: error bounded by half a step = scale/2 per channel
+    assert bool(jnp.all(jnp.abs(back - w) <= scale / 2 + 1e-7))
+
+
+def test_int8_page_quant_round_trip_and_zero_page():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((4, 8, 2, 16)), jnp.float32)
+    x = x.at[2].set(0.0)                      # an untouched (null) page
+    q, scales = quant.int8_quantize_pages(x)
+    assert q.dtype == jnp.int8 and scales.shape == (4,)
+    assert float(scales[2]) == 1.0            # zero page -> unit scale
+    back = quant.int8_dequantize_pages(q, scales)
+    err = jnp.abs(back - x).max(axis=(1, 2, 3))
+    assert bool(jnp.all(err <= scales / 2 + 1e-7))
+
+
+def test_int8_requantize_page_exact_when_scale_unchanged():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 8, 2, 4)), jnp.float32)
+    q, scales = quant.int8_quantize_pages(x)
+    same = quant.int8_requantize_page(q, scales, scales)
+    np.testing.assert_array_equal(np.asarray(same), np.asarray(q))
+    # growing the scale 2x halves the codes (within rounding)
+    grown = quant.int8_requantize_page(q, scales, scales * 2)
+    back = quant.int8_dequantize_pages(grown, scales * 2)
+    orig = quant.int8_dequantize_pages(q, scales)
+    assert bool(jnp.all(jnp.abs(back - orig).max(axis=(1, 2, 3))
+                        <= scales + 1e-7))
+
+
+# --- paged plan specs --------------------------------------------------------------
+def test_paged_kv_specs_geometry():
+    specs, plan = paged_kv_specs(n_layers=2, kv_heads=3, head_dim=8,
+                                 slots=4, max_len=32, page_size=8)
+    assert plan.pages_per_slot == 4 and plan.cache_len == 32
+    assert plan.n_pages == 1 + 4 * 4          # null page + full capacity
+    names = [s.name for s in specs]
+    assert "page_table" in names
+    assert "l0.k_pages" in names and "l1.v_pages" in names
+    table = next(s for s in specs if s.name == "page_table")
+    assert table.shape == (4, 4) and table.dtype == "int32"
+    pool = next(s for s in specs if s.name == "l0.k_pages")
+    assert pool.shape == (plan.n_pages, 8, 3, 8)
+    assert not plan.quantized
+
+
+def test_paged_kv_specs_int8_mints_scales():
+    specs, plan = paged_kv_specs(n_layers=1, kv_heads=2, head_dim=4,
+                                 slots=2, max_len=16, page_size=4,
+                                 kv_dtype="int8")
+    assert plan.quantized
+    names = [s.name for s in specs]
+    assert "l0.k_scale" in names and "l0.v_scale" in names
+    sc = next(s for s in specs if s.name == "l0.k_scale")
+    assert sc.shape == (plan.n_pages,) and sc.dtype == "float32"
+
+
+def test_paged_kv_specs_validation():
+    with pytest.raises(ValueError):
+        paged_kv_specs(n_layers=1, kv_heads=1, head_dim=4, slots=2,
+                       max_len=30, page_size=8)      # not a multiple
+    with pytest.raises(ValueError):
+        paged_kv_specs(n_layers=1, kv_heads=1, head_dim=4, slots=2,
+                       max_len=16, page_size=8, n_pages=2)  # too small
+    assert pages_for_len(0, 8) == 0
+    assert pages_for_len(9, 8) == 2
+
+
+# --- PagePool ----------------------------------------------------------------------
+def _pool(slots=2, max_len=16, page_size=4, n_pages=None):
+    _, plan = paged_kv_specs(n_layers=1, kv_heads=1, head_dim=4,
+                             slots=slots, max_len=max_len,
+                             page_size=page_size, n_pages=n_pages)
+    return executor.PagePool(plan, slots)
+
+
+def test_page_pool_admit_release_accounting():
+    pool = _pool()
+    wf = pool.admit(0, 9)                    # 3 pages (page_size 4)
+    assert wf == 0 and pool.used_pages == 3
+    assert all(p > 0 for p in pool.slot_pages(0, 9))
+    pool.release(0)
+    assert pool.used_pages == 0 and list(pool.table[0]) == [0, 0, 0, 0]
+
+
+def test_page_pool_exhaustion_raises():
+    pool = _pool(slots=2, max_len=8, page_size=4, n_pages=4)  # 3 usable
+    pool.admit(0, 8)                          # takes 2, leaves 1 free
+    assert pool.can_admit(4) and not pool.can_admit(8)
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        pool.admit(1, 8)
+
+
+def test_page_pool_shared_prefix_full_pages_only():
+    pool = _pool(slots=3, max_len=16, page_size=4)
+    donor = tuple(range(10))
+    pool.admit(0, len(donor))
+    # 9 common tokens -> 2 full pages (8 rows); the partial third page
+    # cannot be shared.
+    shared = pool.shared_prefix_pages(0, donor, tuple(range(9)) + (99,))
+    assert shared == pool.slot_pages(0, 8) and len(shared) == 2
+    wf = pool.admit(1, 10, shared)
+    assert wf == 8
+    for p in shared:
+        assert pool.refcount[p] == 2
+    # donor retires; shared pages stay resident for the sharer
+    pool.release(0)
+    for p in shared:
+        assert pool.refcount[p] == 1
+    # a released slot's table row is nulled — it exposes no real pages
+    # (the engine also drops it from the donor registry)
+    assert all(p == 0 for p in pool.shared_prefix_pages(0, donor, donor))
+
+
+def test_page_pool_prepare_decode_allocates_and_forks():
+    pool = _pool(slots=2, max_len=16, page_size=4)
+    pool.admit(0, 8)
+    shared = pool.slot_pages(0, 8)
+    pool.admit(1, 8, shared)
+    # rows 8..11 live in a null table entry -> on-demand allocation
+    assert pool.prepare_decode(0, 8) is None
+    assert pool.table[0, 2] > 0
+    # slot 1 ring-wraps onto a shared page -> COW fork with a copy
+    copy = pool.prepare_decode(1, 16)
+    assert copy is not None and copy[0] == shared[0]
+    assert pool.table[1, 0] == copy[1] and pool.refcount[shared[0]] == 1
+
+
+# --- paged decode parity vs the contiguous plan ------------------------------------
+def test_paged_prefill_and_decode_match_contiguous():
+    """Prefill + 14 reference decode ticks: paged logits == contiguous
+    logits (<= 1e-5) across a page boundary (page_size 4, prompt 5) and
+    past max_len (ring wrap through the table)."""
+    cfg = _cfg(n_layers=2)
+    slots, max_len, P = 2, 16, 5
+    params, pair_c, state_c = _setup_contiguous(cfg, slots, max_len)
+    _, pair_p, state_p, pool = _setup_paged(cfg, slots, max_len, 4)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(slots, P)).astype(np.int32)
+
+    lens = []
+    for slot in range(slots):
+        lc, state_c = _prefill(pair_c, params, state_c, slot,
+                               prompts[slot], max_len)
+        pool.admit(slot, P)
+        executor.sync_page_table(state_p, pair_p, pool)
+        lp, state_p = _prefill(pair_p, params, state_p, slot,
+                               prompts[slot], max_len)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lc),
+                                   rtol=0, atol=1e-5)
+        lens.append(P)
+
+    toks = prompts[:, -1]
+    for _ in range(max_len):                  # runs past max_len: wrap
+        lc, state_c = executor.run_decode(pair_c.decode, params,
+                                          jnp.asarray(toks), state_c,
+                                          impl="reference")
+        lp, state_p, _ = _paged_tick(pair_p, params, state_p, pool,
+                                     toks, lens)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lc),
+                                   rtol=0, atol=1e-5)
+        lens = [n + 1 for n in lens]
+        toks = np.argmax(np.asarray(lc), axis=-1).astype(np.int32)
+    assert lens[0] > max_len                  # wrapped through the table
+
+
+def test_paged_cow_fork_keeps_donor_and_sharer_exact():
+    """Shared-prefix admission then decode past the wrap: the sharer's
+    ring write lands on a shared page, prepare_decode forks it, and
+    both slots keep matching the contiguous plan (<= 1e-5)."""
+    cfg = _cfg(n_layers=2)
+    slots, max_len, pg = 2, 16, 4
+    params, pair_c, state_c = _setup_contiguous(cfg, slots, max_len)
+    _, pair_p, state_p, pool = _setup_paged(cfg, slots, max_len, pg)
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+    prompts = [np.concatenate([base, [7]]).astype(np.int32),
+               np.concatenate([base, [11]]).astype(np.int32)]
+
+    shared = ()
+    lens = []
+    for slot in range(slots):
+        _, state_c = _prefill(pair_c, params, state_c, slot,
+                              prompts[slot], max_len)
+        if slot:
+            shared = pool.shared_prefix_pages(0, tuple(prompts[0]),
+                                              tuple(prompts[1]))
+            assert len(shared) == 2           # 9 common rows, pg 4
+        wf = pool.admit(slot, len(prompts[slot]), shared)
+        executor.sync_page_table(state_p, pair_p, pool)
+        lp, state_p = _prefill(pair_p, params, state_p, slot,
+                               prompts[slot], max_len, wf)
+        lens.append(len(prompts[slot]))
+    assert pool.refcount[shared[0]] == 2      # actually shared
+
+    toks = np.asarray([p[-1] for p in prompts], np.int32)
+    forks = 0
+    for _ in range(12):                       # past the wrap: COW fires
+        lc, state_c = executor.run_decode(pair_c.decode, params,
+                                          jnp.asarray(toks), state_c,
+                                          impl="reference")
+        lp, state_p, f = _paged_tick(pair_p, params, state_p, pool,
+                                     toks, lens)
+        forks += f
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lc),
+                                   rtol=0, atol=1e-5)
+        lens = [n + 1 for n in lens]
+        toks = np.argmax(np.asarray(lc), axis=-1).astype(np.int32)
+    assert forks > 0
+
+
+def test_paged_int8_within_quantization_tolerance():
+    """int8 pages vs the fp paged plan: per-page symmetric quantization
+    bounds each K/V entry's error by scale/2 (~0.4% of the page's
+    amax); the decode logits track the fp path within a loose absolute
+    band and agree on the argmax token at nearly every tick."""
+    cfg = _cfg(n_layers=2)
+    slots, max_len, P = 1, 16, 6
+    params, pair_f, state_f, pool_f = _setup_paged(cfg, slots, max_len, 4)
+    _, pair_q, state_q, pool_q = _setup_paged(cfg, slots, max_len, 4,
+                                              kv_quant="int8")
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, size=P).astype(np.int32)
+
+    for pool, pair, st in ((pool_f, pair_f, state_f),
+                           (pool_q, pair_q, state_q)):
+        pool.admit(0, P)
+        executor.sync_page_table(st, pair, pool)
+    lf, state_f = _prefill(pair_f, params, state_f, 0, prompt, max_len)
+    lq, state_q = _prefill(pair_q, params, state_q, 0, prompt, max_len)
+    scale = float(np.abs(np.asarray(lf)).max())
+    assert float(np.abs(np.asarray(lq) - np.asarray(lf)).max()) < 0.1 * scale
+
+    toks, lens = prompt[-1:], [P]
+    agree = 0
+    for _ in range(8):
+        lf, state_f, _ = _paged_tick(pair_f, params, state_f, pool_f,
+                                     toks, lens)
+        lq, state_q, _ = _paged_tick(pair_q, params, state_q, pool_q,
+                                     toks, lens)
+        scale = float(np.abs(np.asarray(lf)).max())
+        assert (float(np.abs(np.asarray(lq) - np.asarray(lf)).max())
+                < 0.1 * scale)
+        agree += int(np.argmax(np.asarray(lf)) == np.argmax(np.asarray(lq)))
+        lens = [n + 1 for n in lens]
+        toks = np.argmax(np.asarray(lf), axis=-1).astype(np.int32)
+    assert agree >= 6                          # argmax robust to quant
+
+
+@pytest.mark.pallas
+def test_paged_attention_kernel_interpret_matches_reference():
+    from repro.kernels.decode_attention import (gather_pages,
+                                                paged_decode_attention)
+    rng = np.random.default_rng(3)
+    B, Hq, Hkv, D, pg, pps, n_pages = 2, 4, 2, 16, 4, 4, 9
+    q = jnp.asarray(rng.standard_normal((B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, pg, Hkv, D)),
+                     jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, pg, Hkv, D)),
+                     jnp.float32)
+    table = jnp.asarray(rng.permutation(np.arange(1, 9)).reshape(B, pps),
+                        jnp.int32)
+    kv_len = jnp.asarray([13, 7], jnp.int32)
+    ref = paged_decode_attention(q, kp, vp, table, kv_len=kv_len,
+                                 scale=D ** -0.5, impl="reference")
+    pal = paged_decode_attention(q, kp, vp, table, kv_len=kv_len,
+                                 scale=D ** -0.5, impl="pallas",
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=0, atol=1e-5)
+    # int8 pools: pallas dequant matches the reference gather dequant
+    from repro.core.quant import int8_quantize_pages
+    kq, ks = int8_quantize_pages(kp)
+    vq, vs = int8_quantize_pages(vp)
+    refq = paged_decode_attention(q, kq, vq, table, kv_len=kv_len,
+                                  scale=D ** -0.5, k_scale=ks, v_scale=vs,
+                                  impl="reference")
+    palq = paged_decode_attention(q, kq, vq, table, kv_len=kv_len,
+                                  scale=D ** -0.5, k_scale=ks, v_scale=vs,
+                                  impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(palq), np.asarray(refq),
+                               rtol=0, atol=1e-5)
+    # gather_pages flattens to the contiguous cache layout (B,Hkv,S,D)
+    assert gather_pages(kp, table).shape == (B, Hkv, pps * pg, D)
+
+
+# --- serving engine: paged admission + prefix sharing ------------------------------
+def test_engine_paged_tokens_match_contiguous():
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg(n_layers=2)
+    params = init_params(transformer.param_defs(cfg), K0)
+
+    def run(**kw):
+        eng = ServingEngine(cfg, params, slots=2, max_len=32,
+                            use_program=True, **kw)
+        assert eng.on_program_path, eng.fallback_reason
+        rng = np.random.default_rng(0)
+        prefix = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+        for i in range(4):
+            tail = rng.integers(0, cfg.vocab,
+                                size=1 + i % 3).astype(np.int32)
+            eng.submit(Request(uid=i,
+                               prompt=np.concatenate([prefix, tail]),
+                               max_new_tokens=6))
+        done = eng.run_until_drained()
+        return {r.uid: r.out_tokens for r in done}, eng
+
+    base, _ = run()
+    got, eng = run(paged=True, page_size=8)
+    assert got == base
+    assert eng.n_prefill_recomputes == 0
+    assert eng.n_shared_pages > 0             # admission actually shared
+    assert eng._pool.used_pages == 0          # retirement drained the pool
+
+
+def test_engine_paged_requeues_on_pool_exhaustion():
+    from repro.serving import Request, ServingEngine
+    cfg = _cfg(n_layers=1)
+    params = init_params(transformer.param_defs(cfg), K0)
+    # pool of 5 usable pages, 4 slots x (16/8)=2 pages each: only two
+    # distinct prompts fit at once; the rest must wait, not crash.
+    eng = ServingEngine(cfg, params, slots=4, max_len=16,
+                        use_program=True, paged=True, page_size=8,
+                        page_pool=6)
+    assert eng.on_program_path, eng.fallback_reason
+    rng = np.random.default_rng(1)
+    for i in range(4):
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, cfg.vocab, size=12)
+                           .astype(np.int32),
+                           max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert sorted(r.uid for r in done) == [0, 1, 2, 3]
+    assert all(len(r.out_tokens) == 4 for r in done)
+    assert eng._pool.used_pages == 0

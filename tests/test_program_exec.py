@@ -55,7 +55,7 @@ def test_program_pallas_interpret_residual_and_fused_pool():
     cfg = TINY
     program = cnn.compile_program(cfg, batch=2)
     op0 = program.op("conv_00")
-    assert op0.fuse_pool == (2, 2, 0)            # schedule flag -> executed op
+    assert op0.fuse_pool == (2, 2, 0, "max")     # schedule flag -> executed op
     assert op0.strip_storage == "virtual"
     assert op0.conv_tiling is not None
     sink = program.op("conv_03")
@@ -82,7 +82,7 @@ def test_schedule_flags_drive_program_ops():
     prog_tpu = cnn.compile_program(cfg, batch=1, hw=TPU_V5E)
     names = [op.name for op in prog_tpu.ops]
     assert "maxpool_01" not in names
-    assert prog_tpu.op("conv_00").fuse_pool == (3, 2, 0)
+    assert prog_tpu.op("conv_00").fuse_pool == (3, 2, 0, "max")
     assert prog_tpu.op("conv_00").strip_storage == "virtual"
     # Snowflake paper-faithful schedule: materialized strips, no fused
     # pool -> the pool is its own instruction.
