@@ -273,6 +273,80 @@ def run_paged_bench(cfg, params, pair, win_pair, slots, max_len,
          f"paged_over_contig={t_paged / max(t_contig, 1e-9):.3f}")
 
 
+def run_serving_bench():
+    """Offered-load serving sweep: tokens/s and p50/p99 per-tick wall
+    latency of the engine loop, whole-prefill vs chunked admission.
+
+    The scenario is the one chunking exists for: a steady stream of
+    short prompts decoding, then a burst of ``slots`` long prompts
+    (4x max_len) landing mid-stream.  Whole-prefill admission runs one
+    full prefill per burst arrival inside a single tick — that tick is
+    the p99.  Chunked admission batches every in-flight prefill into
+    one chunk call per tick, so the burst amortizes across ticks and
+    the tail collapses while steady-state tokens/s holds."""
+    from repro.serving import Request, ServingEngine
+
+    cfg = REGISTRY["smollm-360m"].smoke()
+    slots, max_len, loads = ((16, 16, (1,)) if SMOKE
+                             else (16, 64, (1, 4)))
+    cfg = dataclasses.replace(cfg, name=cfg.name + "-serve", n_layers=2)
+    chunk = max_len // 2
+    burst = slots - 4                           # lands on free slots
+    params = init_params(transformer.param_defs(cfg),
+                         jax.random.PRNGKey(0))
+
+    def drive(chunk_size, load):
+        """Run the scenario; per-tick wall times + tokens emitted."""
+        eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                            use_program=True, impl="reference",
+                            chunk_size=chunk_size)
+        rng = np.random.default_rng(0)
+        uid, times = 0, []
+
+        def submit(n_tokens):
+            nonlocal uid
+            eng.submit(Request(uid=uid,
+                               prompt=rng.integers(
+                                   0, cfg.vocab,
+                                   size=n_tokens).astype(np.int32),
+                               max_new_tokens=6))
+            uid += 1
+        done, tick = [], 0
+        while True:
+            if tick % 3 == 0 and tick <= 12:
+                for _ in range(load):
+                    submit(int(rng.integers(2, 7)))
+            if tick == 4:                       # mid-stream burst
+                for _ in range(burst):
+                    submit(4 * max_len)
+            t0 = time.perf_counter()
+            done += eng.step()
+            times.append(time.perf_counter() - t0)
+            tick += 1
+            if tick > 12 and not (eng.live or eng.admission
+                                  or eng._prefilling):
+                break
+            assert tick < 600
+        assert eng.n_starved_ticks == 0
+        tokens = sum(len(r.out_tokens) for r in done)
+        return np.asarray(times), tokens
+
+    for load in loads:
+        drive(chunk, load)                      # jit warm (both paths
+        drive(None, load)                       # + all chunk widths)
+        tw, nw = drive(None, load)
+        tc, nc = drive(chunk, load)
+        tps_w, tps_c = nw / tw.sum(), nc / tc.sum()
+        p50w, p99w = np.percentile(tw, [50, 99]) * 1e6
+        p50c, p99c = np.percentile(tc, [50, 99]) * 1e6
+        emit(f"program_lm/serving/{cfg.name}/load{load}/whole_prefill",
+             p99w, f"tps={tps_w:.1f};p50_us={p50w:.0f};p99_us={p99w:.0f}")
+        emit(f"program_lm/serving/{cfg.name}/load{load}/chunk{chunk}",
+             p99c, f"tps={tps_c:.1f};p50_us={p50c:.0f};p99_us={p99c:.0f};"
+             f"p99_gain={p99w / max(p99c, 1e-9):.2f}x;"
+             f"tps_ratio={tps_c / max(tps_w, 1e-9):.2f}")
+
+
 def run():
     cfg = REGISTRY["smollm-360m"].smoke()
     shapes = [(1, 32)] if SMOKE else [(2, 64), (4, 128)]
@@ -311,6 +385,7 @@ def run():
              f"regions={len(program.plan.regions)};"
              f"region_mb={program.plan.total_bytes / 1e6:.3f}")
     run_decode_bench()
+    run_serving_bench()
 
 
 if __name__ == "__main__":

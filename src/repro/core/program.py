@@ -298,6 +298,19 @@ class ProgramPair:
         return self.decode.plan.persistent[PAGE_TABLE_REGION]
 
     @property
+    def chunk_blocker(self) -> str | None:
+        """Why this pair cannot serve *chunked* prefill (None = it
+        can).  int8 paged pools quantize whole pages — the page scale
+        is a function of every row in the page — while a chunk boundary
+        inside a page writes rows under the scale of the rows seen so
+        far, silently re-basing the ones a later chunk adds.  The
+        engine checks this at construction, not mid-serve."""
+        if self.paged is not None and self.paged.quantized:
+            return ("int8 paged KV: page scales are whole-page "
+                    "decisions, chunk writes are row-granular")
+        return None
+
+    @property
     def persistent(self) -> dict:
         return self.decode.plan.persistent
 

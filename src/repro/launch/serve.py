@@ -25,6 +25,15 @@ tokens so admission actually shares pages:
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
         --smoke --program --paged --shared-prefix 32 --requests 4
+
+``--chunk-size N`` splits each prefill into N-row chunks scheduled one
+per decode tick (long prompts stop stalling in-flight streams — the
+engine's ``n_starved_ticks`` stays 0); ``--spec-decode K`` turns on
+greedy speculative decoding, with ``--draft ARCH`` naming a separate
+draft model (default: self-draft):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+        --smoke --program --chunk-size 8 --spec-decode 3 --requests 4
 """
 from __future__ import annotations
 
@@ -101,6 +110,23 @@ def main(argv=None) -> None:
                     help="prepend this many identical tokens to every "
                          "prompt (exercises paged copy-on-write prefix "
                          "sharing; CI asserts shared pages > 0)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="chunked prefill: admit prompts one N-row "
+                         "chunk per decode tick instead of a whole "
+                         "prefill at admission (bounds per-tick "
+                         "latency; requires --program)")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="speculative decode: a draft Program pair "
+                         "proposes K tokens per tick, the target "
+                         "verifies the burst in one batched step "
+                         "(greedy only; requires --program)")
+    ap.add_argument("--draft", default=None,
+                    help="draft arch for --spec-decode (same vocab; "
+                         "default: self-draft with the target weights)")
+    ap.add_argument("--long-prompt", type=int, default=0,
+                    help="inject one prompt of this length two ticks "
+                         "into the run (the mid-stream long-prompt "
+                         "scenario the chunked-prefill CI smoke pins)")
     args = ap.parse_args(argv)
     if args.paged and not args.program:
         print("error: --paged requires --program (the paged plan only "
@@ -123,12 +149,24 @@ def main(argv=None) -> None:
         (params, _), step = restore_checkpoint(args.ckpt, (params, {}))
         print(f"restored params from step {step}")
 
+    draft_cfg = draft_params = None
+    if args.draft:
+        draft_cfg = get_config(args.draft)
+        if args.smoke:
+            draft_cfg = draft_cfg.smoke()
+        draft_params = init_params(
+            get_model(draft_cfg).param_defs(draft_cfg),
+            jax.random.PRNGKey(1))
+
     # The engine compiles the (prefill, decode) Program pair itself and
     # warns (once, at construction) when a family has no lowering.
     eng = ServingEngine(cfg, params, slots=args.slots,
                         max_len=args.max_len, use_program=args.program,
                         paged=args.paged, page_size=args.page_size,
-                        kv_quant=args.kv_quant)
+                        kv_quant=args.kv_quant,
+                        chunk_size=args.chunk_size,
+                        spec_k=args.spec_decode, draft_cfg=draft_cfg,
+                        draft_params=draft_params)
     if args.program and not eng.on_program_path:
         # The user *asked* for the program path; a silent legacy-loop
         # fallback would misreport what was measured.  The engine's
@@ -151,7 +189,19 @@ def main(argv=None) -> None:
             prompt = np.concatenate([prefix, prompt])
         eng.submit(Request(uid=i, prompt=prompt,
                            max_new_tokens=args.max_new))
-    done = eng.run_until_drained()
+    done = []
+    if args.long_prompt:
+        # Two ticks of steady decode, then the long prompt lands
+        # mid-stream — with --chunk-size its prefill interleaves with
+        # the in-flight streams instead of stalling them.
+        for _ in range(2):
+            done += eng.step()
+        eng.submit(Request(
+            uid=args.requests,
+            prompt=rng.integers(0, cfg.vocab,
+                                size=args.long_prompt).astype(np.int32),
+            max_new_tokens=args.max_new))
+    done += eng.run_until_drained()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
@@ -160,6 +210,17 @@ def main(argv=None) -> None:
         print(f"prefills={eng.n_prefills} "
               f"prefill_recomputes={eng.n_prefill_recomputes} "
               f"decode_ticks={eng.n_decode_ticks}")
+        if eng.chunk_size is not None:
+            print(f"prefill_chunks={eng.n_prefill_chunks} "
+                  f"starved_ticks={eng.n_starved_ticks}")
+        if eng.spec_k:
+            print(f"spec_proposed={eng.n_spec_proposed} "
+                  f"spec_accepted={eng.n_spec_accepted} "
+                  f"spec_rollbacks={eng.n_spec_rollbacks}")
+        if eng.admission.n_rejected or eng.admission.n_requeued:
+            print(f"rejected={eng.admission.n_rejected} "
+                  f"requeued={eng.admission.n_requeued} "
+                  f"last_blocked={eng.admission.last_blocked}")
     if args.paged:
         print(f"shared_pages={eng.n_shared_pages} "
               f"cow_forks={eng.n_cow_forks} "

@@ -46,7 +46,8 @@ from .moe import moe_mlp
 
 __all__ = ["param_defs", "forward", "init_cache", "decode_step",
            "to_graph", "to_decode_graph", "compile_program",
-           "compile_program_pair", "program_forward", "kv_cache_len"]
+           "compile_program_pair", "compile_draft_pair",
+           "program_forward", "kv_cache_len"]
 
 
 # --- parameter declaration -------------------------------------------------------
@@ -683,6 +684,37 @@ def _compile_program_pair(cfg: ArchConfig, slots: int, max_len: int,
         prefill=lower_to_program(pre_graph, pre_sched, pre_plan),
         decode=lower_to_program(dec_graph, dec_sched, dec_plan),
         slots=slots, max_len=max_len, paged=paged_plan)
+
+
+def compile_draft_pair(target_cfg: ArchConfig, draft_cfg: ArchConfig,
+                       slots: int = 8, max_len: int = 256,
+                       hw: HardwareModel = TPU_V5E) -> ProgramPair:
+    """Compile the speculative-decode *draft* (prefill, decode) pair —
+    ``compile_program_pair`` verbatim on the draft config, same
+    (slots, max_len) geometry as the target — after validating the
+    draft can propose for ``target_cfg``.
+
+    The contract is token-level: the draft proposes ids the target
+    verifies, so the vocabularies must be identical (anything else is a
+    silent id-space mismatch, not an accuracy tradeoff).  Sliding
+    windows are rejected on either side: accept/rollback truncates the
+    per-slot length, which is only safe while every cache row below the
+    truncated length is still resident — a ring that wrapped during the
+    speculative burst would have overwritten history the rollback
+    re-exposes."""
+    if draft_cfg.vocab != target_cfg.vocab:
+        raise ValueError(
+            f"draft/target vocab mismatch ({draft_cfg.vocab} vs "
+            f"{target_cfg.vocab}): speculative decode exchanges token "
+            f"ids, the vocabularies must be identical")
+    if target_cfg.attn_window or draft_cfg.attn_window:
+        raise NotImplementedError(
+            "speculative decode over windowed attention: rollback "
+            "truncates lengths, but a wrapped ring has already "
+            "overwritten the rows the truncation re-exposes")
+    _require_dense(draft_cfg)
+    return compile_program_pair(draft_cfg, slots=slots, max_len=max_len,
+                                hw=hw)
 
 
 def program_forward(params, tokens, cfg: ArchConfig, *,

@@ -62,7 +62,8 @@ from ..kernels.flash_attention import flash_attention
 from ..kernels.matmul import matmul
 
 __all__ = ["run", "jitted_runner", "ProgramState", "init_program_state",
-           "run_prefill", "run_decode", "jitted_prefill_runner",
+           "run_prefill", "run_prefill_chunk", "run_decode",
+           "jitted_prefill_runner", "jitted_chunk_runner",
            "jitted_decode_runner", "PagePool", "paged_pool_regions",
            "sync_page_table", "apply_page_copies", "TraceRecord",
            "ExecutorTrace", "trace_program"]
@@ -84,15 +85,10 @@ def _param(params, key: str | None):
     return p[int(idx)] if idx else p
 
 
-def _run_attention(op: ProgramOp, regions: dict, *, impl: str,
-                   interpret: bool | None, return_kv: bool = False):
-    """Dispatch one flash_attention op: reshape the flat q/k/v regions
-    to per-head layout, apply RoPE when the spec says so, and call the
-    kernel with the schedule's exact (block_q, block_kv).
-
-    ``return_kv=True`` additionally hands back the per-head (post-RoPE)
-    K and V — exactly what a cache-writing prefill op stores in its
-    persistent regions."""
+def _attention_heads(op: ProgramOp, regions: dict):
+    """Reshape the flat q/k/v regions to per-head layout and apply RoPE
+    when the spec says so — the shared front half of every prefill
+    flash dispatch (whole and chunked), so the two can never drift."""
     # Lazy import: models.common is the one shared home of the rotary
     # helpers and models/cnn.py imports this module at load time.
     from ..models.common import Rotary, apply_rope
@@ -105,6 +101,21 @@ def _run_attention(op: ProgramOp, regions: dict, *, impl: str,
     if a.rope_theta:
         cos, sin = Rotary(a.head_dim, a.rope_theta).freqs(jnp.arange(S))
         q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _run_attention(op: ProgramOp, regions: dict, *, impl: str,
+                   interpret: bool | None, return_kv: bool = False):
+    """Dispatch one flash_attention op: reshape the flat q/k/v regions
+    to per-head layout, apply RoPE when the spec says so, and call the
+    kernel with the schedule's exact (block_q, block_kv).
+
+    ``return_kv=True`` additionally hands back the per-head (post-RoPE)
+    K and V — exactly what a cache-writing prefill op stores in its
+    persistent regions."""
+    a = op.attn
+    q, k, v = _attention_heads(op, regions)
+    B, S = q.shape[0], q.shape[2]
     out = flash_attention(q, k, v, causal=a.causal, window=a.window,
                           block_q=a.block_q, block_kv=a.block_kv,
                           impl=impl, interpret=interpret)
@@ -348,6 +359,205 @@ def run_prefill(program: Program, params, tokens: jax.Array,
                                          impl=impl, interpret=interpret)
     lengths = state.lengths.at[slot].set(jnp.asarray(length, jnp.int32))
     return regions[program.output_region], ProgramState(caches, lengths)
+
+
+# --- chunked prefill (throughput-grade serving) ------------------------------------
+def _run_attention_chunk(op: ProgramOp, regions: dict, caches: dict,
+                         slot, start, *, impl: str,
+                         interpret: bool | None):
+    """One flash op of a *chunk* prefill pass: identical q/k/v + RoPE
+    front half as the whole-prefill dispatch, but the K/V columns at
+    positions ``< start`` are substituted from the slot's persistent
+    cache rows before the kernel call.
+
+    The chunk pass always runs over the full (B, max_len) padded token
+    buffer — embed/norm/matmul are position-local, so the fresh rows at
+    ``>= start`` are bitwise what a whole prefill computes there, and
+    the substituted history rows were themselves written by earlier
+    chunks (induction).  Feeding the *same* (block_q, block_kv) flash
+    kernel the same shapes keeps the reduction order identical, so a
+    chunked prefill reproduces the whole-prefill outputs bit for bit at
+    its chunk rows.
+
+    History substitution per region plan:
+
+    * contiguous — ``cache[slot]`` is already position-indexed;
+    * rolling ring — position ``p`` lives at ring row ``p %
+      cache_len``, valid only for the window ``start - cache_len <= p <
+      start`` (older positions are window-masked inside the kernel, so
+      their column content is inert);
+    * paged — gather through the slot's page-table row (rows whose page
+      is still null can only be positions ``>= start``, never
+      selected).
+    """
+    a = op.attn
+    q, k, v = _attention_heads(op, regions)
+    B, S = q.shape[0], q.shape[2]
+    pos = jnp.arange(S)
+    if op.page_table_region is not None:
+        pg = a.page_size
+        pt_rows = caches[op.page_table_region][slot]   # (B, pages_per_slot)
+        page = jnp.take_along_axis(pt_rows, pos[None] // pg, axis=1)
+        hk = caches[op.k_cache_region][page, pos[None] % pg]
+        hv = caches[op.v_cache_region][page, pos[None] % pg]
+        valid = pos[None] < start[:, None]
+    else:
+        buf_k, buf_v = caches[op.k_cache_region], caches[op.v_cache_region]
+        cache_len = buf_k.shape[1]
+        ring = pos % cache_len
+        hk = buf_k[slot][:, ring]                      # (B, S, KV, hd)
+        hv = buf_v[slot][:, ring]
+        valid = ((pos[None] < start[:, None])
+                 & (pos[None] >= start[:, None] - cache_len))
+    m = valid[:, None, :, None]                        # (B, 1, S, 1)
+    k = jnp.where(m, hk.transpose(0, 2, 1, 3).astype(k.dtype), k)
+    v = jnp.where(m, hv.transpose(0, 2, 1, 3).astype(v.dtype), v)
+    out = flash_attention(q, k, v, causal=a.causal, window=a.window,
+                          block_q=a.block_q, block_kv=a.block_kv,
+                          impl=impl, interpret=interpret)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, a.heads * a.head_dim)
+    return out, k, v
+
+
+def _write_chunk_cache(caches: dict, op: ProgramOp, k, v, slot, start,
+                       stop, length) -> None:
+    """Store a chunk's fresh K/V rows — (B, KVh, S, hd), rows ``[start,
+    stop)`` per batch entry — into the (slots, cache_len, KV, hd) cache
+    regions.
+
+    Contiguous regions take the chunk rows in place; the final chunk
+    (``stop == length``) extends the write through the padded tail so
+    the slot's region ends bitwise-equal to a whole prefill's
+    unconditional full-row write.  Window-sized regions (cache_len < S)
+    take the ring layout: ring row ``j`` receives the latest chunk
+    position ``p < min(stop, length)`` with ``p % cache_len == j``; the
+    first chunk seeds every ring row with fresh row 0 — the same
+    duplicate-early-row rule ``ring_positions`` applies for ring rows
+    no prompt position covers — so re-admission hygiene and whole-
+    prefill bit-parity both hold."""
+    for rid, val in ((op.k_cache_region, k), (op.v_cache_region, v)):
+        buf = caches[rid]
+        row = val.transpose(0, 2, 1, 3).astype(buf.dtype)   # (B, S, KV, hd)
+        S, cache_len = row.shape[1], buf.shape[1]
+        old = buf[slot]                                     # (B, cl, KV, hd)
+        if cache_len == S:
+            wstop = jnp.where(stop >= length, S, stop)
+            pos = jnp.arange(S)
+            m = (pos[None] >= start[:, None]) & (pos[None] < wstop[:, None])
+            new = jnp.where(m[..., None, None], row, old)
+        else:
+            wstop = jnp.minimum(stop, length)
+            j = jnp.arange(cache_len)
+            last = (wstop - 1)[:, None]
+            p = j[None] + ((last - j[None]) // cache_len) * cache_len
+            written = (p >= start[:, None]) & (p < wstop[:, None])
+            gathered = jax.vmap(lambda r, idx: r[idx])(
+                row, jnp.clip(p, 0, S - 1))
+            seed = jnp.broadcast_to(row[:, :1], old.shape)
+            base = jnp.where((start == 0)[:, None, None, None], seed, old)
+            new = jnp.where(written[..., None, None], gathered, base)
+        caches[rid] = buf.at[slot].set(new)
+
+
+def _write_chunk_cache_paged(caches: dict, op: ProgramOp, k, v, slot,
+                             start, stop, length, write_from) -> None:
+    """Paged flavor of the chunk cache write: scatter the chunk rows
+    through the slot's page-table row, one row per scatter entry.
+
+    Rows outside ``[max(start, write_from), stop)`` — and every row on
+    the final chunk past ``length`` (prompt right-padding, zeroed as in
+    the whole-prefill write) — redirect to the null page 0, so the
+    scatter stays dense and COW-shared prefix pages are never touched.
+    int8 pools are rejected upstream (``ProgramPair.chunk_blocker``):
+    their page scale is set by whole-page quantization, which a
+    row-granular chunk write would silently re-base."""
+    a = op.attn
+    pg = a.page_size
+    pt_rows = caches[op.page_table_region][slot]       # (B, pages_per_slot)
+    if op.k_scale_region is not None:
+        raise NotImplementedError(
+            "chunked prefill over int8 paged KV: page scales are "
+            "whole-page decisions (see ProgramPair.chunk_blocker)")
+    for rid, val in ((op.k_cache_region, k), (op.v_cache_region, v)):
+        buf = caches[rid]                              # (n_pages, pg, KV, hd)
+        row = val.transpose(0, 2, 1, 3)                # (B, S, KV, hd)
+        S = row.shape[1]
+        pos = jnp.arange(S)
+        wstop = jnp.where(stop >= length, S, stop)
+        write = ((pos[None] >= jnp.maximum(start, write_from)[:, None])
+                 & (pos[None] < wstop[:, None]))
+        rowv = jnp.where(pos[None, :, None, None]
+                         < length[:, None, None, None], row, 0)
+        page = jnp.where(
+            write, jnp.take_along_axis(pt_rows, pos[None] // pg, axis=1), 0)
+        caches[rid] = buf.at[page, pos[None] % pg].set(rowv.astype(buf.dtype))
+
+
+def run_prefill_chunk(program: Program, params, tokens: jax.Array,
+                      state: ProgramState, slot, start, stop, length,
+                      write_from=None, *, impl: str = "auto",
+                      interpret: bool | None = None):
+    """Execute the prefill Program for one *chunk* of each of B
+    in-flight admissions — rows ``[start[i], stop[i])`` of slot
+    ``slot[i]`` — against the full (B, max_len) padded token buffers.
+
+    All operands past ``tokens`` are (B,) int32 vectors: ``length`` is
+    each prompt's total row count (``stop == length`` marks the final
+    chunk) and ``write_from`` the paged shared-prefix redirect.  Each
+    flash op substitutes the slot's already-written cache rows for the
+    K/V columns below ``start`` (see ``_run_attention_chunk``), then
+    writes the chunk rows back; ``lengths[slot]`` advances to ``stop``
+    so the next chunk (or the first decode tick after the final chunk)
+    continues exactly where this one stopped.  Returns (logits (B,
+    max_len, vocab), new_state) — only rows ``[start, stop)`` of the
+    logits are chunk-fresh; the final chunk's ``length - 1`` row is the
+    one the engine samples the first token from.
+
+    A full-prompt "chunk" (start 0, stop == length) degenerates to
+    ``run_prefill`` semantics, bit for bit."""
+    regions: dict[int, jax.Array] = {program.input_region: tokens}
+    caches = dict(state.caches)
+    slot = jnp.asarray(slot, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    write_from = (jnp.zeros_like(start) if write_from is None
+                  else jnp.asarray(write_from, jnp.int32))
+    for op in program.ops:
+        src = regions[op.in_region]
+        if op.kernel == "flash_attention" and op.k_cache_region is not None:
+            out, k, v = _run_attention_chunk(op, regions, caches, slot,
+                                             start, impl=impl,
+                                             interpret=interpret)
+            if op.page_table_region is not None:
+                _write_chunk_cache_paged(caches, op, k, v, slot, start,
+                                         stop, length, write_from)
+            else:
+                _write_chunk_cache(caches, op, k, v, slot, start, stop,
+                                   length)
+            regions[op.out_region] = out
+            continue
+        regions[op.out_region] = _run_op(op, src, regions, params,
+                                         impl=impl, interpret=interpret)
+    lengths = state.lengths.at[slot].set(stop)
+    return regions[program.output_region], ProgramState(caches, lengths)
+
+
+def jitted_chunk_runner(program: Program, impl: str = "auto",
+                        interpret: bool | None = None):
+    """Compiled chunk prefill: (params, tokens, state, slot, start,
+    stop, length, write_from) -> (logits, state), state donated.  One
+    executable per in-flight batch width B (XLA re-specializes on the
+    leading shape; the engine's chunk batches are small and repeat)."""
+    def make():
+        def _run(params, tokens, state, slot, start, stop, length,
+                 write_from, _program=program):
+            return run_prefill_chunk(_program, params, tokens, state,
+                                     slot, start, stop, length,
+                                     write_from, impl=impl,
+                                     interpret=interpret)
+        return jax.jit(_run, donate_argnums=(2,))
+    return _cached_runner((id(program), impl, interpret, "chunk"), make)
 
 
 def _run_decode_attention(op: ProgramOp, src: jax.Array, k_src: jax.Array,

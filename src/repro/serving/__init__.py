@@ -1,2 +1,4 @@
+from .admission import AdmissionQueue, AdmissionTicket
 from .engine import Request, ServingEngine
-__all__ = ["Request", "ServingEngine"]
+
+__all__ = ["AdmissionQueue", "AdmissionTicket", "Request", "ServingEngine"]

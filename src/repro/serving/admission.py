@@ -1,0 +1,110 @@
+"""Async request admission: a bounded queue with typed backpressure.
+
+Request ingestion is decoupled from the engine tick loop: producers
+call ``AdmissionQueue.submit`` (thread-safe, so an RPC/IO thread can
+feed a serving loop running elsewhere) and get back an
+``AdmissionTicket`` *immediately* — accepted-and-queued, or rejected
+with a typed reason when the queue is at capacity.  The engine drains
+the queue at tick boundaries; when admission itself stalls (no free
+slot, page pool exhausted), the engine records the typed reason here
+and the stalled request is requeued **at the head**, so a starved
+request can never be overtaken by later arrivals — FIFO admission is a
+liveness guarantee, not a best effort (regression-tested in
+tests/test_serving_loop.py).
+
+Backpressure states (``AdmissionTicket.reason`` / ``last_blocked``):
+
+* ``queue_full``       — rejected at submit; the caller sheds or retries.
+* ``no_free_slot``     — queued; every slot is live or mid-prefill.
+* ``pages_exhausted``  — queued at head; the §5.1 page pool cannot hold
+  the prompt's private pages until a retirement frees some.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from dataclasses import dataclass
+
+__all__ = ["AdmissionQueue", "AdmissionTicket", "QUEUE_FULL",
+           "NO_FREE_SLOT", "PAGES_EXHAUSTED"]
+
+QUEUE_FULL = "queue_full"
+NO_FREE_SLOT = "no_free_slot"
+PAGES_EXHAUSTED = "pages_exhausted"
+
+
+@dataclass(frozen=True)
+class AdmissionTicket:
+    """What ``submit`` hands back: ``accepted`` means the request is in
+    the queue (``position`` = 0-based depth at enqueue time);
+    ``reason`` is ``"queued"`` or the typed backpressure reason the
+    request bounced on (``queue_full``)."""
+    accepted: bool
+    reason: str
+    position: int | None = None
+
+
+class AdmissionQueue:
+    """Bounded FIFO between request producers and the engine tick loop.
+
+    All mutation is under one lock — ``submit`` may run on any thread;
+    ``pop``/``requeue_front`` are engine-side (tick boundary).  The
+    queue never blocks: a full queue *rejects* (typed ticket) rather
+    than parking the producer, which keeps backpressure visible to the
+    caller instead of hidden in a blocked thread."""
+
+    def __init__(self, capacity: int | None = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"queue capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._dq: collections.deque = collections.deque()
+        self._lock = threading.Lock()
+        # Typed-backpressure accounting (exposed via launch/serve.py).
+        self.n_rejected = 0                # queue_full bounces at submit
+        self.n_requeued = 0                # head requeues (pages_exhausted)
+        self.blocked: collections.Counter = collections.Counter()
+        self.last_blocked: str | None = None
+
+    def submit(self, req) -> AdmissionTicket:
+        with self._lock:
+            if (self.capacity is not None
+                    and len(self._dq) >= self.capacity):
+                self.n_rejected += 1
+                self.blocked[QUEUE_FULL] += 1
+                self.last_blocked = QUEUE_FULL
+                return AdmissionTicket(False, QUEUE_FULL)
+            self._dq.append(req)
+            return AdmissionTicket(True, "queued", len(self._dq) - 1)
+
+    def pop(self):
+        """Next request to admit, or None when empty (engine-side)."""
+        with self._lock:
+            return self._dq.popleft() if self._dq else None
+
+    def requeue_front(self, req, reason: str) -> None:
+        """Put a request the engine could not admit back at the *head*
+        of the queue: it retries before anything that arrived after it
+        (no overtaking), and the typed ``reason`` is recorded."""
+        with self._lock:
+            self._dq.appendleft(req)
+            self.n_requeued += 1
+            self.blocked[reason] += 1
+            self.last_blocked = reason
+
+    def note_blocked(self, reason: str) -> None:
+        """Record a backpressure stall that did not dequeue anything
+        (e.g. ``no_free_slot`` observed before a pop)."""
+        with self._lock:
+            self.blocked[reason] += 1
+            self.last_blocked = reason
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._dq)
+
+    def __len__(self) -> int:
+        return self.pending
+
+    def __bool__(self) -> bool:
+        return self.pending > 0

@@ -40,6 +40,30 @@ sharing, and on-demand page allocation decided host-side by a
 a lowering fall back to the legacy ``decode_step`` loop with a single
 warning at engine construction naming the specific blocker
 (``fallback_reason``).
+
+The tick loop itself is throughput-grade (see docs/ARCHITECTURE.md,
+"Serving loop"):
+
+* **Chunked prefill** (``chunk_size``): admission only assigns the
+  slot; the prompt prefills ``chunk_size`` rows per tick through one
+  batched ``run_prefill_chunk`` call shared by every in-flight
+  admission, bitwise-equal to a whole prefill.  Decode-first fairness
+  bounds per-tick latency: live slots always advance
+  (``n_starved_ticks`` stays 0), and a prefill completes within
+  ``ceil(length/chunk_size)`` ticks of slot assignment.
+* **Async admission with typed backpressure**: ``submit`` goes through
+  a bounded ``serving/admission.py::AdmissionQueue`` — ``queue_full``
+  rejects at the door with a ticket; ``no_free_slot`` /
+  ``pages_exhausted`` stalls are recorded, and a pool-starved request
+  is requeued at the *head* so later arrivals can never overtake it.
+* **Speculative decode** (``spec_k``): a draft (prefill, decode) pair
+  — ``compile_program_pair`` verbatim via ``compile_draft_pair`` —
+  proposes up to k greedy tokens per tick; the target verifies the
+  burst in one batched chunk call, accepts the longest agreeing
+  prefix, emits the correcting token, and rolls back by truncating
+  both states' lengths.  Greedy output is token-identical to
+  speculation off (``n_spec_proposed`` / ``n_spec_accepted`` /
+  ``n_spec_rollbacks`` count the wins next to the prefill metrics).
 """
 from __future__ import annotations
 
@@ -52,6 +76,8 @@ import numpy as np
 
 from ..configs.base import ArchConfig, CNNConfig
 from ..models import get_model
+from . import admission as adm
+from .admission import AdmissionQueue, AdmissionTicket
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -65,13 +91,30 @@ class Request:
     done: bool = False
 
 
+@dataclass
+class _InFlightPrefill:
+    """A chunked admission mid-prefill: the slot is reserved (neither
+    free nor live) while ``done`` walks the prompt in ``chunk_size``
+    steps; ``admitted_tick`` dates the slot assignment so the
+    completes-within-``ceil(length/chunk)``-ticks bound is checkable."""
+    req: Request
+    tokens: np.ndarray               # (max_len,) right-padded prompt window
+    length: int                      # prompt rows to prefill
+    done: int                        # rows already in the cache
+    write_from: int                  # paged shared-prefix redirect
+    admitted_tick: int
+
+
 class ServingEngine:
     def __init__(self, cfg, params, *, slots: int = 8,
                  max_len: int = 256, eos_id: int | None = None,
                  impl: str = "auto", greedy: bool = True, program=None,
                  use_program: bool = False, paged: bool = False,
                  page_size: int = 16, page_pool: int | None = None,
-                 kv_quant: str | None = None):
+                 kv_quant: str | None = None,
+                 chunk_size: int | None = None,
+                 queue_capacity: int | None = None,
+                 spec_k: int = 0, draft_cfg=None, draft_params=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -80,7 +123,14 @@ class ServingEngine:
         self.impl = impl
         self.greedy = greedy
         self.live: dict[int, Request] = {}       # slot -> request
-        self.queue: list[Request] = []
+        self.queue: list[Request] = []           # legacy/CNN paths only
+        # LM-program requests enter through the bounded admission queue
+        # (typed backpressure, head requeue); ``submit`` routes there.
+        self.admission = AdmissionQueue(queue_capacity)
+        self.chunk_size = chunk_size
+        self.spec_k = spec_k
+        self._spec = False
+        self._prefilling: dict[int, _InFlightPrefill] = {}
         self._lm_program = False
         # Why an LM config requested on the program path fell back to
         # the legacy decode loop (None = no fallback happened); callers
@@ -93,6 +143,19 @@ class ServingEngine:
         self.n_prefills = 0
         self.n_prefill_recomputes = 0
         self.n_decode_ticks = 0
+        # Chunked-prefill / tick-liveness counters: chunk executor
+        # calls advance every in-flight prefill one chunk per tick, and
+        # a live slot the tick failed to advance by at least one token
+        # shows up in n_starved_ticks (CI asserts it stays 0 — chunking
+        # exists precisely so admission can never stall decode).
+        self.n_prefill_chunks = 0
+        self.n_starved_ticks = 0
+        # Speculative-decode counters, next to the prefill metrics:
+        # draft tokens proposed / accepted by target verification, and
+        # ticks whose acceptance stopped short of k (rollback).
+        self.n_spec_proposed = 0
+        self.n_spec_accepted = 0
+        self.n_spec_rollbacks = 0
         # Paged-KV counters: donor pages mapped at admission (prompt
         # rows *not* prefilled thanks to prefix sharing) and pages
         # forked by copy-on-write when a sharer's ring write reached a
@@ -182,8 +245,26 @@ class ServingEngine:
                     # between jitted calls; the device sees only the
                     # synced table and whole-page copies.
                     self._pool = executor.PagePool(pair.paged, slots)
+                if chunk_size is not None:
+                    if chunk_size < 1:
+                        raise ValueError(
+                            f"chunk_size must be >= 1, got {chunk_size}")
+                    blocker = pair.chunk_blocker
+                    if blocker is not None:
+                        raise ValueError(
+                            f"pair is not chunkable: {blocker}")
+                self._chunk = (executor.jitted_chunk_runner(
+                                   pair.prefill, impl=impl)
+                               if (chunk_size is not None or spec_k)
+                               else None)
+                self._init_spec(pair, draft_cfg, draft_params)
                 self._lm_program = True
                 return
+        if chunk_size is not None or spec_k:
+            raise ValueError(
+                "chunked prefill / speculative decode need the stateful "
+                "LM Program path (use_program=True on a lowerable dense "
+                f"config); blocked by: {self.fallback_reason or cfg.name}")
         if (program is not None and not lm) or isinstance(cfg, CNNConfig):
             # Program fast path (CNN workloads): one compiled Program
             # per batch size, executed whole per tick — no token cache.
@@ -210,12 +291,61 @@ class ServingEngine:
         naming why."""
         return self._lm_program
 
+    def _init_spec(self, pair, draft_cfg, draft_params) -> None:
+        """Wire the speculative-decode draft pair: a second (prefill,
+        decode) Program pair — ``compile_program_pair`` verbatim, same
+        geometry — whose decode proposes ``spec_k`` tokens per tick for
+        the target's batched verification."""
+        if not self.spec_k:
+            return
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if not self.greedy:
+            raise ValueError(
+                "speculative decode verifies greedy argmax proposals; "
+                "sampling acceptance is out of scope (greedy=True)")
+        if pair.paged is not None:
+            raise NotImplementedError(
+                "speculative decode over paged KV: the verify burst "
+                "would need per-row page preparation (COW forks) "
+                "inside the tick; serve paged configs without spec_k")
+        from ..models.transformer import compile_draft_pair
+        from ..runtime import executor
+        if draft_cfg is None:
+            draft_cfg = self.cfg
+            if draft_params is None:
+                # Self-draft: the degenerate (but valid) configuration
+                # where the draft is the target itself — every
+                # proposal verifies, which is what the CI smoke pins.
+                draft_params = self.params
+        if draft_params is None:
+            raise ValueError(
+                f"draft_cfg {draft_cfg.name} needs draft_params "
+                f"(the draft is a separate model)")
+        dpair = compile_draft_pair(self.cfg, draft_cfg, slots=self.slots,
+                                   max_len=self.max_len)
+        self._draft_params = draft_params
+        self._draft_pair = dpair
+        self._draft_state = executor.init_program_state(dpair)
+        self._draft_prefill = executor.jitted_prefill_runner(
+            dpair.prefill, impl=self.impl)
+        self._draft_decode = executor.jitted_decode_runner(
+            dpair.decode, impl=self.impl)
+        self._spec = True
+
     # -- admission -------------------------------------------------------------
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> AdmissionTicket:
+        """Enqueue a request; returns the admission ticket (rejected
+        with reason ``queue_full`` when the bounded queue is at
+        capacity — the request is *not* held)."""
+        if self._lm_program:
+            return self.admission.submit(req)
         self.queue.append(req)
+        return AdmissionTicket(True, "queued", len(self.queue) - 1)
 
     def _free_slots(self):
-        return [s for s in range(self.slots) if s not in self.live]
+        return [s for s in range(self.slots)
+                if s not in self.live and s not in self._prefilling]
 
     def _admit(self):
         """Prefill queued requests into free slots through the decode
@@ -312,22 +442,36 @@ class ServingEngine:
         return int(np.random.default_rng(req.uid + len(req.out_tokens))
                    .choice(self.cfg.vocab, p=_softmax(logits_row)))
 
+    def _emit_tokens(self, slot: int, req: Request, toks, finished: list,
+                     ) -> int:
+        """Append generated tokens in order until EOS or the request's
+        budget retires it; returns how many were kept.  A speculative
+        tick hands several accepted tokens at once — the truncation
+        here is what keeps its output stream identical to the
+        one-token-per-tick path."""
+        kept = 0
+        for nxt in toks:
+            req.out_tokens.append(nxt)
+            req._last_token = nxt
+            kept += 1
+            if ((self.eos is not None and nxt == self.eos)
+                    or len(req.out_tokens) >= req.max_new_tokens):
+                req.done = True
+                finished.append(req)
+                self.live.pop(slot, None)
+                if self._pool is not None:
+                    # Retire the slot's pages: unref (a donor's shared
+                    # prefix stays resident while any sharer holds a
+                    # refcount) and drop it from the donor registry.
+                    self._pool.release(slot)
+                    self._slot_prompts.pop(slot, None)
+                    self._slot_len.pop(slot, None)
+                break
+        return kept
+
     def _retire_if_done(self, slot: int, req: Request, nxt: int,
                         finished: list) -> None:
-        req.out_tokens.append(nxt)
-        req._last_token = nxt
-        if ((self.eos is not None and nxt == self.eos)
-                or len(req.out_tokens) >= req.max_new_tokens):
-            req.done = True
-            finished.append(req)
-            self.live.pop(slot, None)
-            if self._pool is not None:
-                # Retire the slot's pages: unref (a donor's shared
-                # prefix stays resident while any sharer holds a
-                # refcount) and drop it from the donor registry.
-                self._pool.release(slot)
-                self._slot_prompts.pop(slot, None)
-                self._slot_len.pop(slot, None)
+        self._emit_tokens(slot, req, [nxt], finished)
 
     def _lm_admit(self, finished: list) -> None:
         """Prefill queued prompts into free slots — once per request,
@@ -343,13 +487,24 @@ class ServingEngine:
         this loop (EOS or ``max_new_tokens == 1`` on the prefill token
         retires the request inside ``_retire_if_done``) is immediately
         reusable for the next queued request instead of idling a
-        tick."""
-        while self.queue:
+        tick.
+
+        With ``chunk_size`` set, admission only *assigns* the slot and
+        registers an ``_InFlightPrefill``; the prompt is prefilled one
+        chunk per tick by ``_advance_prefills`` so decode ticks for the
+        other slots interleave between chunks.  Admission stalls record
+        their typed backpressure reason and — for pool exhaustion,
+        where the request was already dequeued — requeue at the *head*
+        so no later arrival can overtake a starved request."""
+        while self.admission:
             free = self._free_slots()
             if not free:
+                self.admission.note_blocked(adm.NO_FREE_SLOT)
+                break
+            req = self.admission.pop()
+            if req is None:
                 break
             slot = free[0]
-            req = self.queue.pop(0)
             if len(req.prompt) == 0:
                 raise ValueError(f"request {req.uid}: empty prompt")
             win = np.asarray(req.prompt, np.int32)[-self.max_len:]
@@ -357,26 +512,86 @@ class ServingEngine:
             if self._pool is not None:
                 write_from = self._paged_admit(slot, win)
                 if write_from is None:
-                    # Pool exhausted: the request waits (at the head of
-                    # the queue) until a retirement frees pages.
-                    self.queue.insert(0, req)
+                    # Pool exhausted: the request waits at the head of
+                    # the queue until a retirement frees pages.
+                    self.admission.requeue_front(req, adm.PAGES_EXHAUSTED)
                     break
+            if self.chunk_size is not None:
+                padded = np.zeros((self.max_len,), np.int32)
+                padded[:len(win)] = win
+                # A fully page-shared prompt still owes the chunk that
+                # computes the last row's logits (the write is
+                # redirected, the first token is not).
+                self._prefilling[slot] = _InFlightPrefill(
+                    req=req, tokens=padded, length=len(win),
+                    done=min(write_from, len(win) - 1),
+                    write_from=write_from,
+                    admitted_tick=self.n_decode_ticks)
+                continue
             padded = np.zeros((1, self.max_len), np.int32)
             padded[0, :len(win)] = win
             logits, self.state = self._prefill(
                 self.params, jnp.asarray(padded), self.state, slot,
                 len(win), write_from)
-            # Real accounting, not a constant: a second prefill of the
-            # same request (any future re-admission/recompute path)
-            # shows up here — CI asserts the count stays at zero.
-            if getattr(req, "_prefilled", False):
-                self.n_prefill_recomputes += 1
-            req._prefilled = True
-            self.n_prefills += 1
-            self.live[slot] = req
-            nxt = self._next_token(
-                req, np.asarray(logits[0, len(win) - 1]))
-            self._retire_if_done(slot, req, nxt, finished)
+            self._finish_prefill(slot, req, padded,
+                                 np.asarray(logits[0, len(win) - 1]),
+                                 len(win), finished)
+
+    def _finish_prefill(self, slot: int, req: Request, padded,
+                        last_logits, length: int, finished: list) -> None:
+        """Shared tail of both prefill flavors: accounting, the first
+        generated token, liveness — and the draft prefill when
+        speculative decode is on (the draft cache must hold the same
+        history before it can propose)."""
+        # Real accounting, not a constant: a second prefill of the
+        # same request (any future re-admission/recompute path)
+        # shows up here — CI asserts the count stays at zero.
+        if getattr(req, "_prefilled", False):
+            self.n_prefill_recomputes += 1
+        req._prefilled = True
+        self.n_prefills += 1
+        self.live[slot] = req
+        if self._spec:
+            _, self._draft_state = self._draft_prefill(
+                self._draft_params,
+                jnp.asarray(padded.reshape(1, self.max_len)),
+                self._draft_state, slot, length, 0)
+        nxt = self._next_token(req, last_logits)
+        self._retire_if_done(slot, req, nxt, finished)
+
+    def _advance_prefills(self, finished: list) -> None:
+        """Advance every in-flight chunked prefill by one chunk — a
+        single batched chunk-Program call for all of them (they share
+        the prefill Program, so the geometry always allows it).  An
+        admission that reaches its prompt length emits its first token
+        and goes live; by construction that happens within
+        ``ceil(length / chunk_size)`` ticks of slot assignment."""
+        if not self._prefilling:
+            return
+        items = sorted(self._prefilling.items())
+        lengths = np.array([p.length for _, p in items], np.int32)
+        starts = np.array([p.done for _, p in items], np.int32)
+        stops = np.minimum(starts + self.chunk_size, lengths)
+        logits, self.state = self._chunk(
+            self.params,
+            jnp.asarray(np.stack([p.tokens for _, p in items])),
+            self.state,
+            jnp.asarray(np.array([s for s, _ in items], np.int32)),
+            jnp.asarray(starts), jnp.asarray(stops), jnp.asarray(lengths),
+            jnp.asarray(np.array([p.write_from for _, p in items],
+                                 np.int32)))
+        self.n_prefill_chunks += len(items)
+        done_rows = None
+        for i, (slot, p) in enumerate(items):
+            p.done = int(stops[i])
+            if p.done < p.length:
+                continue
+            if done_rows is None:
+                done_rows = np.asarray(logits)
+            del self._prefilling[slot]
+            self._finish_prefill(slot, p.req, p.tokens,
+                                 done_rows[i, p.length - 1], p.length,
+                                 finished)
 
     def _paged_admit(self, slot: int, win: np.ndarray) -> int | None:
         """Map an admitted prompt onto pool pages.  Finds the live
@@ -391,12 +606,17 @@ class ServingEngine:
         the rolling overwrite has recycled their early pages, so the
         prompt is no longer resident there (sharers that mapped those
         pages *before* the wrap stay safe — the wrap write saw
-        refcount > 1 and forked)."""
+        refcount > 1 and forked).  Donors still mid-chunked-prefill are
+        skipped too: their prefix pages are mapped but not yet
+        *written*, and a sharer's chunk would read rows the donor's
+        later chunks still owe."""
         from ..runtime import executor
         pool = self._pool
         prompt = tuple(int(t) for t in win)
         shared: tuple[int, ...] = ()
         for s, donor in self._slot_prompts.items():
+            if s in self._prefilling:
+                continue
             if self._slot_len.get(s, 0) > pool.plan.cache_len:
                 continue
             cand = pool.shared_prefix_pages(s, donor, prompt)
@@ -413,15 +633,25 @@ class ServingEngine:
 
     def _lm_program_step(self) -> list[Request]:
         """One tick on the stateful LM program path: prefill-admit
-        queued requests, then advance every live slot by one token
-        through the decode Program — O(1) in prompt length, no
-        recompute ever.  The ProgramState (persistent cache buffers +
-        per-slot lengths) is donated through the jitted runners, so the
-        cache updates in place across ticks."""
+        queued requests (whole, or one chunk per tick when
+        ``chunk_size`` is set), then advance every live slot through
+        the decode Program — O(1) in prompt length, no recompute ever.
+        The ProgramState (persistent cache buffers + per-slot lengths)
+        is donated through the jitted runners, so the cache updates in
+        place across ticks.
+
+        The scheduling rule is decode-first fairness: slots live at
+        tick start *always* get their decode advance this tick —
+        admission only assigns slots and chunk work is bounded at
+        ``chunk_size`` rows per in-flight prefill — so a long prompt
+        can never stall the in-flight streams (``n_starved_ticks``
+        counts violations; it stays 0 by construction)."""
         finished: list[Request] = []
         self._lm_admit(finished)
+        self._advance_prefills(finished)
         if not self.live:
             return finished
+        starved = set(self.live)
         toks = np.zeros((self.slots,), np.int32)
         occupied = np.zeros((self.slots,), bool)
         for slot, req in self.live.items():
@@ -447,18 +677,140 @@ class ServingEngine:
                 executor.apply_page_copies(self.state, self.program,
                                            copies)
                 self.n_cow_forks += len(copies)
-        logits, self.state = self._decode(self.params, jnp.asarray(toks),
-                                          self.state,
-                                          jnp.asarray(occupied))
+        if self._spec:
+            advanced = self._spec_tick(toks, occupied, finished)
+        else:
+            logits, self.state = self._decode(self.params,
+                                              jnp.asarray(toks),
+                                              self.state,
+                                              jnp.asarray(occupied))
+            if self._pool is not None:
+                for slot in self.live:
+                    self._slot_len[slot] += 1
+            logits = np.asarray(logits)
+            advanced = set()
+            for slot, req in list(self.live.items()):
+                nxt = self._next_token(req, logits[slot])
+                self._retire_if_done(slot, req, nxt, finished)
+                advanced.add(slot)
         self.n_decode_ticks += 1
-        if self._pool is not None:
-            for slot in self.live:
-                self._slot_len[slot] += 1
-        logits = np.asarray(logits)
-        for slot, req in list(self.live.items()):
-            nxt = self._next_token(req, logits[slot])
-            self._retire_if_done(slot, req, nxt, finished)
+        self.n_starved_ticks += len(starved - advanced)
         return finished
+
+    def _spec_tick(self, toks: np.ndarray, occupied: np.ndarray,
+                   finished: list) -> set:
+        """One speculative tick: the draft decode proposes up to
+        ``spec_k`` tokens per live slot (k batched draft steps), the
+        target verifies the whole burst in a single chunk-Program call
+        per tick — rows ``[n, n + k_s]`` of each slot, standard greedy
+        accept/rollback:
+
+        * slot feeds ``[x0, d_1..d_k]``; target row ``n+j`` yields
+          ``y_{j+1} = argmax`` — exactly what sequential decode would
+          have produced given the prefix, because the verified rows'
+          K/V are written by the same pass;
+        * accept the longest prefix with ``d_j == y_j`` (``a`` tokens),
+          emit ``y_1..y_{a+1}`` (the first mismatch is *corrected*, not
+          discarded — a >= 0 tokens always advance);
+        * rollback = truncate both pairs' lengths to ``n + a + 1``;
+          rows past the truncation are unattendable (``ring_kv_len``)
+          and the next tick's write overwrites the first stale row.
+
+        Returns the set of slots that advanced (all live ones)."""
+        from ..runtime import executor
+        lens = np.asarray(self.state.lengths)
+        all_live = sorted(self.live)
+        # Slots whose absolute position reached max_len decode through
+        # the ring (rolling overwrite) — the verify chunk is row-
+        # addressed, so they take a plain decode step this tick.
+        live_slots = [s for s in all_live if int(lens[s]) < self.max_len]
+        wrapped = [s for s in all_live if int(lens[s]) >= self.max_len]
+        advanced = set()
+        if wrapped:
+            wmask = np.zeros((self.slots,), bool)
+            wmask[wrapped] = True
+            wlogits, self.state = self._decode(self.params,
+                                               jnp.asarray(toks),
+                                               self.state,
+                                               jnp.asarray(wmask))
+            wlogits = np.asarray(wlogits)
+            for s in wrapped:
+                req = self.live[s]
+                self._retire_if_done(s, req,
+                                     self._next_token(req, wlogits[s]),
+                                     finished)
+                advanced.add(s)
+        if not live_slots:
+            return advanced
+        # Per-slot burst: the verify writes rows [n, n+k_s], so cap at
+        # the compiled max_len; a slot at the boundary degenerates to
+        # k_s = 0 — a plain (verified) single-token step.
+        k_s = {s: max(0, min(self.spec_k, self.max_len - 1 - int(lens[s])))
+               for s in live_slots}
+        max_k = max(k_s.values())
+        # Draft proposal rounds: round i feeds the previous proposal
+        # and advances only the slots still inside their burst.
+        proposals = {s: [] for s in live_slots}
+        cur = toks.copy()
+        for i in range(max_k):
+            dmask = np.zeros((self.slots,), bool)
+            for s in live_slots:
+                dmask[s] = i < k_s[s]
+            dlogits, self._draft_state = self._draft_decode(
+                self._draft_params, jnp.asarray(cur), self._draft_state,
+                jnp.asarray(dmask))
+            dlogits = np.asarray(dlogits)
+            for s in live_slots:
+                if i < k_s[s]:
+                    d = int(np.argmax(dlogits[s]))
+                    proposals[s].append(d)
+                    cur[s] = d
+        # Target verification: one batched chunk call over all live
+        # slots — slot rows [n, n+k_s] carry [x0, d_1..d_k]; length is
+        # pinned past stop so no final-chunk tail write triggers.
+        B = len(live_slots)
+        vtoks = np.zeros((B, self.max_len), np.int32)
+        starts = np.zeros((B,), np.int32)
+        stops = np.zeros((B,), np.int32)
+        for i, s in enumerate(live_slots):
+            n = int(lens[s])
+            starts[i], stops[i] = n, n + k_s[s] + 1
+            vtoks[i, n] = toks[s]
+            for j, d in enumerate(proposals[s]):
+                vtoks[i, n + 1 + j] = d
+        vlogits, self.state = self._chunk(
+            self.params, jnp.asarray(vtoks), self.state,
+            jnp.asarray(np.array(live_slots, np.int32)),
+            jnp.asarray(starts), jnp.asarray(stops),
+            jnp.asarray(np.full((B,), self.max_len + 1, np.int32)),
+            jnp.asarray(np.zeros((B,), np.int32)))
+        vlogits = np.asarray(vlogits)
+        # Accept / emit / rollback, then mirror the rolled-back lengths
+        # into the draft state so the next burst proposes from the
+        # accepted history.
+        new_lens = np.asarray(self.state.lengths).copy()
+        for i, s in enumerate(live_slots):
+            req = self.live[s]
+            n = int(lens[s])
+            y = [int(np.argmax(vlogits[i, n + j]))
+                 for j in range(k_s[s] + 1)]
+            a = 0
+            while a < k_s[s] and proposals[s][a] == y[a]:
+                a += 1
+            self.n_spec_proposed += k_s[s]
+            self.n_spec_accepted += a
+            if a < k_s[s]:
+                self.n_spec_rollbacks += 1
+            kept = self._emit_tokens(s, req, y[:a + 1], finished)
+            new_lens[s] = n + kept
+            advanced.add(s)
+        # Two separate device arrays: the states are donated through
+        # different runner calls, so they must never share a buffer.
+        self.state = executor.ProgramState(self.state.caches,
+                                           jnp.asarray(new_lens))
+        self._draft_state = executor.ProgramState(
+            self._draft_state.caches, jnp.asarray(new_lens))
+        return advanced
 
     # -- decode ------------------------------------------------------------------
     def step(self) -> list[Request]:
@@ -487,7 +839,8 @@ class ServingEngine:
         done = []
         for _ in range(max_ticks):
             done.extend(self.step())
-            if not self.live and not self.queue:
+            if (not self.live and not self.queue and not self.admission
+                    and not self._prefilling):
                 break
         return done
 

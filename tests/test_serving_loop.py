@@ -1,0 +1,564 @@
+"""Serving-loop stress/property suite: chunked-prefill parity (the
+chunk executor reproduces whole-prefill KV state and token streams
+bitwise, across contiguous, windowed-ring, and paged-COW plans),
+scheduler invariants under randomized interleavings (no starvation
+past the chunk bound, no slot double-assignment, page refcounts
+conserved back to empty), speculative-decode greedy equivalence with
+accept/rollback, typed admission backpressure, and the
+requeue-at-head FIFO regression."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, st
+
+from repro.configs import REGISTRY
+from repro.models import init_params, transformer
+from repro.runtime import executor
+from repro.serving import AdmissionQueue, Request, ServingEngine
+from repro.serving.engine import _InFlightPrefill  # noqa: F401 (API pin)
+
+K0 = jax.random.PRNGKey(0)
+
+
+def _cfg(name="smollm-360m", **over):
+    cfg = REGISTRY[name].smoke()
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+_PARAMS: dict = {}
+
+
+def _params(cfg):
+    if cfg not in _PARAMS:
+        _PARAMS[cfg] = init_params(transformer.param_defs(cfg), K0)
+    return _PARAMS[cfg]
+
+
+def _assert_states_equal(pair, a, b):
+    """Bitwise equality of two ProgramStates.  For a paged pair the
+    null page (page 0) is excluded from the pool buffers: it is the
+    dense-scatter sink for masked writes, its content is don't-care
+    and legitimately differs between the whole and chunked paths."""
+    assert np.array_equal(np.asarray(a.lengths), np.asarray(b.lengths))
+    assert a.caches.keys() == b.caches.keys()
+    n_pages = pair.paged.n_pages if pair.paged is not None else None
+    for rid in a.caches:
+        x, y = np.asarray(a.caches[rid]), np.asarray(b.caches[rid])
+        if n_pages is not None and x.ndim == 4 and x.shape[0] == n_pages:
+            x, y = x[1:], y[1:]               # skip the null page
+        assert np.array_equal(x, y), f"region {rid} diverged"
+
+
+# --- executor-level bitwise chunk parity -------------------------------------------
+@pytest.mark.parametrize("name", ["smollm-360m", "llama3-8b"])
+@pytest.mark.parametrize("chunk", [1, 7, None])
+def test_chunk_prefill_bitwise_parity(name, chunk):
+    """run_prefill_chunk over [0,c), [c,2c), ... == run_prefill in one
+    shot: logits at every prompt row and every persistent cache buffer
+    bitwise-equal (same flash call geometry => same reduction order),
+    for chunk sizes smaller than / straddling / covering the prompt."""
+    cfg = _cfg(name)
+    slots, max_len, P = 2, 16, 11
+    chunk = chunk or P
+    params = _params(cfg)
+    pair = transformer.compile_program_pair(cfg, slots=slots,
+                                            max_len=max_len)
+    prompt = np.random.default_rng(3).integers(
+        0, cfg.vocab, size=P).astype(np.int32)
+    padded = np.zeros((1, max_len), np.int32)
+    padded[0, :P] = prompt
+
+    whole = executor.init_program_state(pair)
+    ref, whole = executor.run_prefill(pair.prefill, params,
+                                      jnp.asarray(padded), whole, 1, P,
+                                      impl="reference")
+    state = executor.init_program_state(pair)
+    for s in range(0, P, chunk):
+        logits, state = executor.run_prefill_chunk(
+            pair.prefill, params, jnp.asarray(padded), state,
+            jnp.asarray([1], jnp.int32),
+            jnp.asarray([s], jnp.int32),
+            jnp.asarray([min(s + chunk, P)], jnp.int32),
+            jnp.asarray([P], jnp.int32),
+            jnp.asarray([0], jnp.int32), impl="reference")
+        rows = slice(s, min(s + chunk, P))
+        assert np.array_equal(np.asarray(logits[0, rows]),
+                              np.asarray(ref[0, rows]))
+    _assert_states_equal(pair, state, whole)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, None])
+def test_chunk_prefill_bitwise_parity_windowed(chunk):
+    """Same bitwise contract on the rolling-ring plan: window-sized
+    regions, prompt longer than the window, so the chunk writes must
+    reproduce the ring layout (duplicate-early-row seeding included)."""
+    cfg = _cfg(n_layers=2, attn_window=8)
+    slots, max_len, P = 2, 16, 13
+    chunk = chunk or P
+    params = _params(cfg)
+    pair = transformer.compile_program_pair(cfg, slots=slots,
+                                            max_len=max_len)
+    prompt = np.random.default_rng(5).integers(
+        0, cfg.vocab, size=P).astype(np.int32)
+    padded = np.zeros((1, max_len), np.int32)
+    padded[0, :P] = prompt
+
+    whole = executor.init_program_state(pair)
+    ref, whole = executor.run_prefill(pair.prefill, params,
+                                      jnp.asarray(padded), whole, 0, P,
+                                      impl="reference")
+    state = executor.init_program_state(pair)
+    for s in range(0, P, chunk):
+        logits, state = executor.run_prefill_chunk(
+            pair.prefill, params, jnp.asarray(padded), state,
+            jnp.asarray([0], jnp.int32),
+            jnp.asarray([s], jnp.int32),
+            jnp.asarray([min(s + chunk, P)], jnp.int32),
+            jnp.asarray([P], jnp.int32),
+            jnp.asarray([0], jnp.int32), impl="reference")
+        rows = slice(s, min(s + chunk, P))
+        assert np.array_equal(np.asarray(logits[0, rows]),
+                              np.asarray(ref[0, rows]))
+    _assert_states_equal(pair, state, whole)
+
+
+@pytest.mark.parametrize("chunk", [1, 7, None])
+def test_chunk_prefill_bitwise_parity_paged_cow(chunk):
+    """Paged plan with a COW-shared prefix: the sharer's chunked
+    prefill (write_from past the donor pages) matches its whole
+    prefill bitwise — history gathered through the page table, shared
+    rows scatter-redirected to the null page in both paths."""
+    cfg = _cfg(n_layers=2)
+    slots, max_len, P = 2, 16, 13
+    chunk = chunk or P
+    params = _params(cfg)
+    pair = transformer.compile_program_pair(cfg, slots=slots,
+                                            max_len=max_len, paged=True,
+                                            page_size=4)
+    donor = np.random.default_rng(7).integers(
+        0, cfg.vocab, size=P).astype(np.int32)
+    sharer = donor.copy()
+    sharer[9:] = (sharer[9:] + 1) % cfg.vocab   # shares pages 0,1 (8 rows)
+
+    pool = executor.PagePool(pair.paged, slots)
+    state = executor.init_program_state(pair)
+    wf0 = pool.admit(0, P)
+    assert wf0 == 0
+    executor.sync_page_table(state, pair, pool)
+    dp = np.zeros((1, max_len), np.int32)
+    dp[0, :P] = donor
+    _, state = executor.run_prefill(pair.prefill, params,
+                                    jnp.asarray(dp), state, 0, P,
+                                    impl="reference")
+    shared = pool.shared_prefix_pages(0, tuple(int(t) for t in donor),
+                                      tuple(int(t) for t in sharer))
+    assert len(shared) == 2
+    wf = pool.admit(1, P, shared)
+    assert wf == 8
+    executor.sync_page_table(state, pair, pool)
+    sp = np.zeros((1, max_len), np.int32)
+    sp[0, :P] = sharer
+
+    whole = executor.ProgramState(dict(state.caches), state.lengths)
+    ref, whole = executor.run_prefill(pair.prefill, params,
+                                      jnp.asarray(sp), whole, 1, P, wf,
+                                      impl="reference")
+    for s in range(wf, P, chunk):
+        logits, state = executor.run_prefill_chunk(
+            pair.prefill, params, jnp.asarray(sp), state,
+            jnp.asarray([1], jnp.int32),
+            jnp.asarray([s], jnp.int32),
+            jnp.asarray([min(s + chunk, P)], jnp.int32),
+            jnp.asarray([P], jnp.int32),
+            jnp.asarray([wf], jnp.int32), impl="reference")
+        rows = slice(s, min(s + chunk, P))
+        assert np.array_equal(np.asarray(logits[0, rows]),
+                              np.asarray(ref[0, rows]))
+    _assert_states_equal(pair, state, whole)
+
+
+# --- engine-level stream parity ----------------------------------------------------
+def _drain(eng, reqs, stagger_after=None, late=()):
+    for r in reqs:
+        assert eng.submit(r).accepted
+    if stagger_after is not None:
+        done = []
+        for _ in range(stagger_after):
+            done += eng.step()
+        for r in late:
+            assert eng.submit(r).accepted
+        done += eng.run_until_drained()
+        return done
+    return eng.run_until_drained()
+
+
+def _streams(done):
+    return {r.uid: tuple(r.out_tokens) for r in done}
+
+
+@pytest.mark.parametrize("over", [{}, {"attn_window": 8}],
+                         ids=["dense", "windowed"])
+def test_engine_chunked_stream_parity(over):
+    """chunk_size 1 / 7 / whole-prefill produce token-identical
+    streams and bitwise-identical final KV state, with mixed prompt
+    lengths, mid-stream arrivals, and a prompt spanning many chunks —
+    and no live slot ever misses its decode tick (n_starved_ticks==0)."""
+    cfg = _cfg(n_layers=2, **over)
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    lens = [3, 9, 14, 30, 5]     # 30 > max_len: conditions on the tail
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in lens]
+
+    def run(chunk_size):
+        eng = ServingEngine(cfg, params, slots=3, max_len=16,
+                            use_program=True, impl="reference",
+                            chunk_size=chunk_size)
+        assert eng.on_program_path, eng.fallback_reason
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=6)
+                for i, p in enumerate(prompts[:3])]
+        late = [Request(uid=3 + j, prompt=p, max_new_tokens=6)
+                for j, p in enumerate(prompts[3:])]
+        done = _drain(eng, reqs, stagger_after=2, late=late)
+        return done, eng
+
+    done, base = run(None)
+    want = _streams(done)
+    assert sorted(want) == list(range(5))
+    for chunk in (1, 7):
+        done, eng = run(chunk)
+        assert _streams(done) == want
+        assert eng.n_starved_ticks == 0
+        assert eng.n_prefill_chunks > 0
+        assert eng.n_prefill_recomputes == 0
+        _assert_states_equal(eng.program, eng.state, base.state)
+
+
+def test_engine_paged_cow_chunked_parity():
+    """Paged engine, donor drained first so sharers COW-map its prefix
+    pages: chunked serving matches whole-prefill streams exactly,
+    sharing still engages (n_shared_pages > 0), and retirement drains
+    the pool to empty."""
+    cfg = _cfg(n_layers=2)
+    params = _params(cfg)
+    rng = np.random.default_rng(13)
+    prefix = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab, size=1 + i)
+                               .astype(np.int32)])
+               for i in range(4)]
+
+    def run(chunk_size):
+        eng = ServingEngine(cfg, params, slots=4, max_len=16,
+                            use_program=True, impl="reference",
+                            paged=True, page_size=4,
+                            chunk_size=chunk_size)
+        eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=5))
+        done = []
+        while eng._prefilling or not eng.live:   # drain donor prefill
+            done += eng.step()
+        for i, p in enumerate(prompts[1:], start=1):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=5))
+        done += eng.run_until_drained()
+        return done, eng
+
+    done, _ = run(None)
+    want = _streams(done)
+    done, eng = run(3)
+    assert _streams(done) == want
+    assert eng.n_shared_pages > 0
+    assert eng.n_starved_ticks == 0
+    assert eng._pool.used_pages == 0
+
+
+def test_engine_paged_never_shares_from_inflight_donor():
+    """Same-tick admissions cannot COW-share a donor that is still
+    mid-chunked-prefill (its prefix pages are mapped but unwritten) —
+    streams must still match the whole-prefill oracle."""
+    cfg = _cfg(n_layers=2)
+    params = _params(cfg)
+    rng = np.random.default_rng(17)
+    prefix = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, cfg.vocab, size=3)
+                               .astype(np.int32)]) for _ in range(3)]
+
+    def run(chunk_size):
+        eng = ServingEngine(cfg, params, slots=3, max_len=16,
+                            use_program=True, impl="reference",
+                            paged=True, page_size=4,
+                            chunk_size=chunk_size)
+        done = _drain(eng, [Request(uid=i, prompt=p, max_new_tokens=5)
+                            for i, p in enumerate(prompts)])
+        return _streams(done), eng
+
+    base, eng0 = run(None)
+    got, eng1 = run(4)
+    assert got == base
+    assert eng0.n_shared_pages > 0       # whole prefill: donor complete
+    assert eng1._pool.used_pages == 0
+
+
+# --- scheduler-invariant property tests --------------------------------------------
+_PROP_CFG = _cfg(n_layers=1)
+
+
+@settings(max_examples=8, deadline=None)
+@given(chunk=st.integers(min_value=1, max_value=5),
+       arrivals=st.lists(st.integers(min_value=1, max_value=12),
+                         min_size=1, max_size=6),
+       gap=st.integers(min_value=0, max_value=2))
+def test_property_chunked_schedule_invariants(chunk, arrivals, gap):
+    """Random prompt lengths / chunk sizes / arrival spacing:
+
+    * a slot assigned to a chunked prefill finishes within
+      ceil(length/chunk) ticks of assignment (observed tenure bound);
+    * no slot is ever both live and mid-prefill, and no request
+      occupies two slots (double-assignment);
+    * live slots always advance (n_starved_ticks == 0) and every
+      request retires with its full token budget."""
+    params = _params(_PROP_CFG)
+    rng = np.random.default_rng(chunk * 101 + len(arrivals))
+    eng = ServingEngine(_PROP_CFG, params, slots=3, max_len=16,
+                        use_program=True, impl="reference",
+                        chunk_size=chunk)
+    pending = [(i * gap, Request(uid=i,
+                                 prompt=rng.integers(
+                                     0, _PROP_CFG.vocab,
+                                     size=n).astype(np.int32),
+                                 max_new_tokens=3))
+               for i, n in enumerate(arrivals)]
+    done, tenure, step = [], {}, 0
+    while pending or eng.live or eng._prefilling or eng.admission:
+        for due, r in [p for p in pending if p[0] <= step]:
+            assert eng.submit(r).accepted
+        pending = [p for p in pending if p[0] > step]
+        done += eng.step()
+        step += 1
+        assert step < 500, "scheduler wedged"
+        # -- invariants, observed every tick --
+        live, pref = set(eng.live), set(eng._prefilling)
+        assert not (live & pref), "slot both live and prefilling"
+        uids = [r.uid for r in eng.live.values()]
+        uids += [p.req.uid for p in eng._prefilling.values()]
+        assert len(uids) == len(set(uids)), "request in two slots"
+        for slot, p in eng._prefilling.items():
+            key = (slot, p.req.uid)
+            tenure[key] = tenure.get(key, 0) + 1
+            bound = math.ceil(p.length / chunk)
+            assert tenure[key] < bound + 1, (
+                f"uid {p.req.uid} in-flight {tenure[key]} ticks, "
+                f"bound ceil({p.length}/{chunk}) = {bound}")
+            assert p.done >= min(tenure[key] * chunk, p.length - 1)
+    assert eng.n_starved_ticks == 0
+    assert sorted(r.uid for r in done) == sorted(
+        i for i in range(len(arrivals)))
+    assert all(len(r.out_tokens) == 3 for r in done)
+
+
+@settings(max_examples=6, deadline=None)
+@given(chunk=st.integers(min_value=1, max_value=5),
+       tails=st.lists(st.integers(min_value=1, max_value=6),
+                      min_size=2, max_size=5))
+def test_property_paged_refcounts_conserved(chunk, tails):
+    """Randomized paged serving with shared prefixes and chunked
+    prefill: when everything retires, every page refcount is back to
+    zero, the free list holds every non-null page, and the table is
+    clean — no leak, no double-free, regardless of interleaving."""
+    params = _params(_PROP_CFG)
+    rng = np.random.default_rng(chunk * 31 + sum(tails))
+    prefix = rng.integers(0, _PROP_CFG.vocab, size=8).astype(np.int32)
+    eng = ServingEngine(_PROP_CFG, params, slots=3, max_len=16,
+                        use_program=True, impl="reference",
+                        paged=True, page_size=4, chunk_size=chunk)
+    reqs = [Request(uid=i,
+                    prompt=np.concatenate(
+                        [prefix, rng.integers(0, _PROP_CFG.vocab,
+                                              size=n).astype(np.int32)]),
+                    max_new_tokens=2 + i % 3)
+            for i, n in enumerate(tails)]
+    done = _drain(eng, reqs[:1], stagger_after=4, late=reqs[1:])
+    assert sorted(r.uid for r in done) == list(range(len(tails)))
+    pool = eng._pool
+    assert pool.used_pages == 0
+    assert np.all(pool.refcount == 0)
+    assert sorted(pool.free) == list(range(1, pool.plan.n_pages))
+    assert np.all(pool.table == 0)
+
+
+# --- speculative decode ------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 3, 9])
+def test_spec_decode_token_identical(k):
+    """Greedy serving with self-draft speculation on is token-identical
+    to speculation off — for k of 1, a mid burst, and a k larger than
+    both the remaining token budget and a request's whole stream."""
+    cfg = _cfg(n_layers=2)
+    params = _params(cfg)
+    rng = np.random.default_rng(19)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (4, 9)]
+
+    def run(**kw):
+        eng = ServingEngine(cfg, params, slots=2, max_len=32,
+                            use_program=True, impl="reference", **kw)
+        done = _drain(eng, [
+            Request(uid=0, prompt=prompts[0], max_new_tokens=10),
+            Request(uid=1, prompt=prompts[1], max_new_tokens=3)])
+        return _streams(done), eng
+
+    base, _ = run()
+    got, eng = run(spec_k=k)
+    assert got == base
+    assert eng.n_spec_proposed > 0
+    assert eng.n_spec_accepted > 0       # self-draft: bursts accept
+    assert eng.n_starved_ticks == 0
+
+
+def test_spec_decode_disagreeing_draft_rolls_back():
+    """A draft with different weights (same arch) disagrees with the
+    target: rollbacks fire, yet the emitted streams stay exactly the
+    no-speculation greedy streams — acceptance only ever shortens the
+    burst, never changes a token."""
+    cfg = _cfg(n_layers=2)
+    params = _params(cfg)
+    bad = init_params(transformer.param_defs(cfg), jax.random.PRNGKey(9))
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 7)]
+
+    def run(**kw):
+        eng = ServingEngine(cfg, params, slots=2, max_len=32,
+                            use_program=True, impl="reference", **kw)
+        done = _drain(eng, [Request(uid=i, prompt=p, max_new_tokens=8)
+                            for i, p in enumerate(prompts)])
+        return _streams(done), eng
+
+    base, _ = run()
+    got, eng = run(spec_k=4, draft_cfg=cfg, draft_params=bad)
+    assert got == base
+    assert eng.n_spec_rollbacks > 0
+    assert eng.n_spec_proposed >= eng.n_spec_accepted
+
+
+def test_spec_decode_composes_with_chunked_prefill():
+    cfg = _cfg(n_layers=2)
+    params = _params(cfg)
+    rng = np.random.default_rng(29)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (11, 3, 6)]
+
+    def run(**kw):
+        eng = ServingEngine(cfg, params, slots=2, max_len=32,
+                            use_program=True, impl="reference", **kw)
+        done = _drain(eng, [Request(uid=i, prompt=p, max_new_tokens=6)
+                            for i, p in enumerate(prompts)])
+        return _streams(done), eng
+
+    base, _ = run()
+    got, eng = run(chunk_size=4, spec_k=3)
+    assert got == base
+    assert eng.n_prefill_chunks > 0 and eng.n_spec_proposed > 0
+    assert eng.n_starved_ticks == 0
+
+
+def test_spec_decode_gates():
+    """Unsupported speculation combos fail loudly at construction:
+    paged KV, sampling, a draft with a different vocab, windowed
+    attention, and a separate draft config without weights."""
+    cfg = _cfg(n_layers=1)
+    params = _params(cfg)
+    with pytest.raises(NotImplementedError, match="paged"):
+        ServingEngine(cfg, params, slots=2, max_len=16,
+                      use_program=True, impl="reference",
+                      paged=True, page_size=4, spec_k=2)
+    with pytest.raises(ValueError, match="greedy"):
+        ServingEngine(cfg, params, slots=2, max_len=16,
+                      use_program=True, impl="reference",
+                      greedy=False, spec_k=2)
+    with pytest.raises(ValueError, match="draft_params"):
+        ServingEngine(cfg, params, slots=2, max_len=16,
+                      use_program=True, impl="reference",
+                      spec_k=2, draft_cfg=_cfg(n_layers=2))
+    with pytest.raises(ValueError, match="vocab"):
+        transformer.compile_draft_pair(
+            cfg, dataclasses.replace(cfg, vocab=cfg.vocab * 2),
+            slots=2, max_len=16)
+    with pytest.raises(NotImplementedError, match="windowed"):
+        transformer.compile_draft_pair(
+            _cfg(n_layers=1, attn_window=8), cfg, slots=2, max_len=16)
+    # chunking / speculation demand the stateful Program path
+    with pytest.raises(ValueError, match="Program path"):
+        ServingEngine(cfg, params, slots=2, max_len=16, chunk_size=4)
+    # int8 paged pages cannot take row-granular chunk writes
+    with pytest.raises(ValueError, match="int8"):
+        ServingEngine(cfg, params, slots=2, max_len=16,
+                      use_program=True, impl="reference", paged=True,
+                      page_size=4, kv_quant="int8", chunk_size=4)
+
+
+# --- admission backpressure --------------------------------------------------------
+def test_bounded_queue_rejects_with_typed_ticket():
+    cfg = _cfg(n_layers=1)
+    eng = ServingEngine(cfg, _params(cfg), slots=2, max_len=16,
+                        use_program=True, impl="reference",
+                        queue_capacity=3, chunk_size=4)
+    p = np.asarray([1, 2, 3], np.int32)
+    tickets = [eng.submit(Request(uid=i, prompt=p, max_new_tokens=2))
+               for i in range(4)]
+    assert [t.accepted for t in tickets] == [True, True, True, False]
+    assert [t.position for t in tickets[:3]] == [0, 1, 2]
+    assert tickets[3].reason == "queue_full"
+    assert eng.admission.n_rejected == 1
+    # the accepted three still serve to completion
+    done = eng.run_until_drained()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert eng.admission.blocked["no_free_slot"] > 0
+
+
+def test_queue_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        AdmissionQueue(0)
+
+
+def test_exhaustion_requeue_keeps_fifo_order():
+    """Pool-exhaustion requeue goes to the *head*: while a big request
+    waits for pages, a later small request that would fit must not
+    overtake it (the starvation bug this PR fixes)."""
+    cfg = _cfg(n_layers=1)
+    params = _params(cfg)
+    rng = np.random.default_rng(31)
+    big = rng.integers(0, cfg.vocab, size=12).astype(np.int32)
+    small = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+    # 5 usable pages at page_size=8: two 12-token residents take 4,
+    # leaving 1 — enough for `small` (1 page), not for `big` (2).
+    eng = ServingEngine(cfg, params, slots=3, max_len=16,
+                        use_program=True, impl="reference",
+                        paged=True, page_size=8, page_pool=6)
+    eng.submit(Request(uid=0, prompt=big, max_new_tokens=4))
+    eng.submit(Request(uid=1, prompt=big.copy() + 1, max_new_tokens=4))
+    done = eng.step()
+    assert set(r.uid for r in eng.live.values()) == {0, 1}
+    eng.submit(Request(uid=2, prompt=big.copy() + 2, max_new_tokens=3))
+    eng.submit(Request(uid=3, prompt=small, max_new_tokens=3))
+    first_live: dict[int, int] = {}
+    step = 1
+    while len(done) < 4:
+        new = eng.step()
+        done += new
+        step += 1
+        for r in list(eng.live.values()) + new:
+            first_live.setdefault(r.uid, step)
+        assert step < 100
+    assert eng.admission.n_requeued > 0
+    assert eng.admission.blocked["pages_exhausted"] > 0
+    # uid 2 (blocked on pages) went live no later than uid 3
+    assert first_live[2] <= first_live[3]
+    assert eng._pool.used_pages == 0
