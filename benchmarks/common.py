@@ -8,6 +8,18 @@ import jax
 # Rows collected by emit() for the --json sidecar (benchmarks/run.py).
 ROWS: list[dict] = []
 
+# Final obs.MetricsRegistry snapshot from the last serving-bench engine
+# (set by set_metrics_snapshot); embedded in the sidecar so a bench run
+# ships its own metrics plane next to the timing rows.
+METRICS: dict | None = None
+
+
+def set_metrics_snapshot(snapshot: dict) -> None:
+    """Attach a metrics-registry snapshot (``obs.MetricsRegistry
+    .snapshot()``) to the next ``write_json`` sidecar."""
+    global METRICS
+    METRICS = snapshot
+
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time (us) of a jitted call."""
@@ -59,5 +71,8 @@ def write_json(path: str) -> None:
     header — the machine-readable sidecar to the CSV stream (CI uploads
     it as an artifact so regressions are diffable across runs, and the
     meta says *which* runs are comparable)."""
+    doc = {"meta": _sidecar_meta(), "rows": ROWS}
+    if METRICS is not None:
+        doc["metrics"] = METRICS
     with open(path, "w") as f:
-        json.dump({"meta": _sidecar_meta(), "rows": ROWS}, f, indent=2)
+        json.dump(doc, f, indent=2)

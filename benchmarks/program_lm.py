@@ -30,11 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import REGISTRY
 from repro.models import init_params, transformer
 from repro.runtime import executor
 
-from .common import emit, time_call
+from .common import emit, set_metrics_snapshot, time_call
 
 SMOKE = False          # set by benchmarks.run --smoke
 
@@ -295,13 +296,21 @@ def run_serving_bench():
     params = init_params(transformer.param_defs(cfg),
                          jax.random.PRNGKey(0))
 
+    # Per-tick latency lands on an obs.Histogram — the same fixed-
+    # bucket type the serving engine's tick_ms metric uses — instead of
+    # a private sample list + np.percentile.  Fine geometric buckets
+    # (factor 1.05) keep the interpolated percentile within ~5% of the
+    # exact sample percentile, tight enough for the p99_gain ratio.
+    tick_buckets = obs.exp_buckets(1e-6, 30.0, factor=1.05)
+
     def drive(chunk_size, load):
-        """Run the scenario; per-tick wall times + tokens emitted."""
+        """Run the scenario; per-tick latency histogram + tokens."""
         eng = ServingEngine(cfg, params, slots=slots, max_len=max_len,
                             use_program=True, impl="reference",
                             chunk_size=chunk_size)
         rng = np.random.default_rng(0)
-        uid, times = 0, []
+        uid = 0
+        h = obs.Histogram(tick_buckets)
 
         def submit(n_tokens):
             nonlocal uid
@@ -321,7 +330,7 @@ def run_serving_bench():
                     submit(4 * max_len)
             t0 = time.perf_counter()
             done += eng.step()
-            times.append(time.perf_counter() - t0)
+            h.observe(time.perf_counter() - t0)
             tick += 1
             if tick > 12 and not (eng.live or eng.admission
                                   or eng._prefilling):
@@ -329,22 +338,27 @@ def run_serving_bench():
             assert tick < 600
         assert eng.n_starved_ticks == 0
         tokens = sum(len(r.out_tokens) for r in done)
-        return np.asarray(times), tokens
+        return h, tokens, eng
 
+    eng = None
     for load in loads:
         drive(chunk, load)                      # jit warm (both paths
         drive(None, load)                       # + all chunk widths)
-        tw, nw = drive(None, load)
-        tc, nc = drive(chunk, load)
-        tps_w, tps_c = nw / tw.sum(), nc / tc.sum()
-        p50w, p99w = np.percentile(tw, [50, 99]) * 1e6
-        p50c, p99c = np.percentile(tc, [50, 99]) * 1e6
+        hw, nw, _ = drive(None, load)
+        hc, nc, eng = drive(chunk, load)
+        tps_w, tps_c = nw / hw.sum, nc / hc.sum
+        p50w, p99w = hw.percentile(50) * 1e6, hw.percentile(99) * 1e6
+        p50c, p99c = hc.percentile(50) * 1e6, hc.percentile(99) * 1e6
         emit(f"program_lm/serving/{cfg.name}/load{load}/whole_prefill",
              p99w, f"tps={tps_w:.1f};p50_us={p50w:.0f};p99_us={p99w:.0f}")
         emit(f"program_lm/serving/{cfg.name}/load{load}/chunk{chunk}",
              p99c, f"tps={tps_c:.1f};p50_us={p50c:.0f};p99_us={p99c:.0f};"
              f"p99_gain={p99w / max(p99c, 1e-9):.2f}x;"
              f"tps_ratio={tps_c / max(tps_w, 1e-9):.2f}")
+    if eng is not None:
+        # The last driven engine's registry snapshot rides along in the
+        # --json sidecar (TTFT/ITL/tick histograms + serving counters).
+        set_metrics_snapshot(eng.obs.registry.snapshot())
 
 
 def run():

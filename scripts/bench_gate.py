@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: fresh sidecar vs checked-in baseline.
+
+    PYTHONPATH=src python -m benchmarks.run --smoke --json /tmp/fresh.json
+    python scripts/bench_gate.py --fresh /tmp/fresh.json
+
+Compares a freshly produced ``benchmarks/run.py --json`` sidecar
+against the committed baseline (``benchmarks/baselines/
+BENCH_program.json``) and exits non-zero on regression, so CI catches
+a suite that silently broke or slowed down.
+
+Three checks, strictest first:
+
+1. **No errored suites** — any ``*/ERROR`` row in the fresh sidecar
+   fails the gate outright (an exception inside a suite emits one; the
+   runner itself still exits 0 to keep the other suites running).
+2. **Row presence** — every baseline row name must appear in the fresh
+   run: a benchmark that stopped emitting is a silent coverage loss,
+   not a pass.  (New rows in the fresh run are fine — they become
+   baseline on the next refresh.)
+3. **Per-row timing** — only when both sidecars carry the same
+   ``hw_fingerprint`` (hardware model + physical backend): absolute
+   microseconds are not comparable across machines, so a mismatch
+   skips this check (loudly) rather than failing on noise.  Timing
+   rows are compared on *speed-normalized* ratios: each row's
+   fresh/baseline ratio is divided by the median ratio across all
+   rows, which cancels uniform machine-speed drift; a row is a
+   regression when its normalized ratio exceeds ``--tolerance``
+   (default 3.0x — generous because smoke runs on shared CI runners
+   are noisy; the gate is for order-of-magnitude breakage, e.g. a
+   fast path silently falling back, not for 10% perf bookkeeping).
+
+Refresh the baseline after intentional perf changes:
+
+    PYTHONPATH=src python -m benchmarks.run --smoke \\
+        --json benchmarks/baselines/BENCH_program.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baselines/BENCH_program.json"
+
+
+def _rows_by_name(doc: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def gate(baseline: dict, fresh: dict, tolerance: float) -> list[str]:
+    """Returns the list of failure messages (empty = gate passes)."""
+    failures: list[str] = []
+    base_rows = _rows_by_name(baseline)
+    fresh_rows = _rows_by_name(fresh)
+
+    errored = [n for n in fresh_rows if n.endswith("/ERROR")]
+    for n in errored:
+        failures.append(f"suite errored: {n} "
+                        f"({fresh_rows[n].get('derived', '')})")
+
+    missing = [n for n in base_rows
+               if n not in fresh_rows and not n.endswith("/ERROR")]
+    for n in missing:
+        failures.append(f"baseline row missing from fresh run: {n}")
+
+    base_fp = baseline.get("meta", {}).get("hw_fingerprint")
+    fresh_fp = fresh.get("meta", {}).get("hw_fingerprint")
+    if base_fp != fresh_fp:
+        print(f"hw_fingerprint mismatch (baseline {base_fp!r} vs fresh "
+              f"{fresh_fp!r}): skipping timing comparisons, structural "
+              f"checks only")
+        return failures
+
+    # Speed-normalized per-row comparison (same fingerprint): cancel
+    # uniform machine drift with the median ratio, then apply the
+    # per-row tolerance.
+    ratios: dict[str, float] = {}
+    for n, b in base_rows.items():
+        f = fresh_rows.get(n)
+        if f is None or b["us_per_call"] <= 0 or f["us_per_call"] <= 0:
+            continue                  # modeled/info rows carry 0.0
+        ratios[n] = f["us_per_call"] / b["us_per_call"]
+    if not ratios:
+        print("no comparable timing rows; structural checks only")
+        return failures
+    med = sorted(ratios.values())[len(ratios) // 2]
+    print(f"{len(ratios)} timing rows, median fresh/baseline ratio "
+          f"{med:.2f}, per-row tolerance {tolerance:.1f}x")
+    for n, r in sorted(ratios.items()):
+        norm = r / max(med, 1e-9)
+        if norm > tolerance:
+            failures.append(
+                f"timing regression: {n} — "
+                f"{fresh_rows[n]['us_per_call']:.1f}us vs baseline "
+                f"{base_rows[n]['us_per_call']:.1f}us "
+                f"({norm:.2f}x over the run median, limit "
+                f"{tolerance:.1f}x)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline sidecar")
+    ap.add_argument("--fresh", required=True,
+                    help="sidecar from the run under test "
+                         "(benchmarks/run.py --json PATH)")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="max per-row fresh/baseline ratio after "
+                         "median normalization")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    failures = gate(baseline, fresh, args.tolerance)
+    if failures:
+        print(f"\nbench gate FAILED ({len(failures)} problem(s)):")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,7 +47,49 @@ import numpy as np
 
 from ..configs import CNN_REGISTRY, get_config
 from ..models import get_model, init_params
+from ..obs import Observability
 from ..serving import Request, ServingEngine
+
+
+def _build_obs(args) -> Observability:
+    return Observability(flight_path=args.flight_out,
+                         sample_ops_every=args.sample_ops)
+
+
+def _write_artifacts(args, obs: Observability) -> None:
+    """Serialize the metrics plane: a JSON snapshot at --metrics-out
+    plus the Prometheus text exposition next to it (``.prom``), and
+    flush/close the flight recorder.  Called on *every* exit path —
+    including the --program exit-code-2 fallback, so a failed run is
+    diagnosable from its artifacts."""
+    obs.close()
+    if not args.metrics_out:
+        return
+    with open(args.metrics_out, "w") as f:
+        f.write(obs.registry.to_json(arch=args.arch, argv=sys.argv[1:]))
+    prom = args.metrics_out + ".prom"
+    with open(prom, "w") as f:
+        f.write(obs.registry.prometheus_text())
+    print(f"metrics snapshot -> {args.metrics_out} (+ {prom})")
+    if args.flight_out:
+        print(f"flight record -> {args.flight_out}")
+
+
+def _drain(eng, args) -> list:
+    """run_until_drained with the periodic console dashboard: every
+    --dash-every ticks one line of engine vitals, read off the same
+    registry the artifacts serialize."""
+    if not args.dash_every:
+        return eng.run_until_drained()
+    done = []
+    for _ in range(10_000):
+        done += eng.step()
+        if eng._tick_no % args.dash_every == 0:
+            print(eng.dashboard_line())
+        if (not eng.live and not eng.queue and not eng.admission
+                and not eng._prefilling):
+            break
+    return done
 
 
 def _serve_cnn(args) -> None:
@@ -60,7 +102,8 @@ def _serve_cnn(args) -> None:
         from ..checkpoint import restore_checkpoint
         (params, _), step = restore_checkpoint(args.ckpt, (params, {}))
         print(f"restored params from step {step}")
-    eng = ServingEngine(cfg, params, slots=args.slots)
+    obs = _build_obs(args)
+    eng = ServingEngine(cfg, params, slots=args.slots, obs=obs)
     print(eng.program.listing())
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -74,6 +117,7 @@ def _serve_cnn(args) -> None:
           f"({len(done) / dt:.1f} img/s)")
     for r in sorted(done, key=lambda r: r.uid)[:4]:
         print(f"  req {r.uid}: class {r.out_tokens[0]}")
+    _write_artifacts(args, obs)
 
 
 def main(argv=None) -> None:
@@ -127,6 +171,24 @@ def main(argv=None) -> None:
                     help="inject one prompt of this length two ticks "
                          "into the run (the mid-stream long-prompt "
                          "scenario the chunked-prefill CI smoke pins)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final metrics-registry snapshot as "
+                         "JSON to PATH and the Prometheus text "
+                         "exposition to PATH.prom (written on every "
+                         "exit path, including --program fallback)")
+    ap.add_argument("--flight-out", default=None, metavar="PATH",
+                    help="record the JSONL flight record (typed "
+                         "per-request lifecycle events + per-tick "
+                         "snapshots) to PATH; replay offline with "
+                         "repro.obs.replay_summary")
+    ap.add_argument("--sample-ops", type=int, default=0, metavar="N",
+                    help="time one decode tick per N through the "
+                         "Stage-7 trace recorder (op_time_us{kind} "
+                         "histograms + op_sample flight events); "
+                         "0 = off")
+    ap.add_argument("--dash-every", type=int, default=0, metavar="N",
+                    help="print a one-line console dashboard every N "
+                         "engine ticks; 0 = off")
     args = ap.parse_args(argv)
     if args.paged and not args.program:
         print("error: --paged requires --program (the paged plan only "
@@ -160,17 +222,21 @@ def main(argv=None) -> None:
 
     # The engine compiles the (prefill, decode) Program pair itself and
     # warns (once, at construction) when a family has no lowering.
+    obs = _build_obs(args)
     eng = ServingEngine(cfg, params, slots=args.slots,
                         max_len=args.max_len, use_program=args.program,
                         paged=args.paged, page_size=args.page_size,
                         kv_quant=args.kv_quant,
                         chunk_size=args.chunk_size,
                         spec_k=args.spec_decode, draft_cfg=draft_cfg,
-                        draft_params=draft_params)
+                        draft_params=draft_params, obs=obs)
     if args.program and not eng.on_program_path:
         # The user *asked* for the program path; a silent legacy-loop
         # fallback would misreport what was measured.  The engine's
-        # fallback_reason names the specific blocker.
+        # fallback_reason names the specific blocker — and the metrics
+        # / flight artifacts carry the structured twin (the fallback
+        # event + serving_fallback{fallback_reason} gauge).
+        _write_artifacts(args, obs)
         print(f"error: --program requested but {cfg.name} has no "
               f"decode-Program lowering "
               f"({eng.fallback_reason or 'unknown reason'})",
@@ -201,7 +267,7 @@ def main(argv=None) -> None:
             prompt=rng.integers(0, cfg.vocab,
                                 size=args.long_prompt).astype(np.int32),
             max_new_tokens=args.max_new))
-    done += eng.run_until_drained()
+    done += _drain(eng, args)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
@@ -228,6 +294,7 @@ def main(argv=None) -> None:
               f"pool_free={eng._pool.free_pages}")
     for r in sorted(done, key=lambda r: r.uid)[:4]:
         print(f"  req {r.uid}: {list(r.prompt)} -> {r.out_tokens}")
+    _write_artifacts(args, obs)
 
 
 if __name__ == "__main__":

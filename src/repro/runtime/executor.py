@@ -66,7 +66,7 @@ __all__ = ["run", "jitted_runner", "ProgramState", "init_program_state",
            "jitted_prefill_runner", "jitted_chunk_runner",
            "jitted_decode_runner", "PagePool", "paged_pool_regions",
            "sync_page_table", "apply_page_copies", "TraceRecord",
-           "ExecutorTrace", "trace_program"]
+           "ExecutorTrace", "trace_program", "OpTimingSampler"]
 
 
 def _param(params, key: str | None):
@@ -1201,3 +1201,70 @@ def trace_program(program: Program, params, x: jax.Array, *,
             measured_time_s=_time_thunk(thunk, repeats) if measure else None,
             repeats=repeats if measure else 0, extras=extras))
     return trace
+
+
+class OpTimingSampler:
+    """Cheap sampled op-timing for serving ticks (Stage 8).
+
+    Full trace mode (``trace_program`` with repeats) is far too heavy
+    for a serving loop, but *sampling* it is not: every ``every``-th
+    ``tick()`` call runs one eager traced execution of the decode
+    Program against the live ``ProgramState`` — same ``TraceRecord``
+    schema as Stage 7, single repeat — and attributes the measured
+    wallclock to op kinds on the metrics plane
+    (``op_time_us{kind=...}`` histograms) plus one ``op_sample``
+    flight event per op.  The other ``every - 1`` ticks cost exactly
+    one integer increment.
+
+    The eager walk is *read-only* with respect to the engine:
+    ``trace_program`` copies the cache dict and produces new arrays,
+    so the donated state buffers the jitted tick consumes afterwards
+    are untouched — which is also why the engine samples *before* its
+    jitted decode call (after it, donation may have invalidated the
+    buffers the tracer would read).
+    """
+
+    def __init__(self, every: int, registry=None, flight=None, *,
+                 impl: str = "auto", interpret: bool | None = None,
+                 repeats: int = 1):
+        if every < 0:
+            raise ValueError(f"sample cadence must be >= 0, got {every}")
+        self.every = every
+        self.registry = registry
+        self.flight = flight
+        self.impl = impl
+        self.interpret = interpret
+        self.repeats = repeats
+        self.n_calls = 0
+        self.n_samples = 0
+
+    def tick(self, program: Program, params, tokens, *,
+             state: ProgramState | None = None,
+             mask=None) -> ExecutorTrace | None:
+        """Count one tick; on the sampled ones, trace-and-time the
+        Program and feed the records to the metrics/flight planes.
+        Returns the trace on sampled ticks, None otherwise."""
+        if not self.every:
+            return None
+        self.n_calls += 1
+        if self.n_calls % self.every:
+            return None
+        trace = trace_program(program, params, tokens, impl=self.impl,
+                              interpret=self.interpret,
+                              repeats=self.repeats, measure=True,
+                              state=state, mask=mask)
+        self.n_samples += 1
+        for rec in trace.records:
+            if self.registry is not None:
+                self.registry.histogram(
+                    "op_time_us",
+                    help="sampled per-op executor wallclock",
+                    kind=rec.kind).observe(rec.measured_time_s * 1e6)
+            if self.flight is not None:
+                self.flight.event(
+                    "op_sample", kind=rec.kind, name=rec.name,
+                    index=rec.index, flops=rec.flops,
+                    traffic_bytes=rec.traffic_bytes,
+                    modeled_time_s=rec.modeled_time_s,
+                    measured_time_s=rec.measured_time_s)
+        return trace

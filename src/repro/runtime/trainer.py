@@ -13,7 +13,10 @@ tests/test_runtime.py):
   times; a step slower than ``straggler_factor`` x the trailing median
   raises a logged anomaly (on multi-host deployments this is the signal
   to evict the slow host and re-shard — here it feeds the log + metrics
-  so tests can assert on it);
+  so tests can assert on it).  The median comes off an
+  ``obs.Histogram`` over the window — the same fixed-bucket type the
+  serving metrics plane uses — and a cumulative ``step_time_s``
+  histogram rides in ``metrics_history`` (p50/p99 per log record);
 * **NaN containment** — non-finite loss skips the update (params/opt
   state keep their donated buffers via a no-op update) and counts
   toward an abort threshold.
@@ -22,7 +25,6 @@ from __future__ import annotations
 
 import logging
 import signal
-import statistics
 import time
 from dataclasses import dataclass, field
 
@@ -31,10 +33,15 @@ import numpy as np
 
 from ..checkpoint.store import AsyncCheckpointer, latest_step, \
     restore_checkpoint
+from ..obs import Histogram, exp_buckets
 
 __all__ = ["TrainerConfig", "Trainer"]
 
 log = logging.getLogger("repro.trainer")
+
+# Fine geometric buckets (factor 1.1 => percentile error <= 10%) for
+# host-side step times: sub-100us jitted steps up to 20-minute stalls.
+_STEP_TIME_BUCKETS = exp_buckets(1e-5, 1200.0, factor=1.1)
 
 
 @dataclass
@@ -61,6 +68,9 @@ class Trainer:
         self._times: list[float] = []
         self.anomalies: list[dict] = []
         self.metrics_history: list[dict] = []
+        # Cumulative step-time distribution (whole run, never evicted)
+        # — the metrics-plane view next to the trailing window above.
+        self.step_time_hist = Histogram(_STEP_TIME_BUCKETS)
 
     # -- signals ---------------------------------------------------------------
     def _install_signals(self):
@@ -78,8 +88,16 @@ class Trainer:
         self._times.append(dt)
         if len(self._times) > self.cfg.straggler_window:
             self._times.pop(0)
+        self.step_time_hist.observe(dt)
         if len(self._times) >= 8:
-            med = statistics.median(self._times[:-1])
+            # Trailing-window median through the shared Histogram type
+            # (<= straggler_window observes per step — negligible next
+            # to the jitted step).  Bucket factor 1.1 bounds the
+            # percentile error at ~10%, far inside straggler_factor.
+            h = Histogram(_STEP_TIME_BUCKETS)
+            for t in self._times[:-1]:
+                h.observe(t)
+            med = h.percentile(50)
             if dt > self.cfg.straggler_factor * med:
                 anomaly = {"step": step, "dt": dt, "median": med,
                            "kind": "straggler"}
@@ -120,7 +138,9 @@ class Trainer:
                     raise FloatingPointError(
                         f"{nan_steps} non-finite steps; aborting")
             if step % self.cfg.log_every == 0:
-                rec = {"step": step, "loss": loss, "dt_s": dt}
+                rec = {"step": step, "loss": loss, "dt_s": dt,
+                       "dt_p50_s": self.step_time_hist.percentile(50),
+                       "dt_p99_s": self.step_time_hist.percentile(99)}
                 rec.update({k: float(v) for k, v in metrics.items()
                             if k != "loss"})
                 self.metrics_history.append(rec)

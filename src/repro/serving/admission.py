@@ -18,12 +18,21 @@ Backpressure states (``AdmissionTicket.reason`` / ``last_blocked``):
 * ``no_free_slot``     — queued; every slot is live or mid-prefill.
 * ``pages_exhausted``  — queued at head; the §5.1 page pool cannot hold
   the prompt's private pages until a retirement frees some.
+
+All accounting lives on an ``obs.MetricsRegistry`` —
+``admission_rejected_total`` / ``admission_requeued_total`` /
+``admission_blocked_total{reason=...}`` — shared with the engine that
+owns this queue (one metrics plane per serving process); the legacy
+``n_rejected`` / ``n_requeued`` / ``blocked`` attributes are kept as
+read-through views so existing callers and tests see the same numbers.
 """
 from __future__ import annotations
 
 import collections
 import threading
 from dataclasses import dataclass
+
+from ..obs import MetricsRegistry
 
 __all__ = ["AdmissionQueue", "AdmissionTicket", "QUEUE_FULL",
            "NO_FREE_SLOT", "PAGES_EXHAUSTED"]
@@ -53,24 +62,57 @@ class AdmissionQueue:
     than parking the producer, which keeps backpressure visible to the
     caller instead of hidden in a blocked thread."""
 
-    def __init__(self, capacity: int | None = None):
+    def __init__(self, capacity: int | None = None,
+                 registry: MetricsRegistry | None = None):
         if capacity is not None and capacity < 1:
             raise ValueError(f"queue capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self._dq: collections.deque = collections.deque()
         self._lock = threading.Lock()
-        # Typed-backpressure accounting (exposed via launch/serve.py).
-        self.n_rejected = 0                # queue_full bounces at submit
-        self.n_requeued = 0                # head requeues (pages_exhausted)
-        self.blocked: collections.Counter = collections.Counter()
+        # Typed-backpressure accounting on the metrics plane (the
+        # engine passes its registry; a standalone queue gets its own).
+        self._registry = registry if registry is not None \
+            else MetricsRegistry()
+        self._c_rejected = self._registry.counter(
+            "admission_rejected_total",
+            help="queue_full bounces at submit")
+        self._c_requeued = self._registry.counter(
+            "admission_requeued_total",
+            help="head requeues (pages_exhausted)")
+        self._c_blocked: dict = {}
         self.last_blocked: str | None = None
+
+    def _blocked_counter(self, reason: str):
+        c = self._c_blocked.get(reason)
+        if c is None:
+            c = self._registry.counter(
+                "admission_blocked_total",
+                help="backpressure stalls by typed reason",
+                reason=reason)
+            self._c_blocked[reason] = c
+        return c
+
+    @property
+    def n_rejected(self) -> int:
+        return int(self._c_rejected.value)
+
+    @property
+    def n_requeued(self) -> int:
+        return int(self._c_requeued.value)
+
+    @property
+    def blocked(self) -> collections.Counter:
+        """Read-through view of ``admission_blocked_total`` by reason
+        (a ``collections.Counter``, so absent reasons read as 0)."""
+        return collections.Counter(
+            {r: int(c.value) for r, c in self._c_blocked.items()})
 
     def submit(self, req) -> AdmissionTicket:
         with self._lock:
             if (self.capacity is not None
                     and len(self._dq) >= self.capacity):
-                self.n_rejected += 1
-                self.blocked[QUEUE_FULL] += 1
+                self._c_rejected.inc()
+                self._blocked_counter(QUEUE_FULL).inc()
                 self.last_blocked = QUEUE_FULL
                 return AdmissionTicket(False, QUEUE_FULL)
             self._dq.append(req)
@@ -87,15 +129,15 @@ class AdmissionQueue:
         (no overtaking), and the typed ``reason`` is recorded."""
         with self._lock:
             self._dq.appendleft(req)
-            self.n_requeued += 1
-            self.blocked[reason] += 1
+            self._c_requeued.inc()
+            self._blocked_counter(reason).inc()
             self.last_blocked = reason
 
     def note_blocked(self, reason: str) -> None:
         """Record a backpressure stall that did not dequeue anything
         (e.g. ``no_free_slot`` observed before a pop)."""
         with self._lock:
-            self.blocked[reason] += 1
+            self._blocked_counter(reason).inc()
             self.last_blocked = reason
 
     @property

@@ -64,6 +64,19 @@ The tick loop itself is throughput-grade (see docs/ARCHITECTURE.md,
   both states' lengths.  Greedy output is token-identical to
   speculation off (``n_spec_proposed`` / ``n_spec_accepted`` /
   ``n_spec_rollbacks`` count the wins next to the prefill metrics).
+
+**Observability** (``obs=``, docs Stage 8): every engine reports
+through one ``obs.Observability`` bundle — the ``n_*`` counters above
+live on its ``MetricsRegistry`` (the attributes are read-through
+properties), per-tick wallclock and TTFT / inter-token latency land in
+fixed-bucket histograms (``tick_ms`` / ``ttft_ms`` / ``itl_ms``), and
+when a flight recorder is attached every request's lifecycle — enqueue
+→ admission ticket → prefill chunks → first token → per-token → spec
+accept/rollback → COW fork → release — plus a per-tick engine snapshot
+streams to JSONL (``obs.flight.replay_summary`` reconstructs the token
+streams exactly).  The default bundle is counters-only: no recorder,
+no op sampling, no extra device syncs — a bare engine pays a few float
+adds per tick for its metrics plane.
 """
 from __future__ import annotations
 
@@ -76,6 +89,7 @@ import numpy as np
 
 from ..configs.base import ArchConfig, CNNConfig
 from ..models import get_model
+from ..obs import Observability
 from . import admission as adm
 from .admission import AdmissionQueue, AdmissionTicket
 
@@ -114,7 +128,8 @@ class ServingEngine:
                  kv_quant: str | None = None,
                  chunk_size: int | None = None,
                  queue_capacity: int | None = None,
-                 spec_k: int = 0, draft_cfg=None, draft_params=None):
+                 spec_k: int = 0, draft_cfg=None, draft_params=None,
+                 obs: Observability | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -124,44 +139,30 @@ class ServingEngine:
         self.greedy = greedy
         self.live: dict[int, Request] = {}       # slot -> request
         self.queue: list[Request] = []           # legacy/CNN paths only
+        # One metrics plane + flight recorder per engine (Stage 8).
+        # The default bundle is counters-only (no recorder, no op
+        # sampling); callers that want the flight record / Prometheus
+        # snapshot / sampled op timings pass their own bundle.
+        self.obs = obs if obs is not None else Observability()
+        self._init_metrics()
         # LM-program requests enter through the bounded admission queue
         # (typed backpressure, head requeue); ``submit`` routes there.
-        self.admission = AdmissionQueue(queue_capacity)
+        # It shares the engine's registry: admission_* and serving_*
+        # metrics land in one snapshot.
+        self.admission = AdmissionQueue(queue_capacity,
+                                        registry=self.obs.registry)
         self.chunk_size = chunk_size
         self.spec_k = spec_k
         self._spec = False
         self._prefilling: dict[int, _InFlightPrefill] = {}
         self._lm_program = False
+        self._tick_no = 0
+        self._op_sampler = None
         # Why an LM config requested on the program path fell back to
         # the legacy decode loop (None = no fallback happened); callers
         # that *require* the program path (launch/serve.py --program)
         # check this instead of re-parsing the warning.
         self.fallback_reason: str | None = None
-        # Stateful-program counters (exposed for benchmarks / CI): the
-        # program path prefills each request exactly once at admission,
-        # so n_prefill_recomputes stays 0 by construction.
-        self.n_prefills = 0
-        self.n_prefill_recomputes = 0
-        self.n_decode_ticks = 0
-        # Chunked-prefill / tick-liveness counters: chunk executor
-        # calls advance every in-flight prefill one chunk per tick, and
-        # a live slot the tick failed to advance by at least one token
-        # shows up in n_starved_ticks (CI asserts it stays 0 — chunking
-        # exists precisely so admission can never stall decode).
-        self.n_prefill_chunks = 0
-        self.n_starved_ticks = 0
-        # Speculative-decode counters, next to the prefill metrics:
-        # draft tokens proposed / accepted by target verification, and
-        # ticks whose acceptance stopped short of k (rollback).
-        self.n_spec_proposed = 0
-        self.n_spec_accepted = 0
-        self.n_spec_rollbacks = 0
-        # Paged-KV counters: donor pages mapped at admission (prompt
-        # rows *not* prefilled thanks to prefix sharing) and pages
-        # forked by copy-on-write when a sharer's ring write reached a
-        # shared page.
-        self.n_shared_pages = 0
-        self.n_cow_forks = 0
         self._pool = None                 # runtime/executor.py::PagePool
         self._slot_prompts: dict[int, tuple] = {}   # donor registry
         self._slot_len: dict[int, int] = {}         # host length mirror
@@ -226,6 +227,16 @@ class ServingEngine:
                     # attention is no longer one; it serves on the
                     # program path with window-sized KV regions.
                     self.fallback_reason = str(e)
+                    # Structured twin of the warning below: a
+                    # ``fallback`` flight event + a labeled gauge, so
+                    # an exit-code-2 ``--program`` run is diagnosable
+                    # from the metrics/flight artifacts alone.
+                    self.obs.flight.event("fallback", reason=str(e))
+                    self.obs.registry.gauge(
+                        "serving_fallback",
+                        help="1 when the engine fell back to the "
+                             "legacy decode loop, labeled by blocker",
+                        fallback_reason=str(e)).set(1)
                     warnings.warn(
                         f"no decode-Program lowering for {cfg.name} — "
                         f"{e}; serving through the legacy decode loop",
@@ -258,6 +269,16 @@ class ServingEngine:
                                if (chunk_size is not None or spec_k)
                                else None)
                 self._init_spec(pair, draft_cfg, draft_params)
+                if self.obs.sample_ops_every:
+                    # Stage-8 sampled op timing: every N-th decode tick
+                    # is additionally walked eagerly through the
+                    # Stage-7 trace recorder (TraceRecord schema) so
+                    # tick wallclock attributes to op kinds without
+                    # full trace mode.
+                    self._op_sampler = executor.OpTimingSampler(
+                        self.obs.sample_ops_every,
+                        registry=self.obs.registry,
+                        flight=self.obs.flight, impl=impl)
                 self._lm_program = True
                 return
         if chunk_size is not None or spec_k:
@@ -281,6 +302,90 @@ class ServingEngine:
         self.cache = self.api.init_cache(cfg, slots, max_len)
         self._decode = jax.jit(
             lambda p, c, t: self.api.decode_step(p, c, t, cfg, impl=impl))
+
+    def _init_metrics(self) -> None:
+        """Register the engine's metric families on the bundle's
+        registry.  The legacy ``n_*`` attributes below are read-through
+        properties over these counters — same numbers, one source of
+        truth, and the whole plane serializes via
+        ``obs.registry.snapshot()`` / ``prometheus_text()``."""
+        m = self.obs.registry
+        c, g, h = m.counter, m.gauge, m.histogram
+        # Stateful-program counters: the program path prefills each
+        # request exactly once at admission, so prefill_recomputes
+        # stays 0 by construction (CI-asserted from the snapshot).
+        self._c_prefills = c("serving_prefills_total")
+        self._c_prefill_recomputes = c("serving_prefill_recomputes_total")
+        self._c_decode_ticks = c("serving_decode_ticks_total")
+        # Chunked-prefill / tick-liveness: a live slot the tick failed
+        # to advance shows up in starved_ticks (stays 0 — chunking
+        # exists precisely so admission can never stall decode).
+        self._c_prefill_chunks = c("serving_prefill_chunks_total")
+        self._c_starved = c("serving_starved_ticks_total")
+        # Speculative decode: draft tokens proposed / accepted by
+        # target verification, and ticks whose acceptance stopped
+        # short of k (rollback).
+        self._c_spec_proposed = c("serving_spec_proposed_total")
+        self._c_spec_accepted = c("serving_spec_accepted_total")
+        self._c_spec_rollbacks = c("serving_spec_rollbacks_total")
+        # Paged KV: donor pages mapped at admission (prompt rows *not*
+        # prefilled thanks to prefix sharing) and copy-on-write forks.
+        self._c_shared_pages = c("serving_shared_pages_total")
+        self._c_cow_forks = c("serving_cow_forks_total")
+        self._c_requests = c("serving_requests_total",
+                             help="requests submitted")
+        self._c_finished = c("serving_requests_finished_total")
+        self._c_tokens = c("serving_tokens_total",
+                           help="generated tokens emitted")
+        self._g_live = g("serving_live_slots")
+        self._g_queue = g("serving_queue_depth")
+        self._g_free_pages = g("serving_free_pages")
+        self._h_tick = h("tick_ms", help="engine tick wallclock")
+        self._h_ttft = h("ttft_ms", help="enqueue to first token")
+        self._h_itl = h("itl_ms", help="inter-token latency")
+
+    # Read-through compatibility properties: the counters moved onto
+    # the metrics registry; every existing consumer (benchmarks, CI
+    # greps, tests) still reads the same integers here.
+    @property
+    def n_prefills(self) -> int:
+        return int(self._c_prefills.value)
+
+    @property
+    def n_prefill_recomputes(self) -> int:
+        return int(self._c_prefill_recomputes.value)
+
+    @property
+    def n_decode_ticks(self) -> int:
+        return int(self._c_decode_ticks.value)
+
+    @property
+    def n_prefill_chunks(self) -> int:
+        return int(self._c_prefill_chunks.value)
+
+    @property
+    def n_starved_ticks(self) -> int:
+        return int(self._c_starved.value)
+
+    @property
+    def n_spec_proposed(self) -> int:
+        return int(self._c_spec_proposed.value)
+
+    @property
+    def n_spec_accepted(self) -> int:
+        return int(self._c_spec_accepted.value)
+
+    @property
+    def n_spec_rollbacks(self) -> int:
+        return int(self._c_spec_rollbacks.value)
+
+    @property
+    def n_shared_pages(self) -> int:
+        return int(self._c_shared_pages.value)
+
+    @property
+    def n_cow_forks(self) -> int:
+        return int(self._c_cow_forks.value)
 
     @property
     def on_program_path(self) -> bool:
@@ -337,11 +442,24 @@ class ServingEngine:
     def submit(self, req: Request) -> AdmissionTicket:
         """Enqueue a request; returns the admission ticket (rejected
         with reason ``queue_full`` when the bounded queue is at
-        capacity — the request is *not* held)."""
+        capacity — the request is *not* held).  Stamps the enqueue
+        time (TTFT starts here) and records the lifecycle events."""
+        req._enqueue_t = self.obs.clock()
+        self._c_requests.inc()
+        prompt_len = (len(req.prompt)
+                      if getattr(req.prompt, "ndim", 1) == 1 else 0)
+        self.obs.flight.event("enqueue", uid=req.uid,
+                              prompt_len=prompt_len)
         if self._lm_program:
-            return self.admission.submit(req)
-        self.queue.append(req)
-        return AdmissionTicket(True, "queued", len(self.queue) - 1)
+            ticket = self.admission.submit(req)
+        else:
+            self.queue.append(req)
+            ticket = AdmissionTicket(True, "queued", len(self.queue) - 1)
+        self.obs.flight.event("admission", uid=req.uid,
+                              accepted=ticket.accepted,
+                              reason=ticket.reason,
+                              position=ticket.position)
+        return ticket
 
     def _free_slots(self):
         return [s for s in range(self.slots)
@@ -450,15 +568,38 @@ class ServingEngine:
         here is what keeps its output stream identical to the
         one-token-per-tick path."""
         kept = 0
+        flight = self.obs.flight
         for nxt in toks:
+            now = self.obs.clock()
+            first = not req.out_tokens
             req.out_tokens.append(nxt)
             req._last_token = nxt
             kept += 1
+            self._c_tokens.inc()
+            if first:
+                ttft_ms = (now - req._enqueue_t) * 1e3 \
+                    if hasattr(req, "_enqueue_t") else 0.0
+                self._h_ttft.observe(ttft_ms)
+                flight.event("first_token", uid=req.uid, slot=slot,
+                             token=nxt, ttft_ms=ttft_ms)
+            else:
+                itl_ms = (now - req._last_emit_t) * 1e3
+                self._h_itl.observe(itl_ms)
+                flight.event("token", uid=req.uid, slot=slot,
+                             token=nxt, itl_ms=itl_ms)
+            req._last_emit_t = now
             if ((self.eos is not None and nxt == self.eos)
                     or len(req.out_tokens) >= req.max_new_tokens):
                 req.done = True
                 finished.append(req)
                 self.live.pop(slot, None)
+                self._c_finished.inc()
+                flight.event(
+                    "release", uid=req.uid, slot=slot,
+                    n_tokens=len(req.out_tokens),
+                    reason=("eos" if (self.eos is not None
+                                      and nxt == self.eos)
+                            else "max_new_tokens"))
                 if self._pool is not None:
                     # Retire the slot's pages: unref (a donor's shared
                     # prefix stays resident while any sharer holds a
@@ -496,10 +637,13 @@ class ServingEngine:
         their typed backpressure reason and — for pool exhaustion,
         where the request was already dequeued — requeue at the *head*
         so no later arrival can overtake a starved request."""
+        flight = self.obs.flight
         while self.admission:
             free = self._free_slots()
             if not free:
                 self.admission.note_blocked(adm.NO_FREE_SLOT)
+                flight.event("admission", accepted=False,
+                             reason=adm.NO_FREE_SLOT)
                 break
             req = self.admission.pop()
             if req is None:
@@ -515,7 +659,11 @@ class ServingEngine:
                     # Pool exhausted: the request waits at the head of
                     # the queue until a retirement frees pages.
                     self.admission.requeue_front(req, adm.PAGES_EXHAUSTED)
+                    flight.event("admission", accepted=False,
+                                 reason=adm.PAGES_EXHAUSTED, uid=req.uid)
                     break
+            flight.event("prefill_start", uid=req.uid, slot=slot,
+                         length=len(win), write_from=write_from)
             if self.chunk_size is not None:
                 padded = np.zeros((self.max_len,), np.int32)
                 padded[:len(win)] = win
@@ -547,9 +695,9 @@ class ServingEngine:
         # same request (any future re-admission/recompute path)
         # shows up here — CI asserts the count stays at zero.
         if getattr(req, "_prefilled", False):
-            self.n_prefill_recomputes += 1
+            self._c_prefill_recomputes.inc()
         req._prefilled = True
-        self.n_prefills += 1
+        self._c_prefills.inc()
         self.live[slot] = req
         if self._spec:
             _, self._draft_state = self._draft_prefill(
@@ -580,9 +728,12 @@ class ServingEngine:
             jnp.asarray(starts), jnp.asarray(stops), jnp.asarray(lengths),
             jnp.asarray(np.array([p.write_from for _, p in items],
                                  np.int32)))
-        self.n_prefill_chunks += len(items)
+        self._c_prefill_chunks.inc(len(items))
         done_rows = None
         for i, (slot, p) in enumerate(items):
+            self.obs.flight.event("prefill_chunk", uid=p.req.uid,
+                                  slot=slot, start=int(starts[i]),
+                                  stop=int(stops[i]))
             p.done = int(stops[i])
             if p.done < p.length:
                 continue
@@ -625,7 +776,7 @@ class ServingEngine:
         if not pool.can_admit(len(prompt), len(shared)):
             return None
         write_from = pool.admit(slot, len(prompt), shared)
-        self.n_shared_pages += len(shared)
+        self._c_shared_pages.inc(len(shared))
         self._slot_prompts[slot] = prompt
         self._slot_len[slot] = len(prompt)
         executor.sync_page_table(self.state, self.program, pool)
@@ -672,14 +823,24 @@ class ServingEngine:
                 c = self._pool.prepare_decode(slot, self._slot_len[slot])
                 if c is not None:
                     copies.append(c)
+                    self.obs.flight.event("cow_fork", slot=slot,
+                                          src_page=int(c[0]),
+                                          dst_page=int(c[1]))
             executor.sync_page_table(self.state, self.program, self._pool)
             if copies:
                 executor.apply_page_copies(self.state, self.program,
                                            copies)
-                self.n_cow_forks += len(copies)
+                self._c_cow_forks.inc(len(copies))
         if self._spec:
             advanced = self._spec_tick(toks, occupied, finished)
         else:
+            if self._op_sampler is not None:
+                # Sample *before* the jitted decode: the runner donates
+                # the state buffers, so an eager trace afterwards would
+                # walk invalidated caches.
+                self._op_sampler.tick(self.program.decode, self.params,
+                                      jnp.asarray(toks), state=self.state,
+                                      mask=jnp.asarray(occupied))
             logits, self.state = self._decode(self.params,
                                               jnp.asarray(toks),
                                               self.state,
@@ -693,8 +854,9 @@ class ServingEngine:
                 nxt = self._next_token(req, logits[slot])
                 self._retire_if_done(slot, req, nxt, finished)
                 advanced.add(slot)
-        self.n_decode_ticks += 1
-        self.n_starved_ticks += len(starved - advanced)
+        self._c_decode_ticks.inc()
+        if starved - advanced:
+            self._c_starved.inc(len(starved - advanced))
         return finished
 
     def _spec_tick(self, toks: np.ndarray, occupied: np.ndarray,
@@ -797,10 +959,13 @@ class ServingEngine:
             a = 0
             while a < k_s[s] and proposals[s][a] == y[a]:
                 a += 1
-            self.n_spec_proposed += k_s[s]
-            self.n_spec_accepted += a
+            self._c_spec_proposed.inc(k_s[s])
+            self._c_spec_accepted.inc(a)
             if a < k_s[s]:
-                self.n_spec_rollbacks += 1
+                self._c_spec_rollbacks.inc()
+            self.obs.flight.event("spec", slot=s, uid=req.uid,
+                                  proposed=k_s[s], accepted=a,
+                                  rollback=a < k_s[s])
             kept = self._emit_tokens(s, req, y[:a + 1], finished)
             new_lens[s] = n + kept
             advanced.add(s)
@@ -815,7 +980,42 @@ class ServingEngine:
     # -- decode ------------------------------------------------------------------
     def step(self) -> list[Request]:
         """One engine tick: admit, decode one token for all live slots,
-        retire finished requests.  Returns requests finished this tick."""
+        retire finished requests.  Returns requests finished this tick.
+
+        Every tick is timed onto the ``tick_ms`` histogram and — when a
+        flight recorder is attached — lands one ``tick`` snapshot event
+        (live slots, queue depth, free pages, cumulative starved
+        ticks), the engine-level heartbeat the flight replay and the
+        console dashboard read."""
+        t0 = self.obs.clock()
+        finished = self._step_inner()
+        dt_ms = (self.obs.clock() - t0) * 1e3
+        self._tick_no += 1
+        self._h_tick.observe(dt_ms)
+        qd = len(self.admission) if self._lm_program else len(self.queue)
+        self._g_live.set(len(self.live))
+        self._g_queue.set(qd)
+        free_pages = self._pool.free_pages if self._pool is not None else -1
+        self._g_free_pages.set(free_pages)
+        self.obs.flight.event(
+            "tick", tick=self._tick_no, dt_ms=dt_ms, live=len(self.live),
+            queue_depth=qd, free_pages=free_pages,
+            starved=int(self._c_starved.value))
+        return finished
+
+    def dashboard_line(self) -> str:
+        """One-line console dashboard: the numbers an operator watches,
+        read off the same registry the artifacts serialize."""
+        snap_p = self._h_ttft.percentile
+        itl_p = self._h_itl.percentile
+        return (f"tick {self._tick_no:>6} | live {len(self.live):>3} "
+                f"| queue {int(self._g_queue.value):>3} "
+                f"| toks {int(self._c_tokens.value):>7} "
+                f"| ttft_p50 {snap_p(50.0):8.1f}ms "
+                f"| itl_p50 {itl_p(50.0):7.2f}ms "
+                f"| starved {int(self._c_starved.value)}")
+
+    def _step_inner(self) -> list[Request]:
         if self._lm_program:
             return self._lm_program_step()
         if self.program is not None:
