@@ -32,7 +32,7 @@ import numpy as np
 
 from repro import obs
 from repro.configs import REGISTRY
-from repro.models import init_params, transformer
+from repro.models import get_model, init_params, transformer
 from repro.runtime import executor
 
 from .common import emit, set_metrics_snapshot, time_call
@@ -152,6 +152,58 @@ def run_decode_bench():
          f"kv_shrink={pair.persistent_bytes / win_pair.persistent_bytes:.1f}x")
     run_paged_bench(cfg, params, pair, win_pair, slots, max_len,
                     prompt_len, prompts, toks, t_prog, warmup, iters)
+
+
+def run_family_decode_bench():
+    """Non-dense family decode rows: the generic named-state Program
+    (SSM scan / wkv recurrence state minted through the
+    ``regions.state_specs`` hook) vs each family's legacy
+    ``decode_step`` cache loop, at full slot occupancy."""
+    slots, max_len, warmup, iters = (2, 16, 1, 3) if SMOKE else (8, 64, 2, 7)
+    prompt_len = max_len // 2
+    for name in ("mamba2", "rwkv6-7b"):
+        cfg = REGISTRY[name].smoke()
+        api = get_model(cfg)
+        params = init_params(api.param_defs(cfg), jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, cfg.vocab,
+                               size=(slots, prompt_len)).astype(np.int32)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(slots,)),
+                           jnp.int32)
+
+        pair = transformer.compile_program_pair(cfg, slots=slots,
+                                                max_len=max_len)
+        state = executor.init_program_state(pair)
+        prefill = executor.jitted_prefill_runner(pair.prefill,
+                                                 impl="reference")
+        for s in range(slots):
+            padded = np.zeros((1, max_len), np.int32)
+            padded[0, :prompt_len] = prompts[s]
+            out, state = prefill(params, jnp.asarray(padded), state, s,
+                                 prompt_len)
+        jax.block_until_ready(out)
+        decode = executor.jitted_decode_runner(pair.decode,
+                                               impl="reference")
+        t_prog = _time_threaded(decode, params, toks, state,
+                                warmup=warmup, iters=iters)
+
+        # legacy: the family's rolling-cache decode_step, prompt
+        # teacher-forced in so both sides tick from the same position
+        cache = api.init_cache(cfg, slots, max_len)
+        leg = jax.jit(lambda p, c, t: api.decode_step(p, c, t, cfg,
+                                                      impl="reference"))
+        for t in range(prompt_len):
+            _, cache = leg(params, cache, jnp.asarray(prompts[:, t]))
+        t_leg = _time_threaded(lambda p, t, c: leg(p, c, t), params,
+                               toks, cache, warmup=warmup, iters=iters)
+
+        tps = slots / (t_prog * 1e-6)
+        emit(f"program_lm/decode/{cfg.name}/family_decode", t_prog,
+             f"family={cfg.family};"
+             f"program_tps={tps:.1f};"
+             f"legacy_tps={slots / (t_leg * 1e-6):.1f};"
+             f"program_over_legacy={t_prog / max(t_leg, 1e-9):.3f};"
+             f"persistent_state_mb={pair.persistent_bytes / 1e6:.3f}")
 
 
 def run_paged_bench(cfg, params, pair, win_pair, slots, max_len,
@@ -399,6 +451,7 @@ def run():
              f"regions={len(program.plan.regions)};"
              f"region_mb={program.plan.total_bytes / 1e6:.3f}")
     run_decode_bench()
+    run_family_decode_bench()
     run_serving_bench()
 
 

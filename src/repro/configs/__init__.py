@@ -1,8 +1,8 @@
 """Config registry: --arch <id> -> ArchConfig / CNNConfig."""
 from .base import ArchConfig, CNNConfig, CNNLayer, LM_SHAPES, ShapeSpec
 from .archs import (ALL_ARCHS, DEEPSEEK_7B, GRANITE_MOE_1B, LLAMA3_8B,
-                    LLAMA32_VISION_11B, LLAMA4_MAVERICK, OLMO_1B, RWKV6_7B,
-                    SMOLLM_360M, WHISPER_BASE, ZAMBA2_7B)
+                    LLAMA32_VISION_11B, LLAMA4_MAVERICK, MAMBA2, OLMO_1B,
+                    RWKV6_7B, SMOLLM_360M, WHISPER_BASE, ZAMBA2_7B)
 from .cnns import ALEXNET_OWT, ALL_CNNS, RESNET18, RESNET50
 
 REGISTRY = {c.name: c for c in ALL_ARCHS}

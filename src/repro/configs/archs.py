@@ -19,6 +19,17 @@ ZAMBA2_7B = ArchConfig(
     sub_quadratic=True,      # Mamba2 backbone -> long_500k runs
     source="arXiv:2411.15242")
 
+MAMBA2 = ArchConfig(
+    # [arXiv:2405.21060; unverified] — pure SSD backbone, no attention:
+    # shared_attn_every=0 drops the hybrid family's shared block, so
+    # every layer is one selective-scan mixer with O(1) decode state.
+    name="mamba2", family="hybrid",
+    n_layers=64, d_model=2560, n_heads=20, n_kv_heads=20, d_ff=10240,
+    vocab=50288, head_dim=128,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2,
+    shared_attn_every=0,
+    sub_quadratic=True, source="arXiv:2405.21060")
+
 DEEPSEEK_7B = ArchConfig(
     # [arXiv:2401.02954; hf] — llama-arch dense.
     name="deepseek-7b", family="dense",
@@ -80,6 +91,6 @@ LLAMA32_VISION_11B = ArchConfig(
     vocab=128256, cross_attn_every=5, n_vision_tokens=1601,
     rope_theta=500000.0, source="hf:meta-llama/Llama-3.2-11B-Vision")
 
-ALL_ARCHS = (ZAMBA2_7B, DEEPSEEK_7B, OLMO_1B, SMOLLM_360M, LLAMA3_8B,
-             RWKV6_7B, WHISPER_BASE, GRANITE_MOE_1B, LLAMA4_MAVERICK,
-             LLAMA32_VISION_11B)
+ALL_ARCHS = (ZAMBA2_7B, MAMBA2, DEEPSEEK_7B, OLMO_1B, SMOLLM_360M,
+             LLAMA3_8B, RWKV6_7B, WHISPER_BASE, GRANITE_MOE_1B,
+             LLAMA4_MAVERICK, LLAMA32_VISION_11B)

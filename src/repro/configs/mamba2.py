@@ -1,0 +1,4 @@
+"""--arch config module; canonical definition in archs.py."""
+from .archs import MAMBA2 as CONFIG
+
+SMOKE = CONFIG.smoke()

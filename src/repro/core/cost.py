@@ -19,6 +19,12 @@ back to a single multiplicative correction (``scale`` mode): the median
 measured/modeled ratio applied to the analytic prediction.  Kinds never
 seen at all pass the analytic prediction through unchanged, so a
 ``CostModel`` is always total: calibration refines, never breaks.
+The family op kinds (``ssm_scan`` / ``wkv`` / ``moe_dispatch`` /
+``cross_attention``) enter as ordinary kinds — fitted when their trace
+records carry measurements, analytic passthrough otherwise; the
+autotuner never *replays* them (``autotune.TUNABLE`` excludes them —
+they stay identity-only), but their calibration still re-prices the
+schedule's exec_time.
 
 The fitted model serializes to JSON and rides in the tuned-schedule
 cache (``core/autotune.py``); ``compile_model(..., cost_model=...)``

@@ -28,6 +28,10 @@ __all__ = [
     "conv_node",
     "attention_node",
     "decode_attention_node",
+    "cross_attention_node",
+    "ssm_scan_node",
+    "wkv_node",
+    "moe_node",
     "norm_node",
     "embed_node",
     "elementwise_node",
@@ -135,6 +139,24 @@ class LayerNode:
             return {"maps": d["M"] * d["K"] * by * d["top_k"],
                     "weights": d["experts"] * d["K"] * d["N"] * by,
                     "out": d["M"] * d["N"] * by * d["top_k"]}
+        if k is LayerKind.SSM_SCAN:
+            # Coarse Mamba2 block: h/x/dt/B/C streams in, h' out, plus
+            # the recurrent state's read+write round trip (f32).
+            b, h, hd, st = d["batch"], d["heads"], d["head_dim"], d["state"]
+            dm = d.get("d_model", h * hd)
+            return {"maps": b * d["seq"] * dm * by
+                    + 2.0 * b * h * hd * st * 4.0,
+                    "weights": float(d.get("weight_bytes", 0)),
+                    "out": b * d["seq"] * dm * by}
+        if k is LayerKind.WKV:
+            # Coarse RWKV6 block: activations in/out plus the (h, hd,
+            # hd) wkv state round trip (f32).
+            b, h, hd = d["batch"], d["heads"], d["head_dim"]
+            dm = d.get("d_model", h * hd)
+            return {"maps": b * d["seq"] * dm * by
+                    + 2.0 * b * h * hd * hd * 4.0,
+                    "weights": float(d.get("weight_bytes", 0)),
+                    "out": b * d["seq"] * dm * by}
         if k is LayerKind.ATTENTION:
             b, h, hd = d["batch"], d["heads"], d["head_dim"]
             kvh = d.get("kv_heads", h)
@@ -173,9 +195,13 @@ def kernel_kind(node: "LayerNode") -> str:
     (``core/cost``), and tuned-cache signatures (``core/autotune``)."""
     if node.kind is LayerKind.CONV2D:
         return "conv2d"
-    if node.kind in (LayerKind.MATMUL, LayerKind.MOE):
+    if node.kind is LayerKind.MATMUL:
         return "matmul"
+    if node.kind is LayerKind.MOE:
+        return "moe_dispatch"
     if node.kind is LayerKind.ATTENTION:
+        if node.meta.get("cross"):
+            return "cross_attention"
         return ("decode_attention" if node.meta.get("decode")
                 else "flash_attention")
     if node.kind is LayerKind.POOL:
@@ -354,6 +380,79 @@ def decode_attention_node(name: str, *, cache_len: int, heads: int,
         dtype_bytes=dtype_bytes, inputs=inputs or [],
         meta={"decode": True, "k_cache": k_cache, "v_cache": v_cache,
               **win_meta, **meta})
+
+
+def cross_attention_node(name: str, *, seq_q: int, mem_len: int, heads: int,
+                         kv_heads: int, head_dim: int, batch: int = 1,
+                         k_mem: str, v_mem: str, dtype_bytes: int = 2,
+                         decode: bool = False,
+                         inputs: list[str] | None = None, **meta) -> LayerNode:
+    """Cross-attention against *read-only* persistent encoder memory.
+
+    ``inputs`` is just [q]; ``k_mem`` / ``v_mem`` name the persistent
+    regions (core/regions.py state_specs) holding the encoder's K/V,
+    written once at admission and only ever read afterwards — there is
+    no per-token cache write and no ring, so the op is position-free.
+    The decode variant reads the same regions at batch = slots."""
+    return LayerNode(
+        name=name, kind=LayerKind.ATTENTION,
+        dims={"seq_q": seq_q, "seq_kv": mem_len, "heads": heads,
+              "kv_heads": kv_heads, "head_dim": head_dim, "batch": batch,
+              "causal": False},
+        dtype_bytes=dtype_bytes, inputs=inputs or [],
+        meta={"cross": True, "k_cache": k_mem, "v_cache": v_mem,
+              **({"decode": True} if decode else {}), **meta})
+
+
+def ssm_scan_node(name: str, *, seq: int, heads: int, head_dim: int,
+                  state: int, d_model: int, batch: int = 1,
+                  weight_bytes: float = 0.0, dtype_bytes: int = 2,
+                  inputs: list[str] | None = None,
+                  bypass_of: str | None = None, **meta) -> LayerNode:
+    """Coarse Mamba2 block op: norm + in_proj + causal conv + selective
+    scan + gated out_proj, residual add fused on the writeback.  ``meta``
+    names the persistent recurrence regions (``ssm_state`` and
+    ``conv_state``) and the stacked-parameter group path."""
+    return LayerNode(
+        name=name, kind=LayerKind.SSM_SCAN,
+        dims={"seq": seq, "heads": heads, "head_dim": head_dim,
+              "state": state, "d_model": d_model, "batch": batch,
+              "weight_bytes": weight_bytes},
+        dtype_bytes=dtype_bytes, inputs=inputs or [], bypass_of=bypass_of,
+        meta=meta)
+
+
+def wkv_node(name: str, *, seq: int, heads: int, head_dim: int,
+             d_model: int, batch: int = 1, weight_bytes: float = 0.0,
+             dtype_bytes: int = 2, inputs: list[str] | None = None,
+             **meta) -> LayerNode:
+    """Coarse RWKV6 block op: ln1 + time-mix (wkv recurrence) + ln2 +
+    channel-mix, both residual adds internal.  ``meta`` names the
+    persistent ``wkv_state`` / ``shift_t`` / ``shift_c`` regions and
+    the stacked-parameter group path."""
+    return LayerNode(
+        name=name, kind=LayerKind.WKV,
+        dims={"seq": seq, "heads": heads, "head_dim": head_dim,
+              "d_model": d_model, "batch": batch,
+              "weight_bytes": weight_bytes},
+        dtype_bytes=dtype_bytes, inputs=inputs or [], meta=meta)
+
+
+def moe_node(name: str, *, tokens: int, d_model: int, d_ff: int,
+             experts: int, top_k: int, dtype_bytes: int = 2,
+             inputs: list[str] | None = None, bypass_of: str | None = None,
+             fused_activation: str | None = None, **meta) -> LayerNode:
+    """Capacity-bucketed expert-MLP dispatch (paper §6 load balancing):
+    route each token to its top-k experts, bucket per expert up to the
+    capacity granule, run the expert FFN as grouped matmuls, and
+    combine weighted by the router probabilities.  One op per MoE
+    layer's MLP; the residual add fuses on the writeback."""
+    return LayerNode(
+        name=name, kind=LayerKind.MOE,
+        dims={"M": tokens, "K": d_model, "N": d_ff,
+              "experts": experts, "top_k": top_k},
+        dtype_bytes=dtype_bytes, inputs=inputs or [], bypass_of=bypass_of,
+        fused_activation=fused_activation, meta=meta)
 
 
 def norm_node(name: str, numel: int, *, dtype_bytes: int = 2,

@@ -44,7 +44,8 @@ from dataclasses import dataclass
 
 from .dataflow import Dataflow
 from .ir import LayerKind, ModelGraph
-from .regions import PAGE_TABLE_REGION, PagedPlan, RegionPlan, allocate_regions
+from .regions import (PAGE_TABLE_REGION, PagedPlan, RegionPlan, StateCaps,
+                      allocate_regions)
 from .schedule import LayerSchedule, ModelSchedule
 from .tiling import ConvTiling
 
@@ -127,6 +128,19 @@ class ProgramOp:
     page_table_region: int | None = None
     k_scale_region: int | None = None
     v_scale_region: int | None = None
+    # Generic named state (§5.1 generalisation).  Family ops whose
+    # persistent state is not KV-shaped — ssm_scan (recurrent state +
+    # conv taps), wkv (wkv matrix + token-shift rows) — carry the
+    # resolved persistent region ids here, in the family's documented
+    # order.  Resolved by *name* through the plan's persistent table,
+    # exactly like the KV cache fields above; the executor scatters
+    # updates in place at the runtime slot.
+    state_regions: tuple = ()
+    # Static per-op config for family kernels (sorted (key, value)
+    # pairs, hashable).  moe_dispatch carries top_k / capacity_factor /
+    # activation / gated here so the executor never consults the model
+    # config; plain dense ops leave it empty.
+    op_cfg: tuple = ()
     # geometry
     stride: int = 1
     pad: int = 0
@@ -205,6 +219,19 @@ class ProgramOp:
                     sched += " int8"
         elif self.kernel == "norm":
             sched = self.norm_kind or ""
+        elif self.kernel == "moe_dispatch":
+            cfg = dict(self.op_cfg)
+            sched = (f"experts={cfg.get('experts', '?')} "
+                     f"top{cfg.get('top_k', '?')} "
+                     f"cap={cfg.get('capacity_factor', '?')}")
+        elif self.kernel in ("ssm_scan", "wkv"):
+            sched = ("state=" + ",".join(f"r{r}" for r in self.state_regions)
+                     + "@slot") if self.state_regions else ""
+        elif self.kernel == "cross_attention" and self.attn is not None:
+            a = self.attn
+            sched = (f"h={a.heads}/{a.kv_heads}x{a.head_dim} "
+                     f"mem=r{self.k_cache_region},"
+                     f"r{self.v_cache_region}@slot")
         epi = "".join(
             [" +bias" if self.fuse_bias else "",
              f" +{self.fuse_activation}" if self.fuse_activation else "",
@@ -289,6 +316,12 @@ class ProgramPair:
     slots: int | None = None
     max_len: int | None = None
     paged: PagedPlan | None = None
+    # Per-family state capabilities (regions.StateCaps) minted by the
+    # family's ``state_specs`` hook alongside the specs themselves.
+    # None means the pair predates the hook (treated as dense-KV: all
+    # capabilities on) — the engine's paged/COW/chunk/speculation gates
+    # consult this instead of assuming every family is KV-shaped.
+    caps: StateCaps | None = None
 
     @property
     def page_table_region(self) -> int | None:
@@ -308,6 +341,11 @@ class ProgramPair:
         if self.paged is not None and self.paged.quantized:
             return ("int8 paged KV: page scales are whole-page "
                     "decisions, chunk writes are row-granular")
+        if self.caps is not None and not self.caps.chunkable:
+            return ("family state is not chunkable: recurrent state "
+                    "after a chunk depends on every row before it, so "
+                    "a chunk boundary cannot be resumed from the "
+                    "persistent regions alone")
         return None
 
     @property
@@ -395,11 +433,34 @@ def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
                 kernel=_pool_kernel(node), window=m.get("window", 1),
                 stride=m.get("stride", 1), pad=m.get("pad", 0), **common))
         elif node.kind is LayerKind.EMBED:
-            ops.append(ProgramOp(kernel="embed", **common))
+            # param_key_b names a learned absolute position table the
+            # executor adds after the gather (prefill: rows [0, T);
+            # decode: the per-slot position row).
+            ops.append(ProgramOp(
+                kernel="embed", param_key_b=node.meta.get("param_b"),
+                **common))
         elif node.kind is LayerKind.NORM:
             ops.append(ProgramOp(
                 kernel="norm", norm_kind=node.meta.get("norm", "rmsnorm"),
                 param_key_b=node.meta.get("param_b"), **common))
+        elif node.kind is LayerKind.ATTENTION and node.meta.get("cross"):
+            # Cross-attention reads per-slot *read-only* encoder memory
+            # from persistent regions — there is no K/V producer in the
+            # transient graph and nothing is ever written back, so the
+            # op takes [q] alone and resolves both memory regions by
+            # name through the persistent table.
+            d = node.dims
+            ops.append(ProgramOp(
+                kernel="cross_attention",
+                k_cache_region=plan.persistent[node.meta["k_cache"]],
+                v_cache_region=plan.persistent[node.meta["v_cache"]],
+                attn=AttentionSpec(
+                    heads=d["heads"], kv_heads=d["kv_heads"],
+                    head_dim=d["head_dim"], causal=False,
+                    rope_theta=node.meta.get("rope_theta", 0.0),
+                    block_q=ls.notes.get("block_q", 128),
+                    block_kv=ls.notes.get("block_kv", 128)),
+                **common))
         elif node.kind is LayerKind.ATTENTION:
             d = node.dims
             # Persistent cache regions resolve by *name* through the
@@ -436,6 +497,41 @@ def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
                     block_kv=ls.notes.get("block_kv", 128),
                     page_size=ls.notes.get("page_size")),
                 **common))
+        elif node.kind is LayerKind.MOE:
+            # Capacity-bucketed expert dispatch (§6 load balancing):
+            # one op covers route → bucket → per-expert matmuls →
+            # un-permute.  The static routing config rides op_cfg so
+            # the executor never consults the model config.
+            d = node.dims
+            ops.append(ProgramOp(
+                kernel="moe_dispatch",
+                fuse_bypass=ls.fuse_bypass,
+                bypass_region=(plan.out_region[node.bypass_of]
+                               if node.bypass_of else None),
+                op_cfg=tuple(sorted({
+                    "experts": d["experts"], "top_k": d["top_k"],
+                    "capacity_factor": node.meta.get(
+                        "capacity_factor", 1.25),
+                    "activation": node.meta.get("activation", "silu"),
+                    "gated": node.meta.get("gated", True),
+                }.items())),
+                **common))
+        elif node.kind in (LayerKind.SSM_SCAN, LayerKind.WKV):
+            # Coarse recurrent block op: the whole mixing block runs as
+            # one kernel against generic named state (SSM recurrent +
+            # conv taps, or wkv matrix + token-shift rows), scattered
+            # in place at the runtime slot.  State region ids resolve
+            # by name, in the family's documented order.
+            ops.append(ProgramOp(
+                kernel=("ssm_scan" if node.kind is LayerKind.SSM_SCAN
+                        else "wkv"),
+                state_regions=tuple(plan.persistent[s]
+                                    for s in node.meta.get("states", ())),
+                fuse_bypass=ls.fuse_bypass,
+                bypass_region=(plan.out_region[node.bypass_of]
+                               if node.bypass_of else None),
+                op_cfg=tuple(sorted(node.meta.get("op_cfg", {}).items())),
+                **common))
         elif (node.kind is LayerKind.ELEMENTWISE
               and node.meta.get("op") in ("mul", "add")):
             ops.append(ProgramOp(
@@ -444,7 +540,9 @@ def lower_to_program(graph: ModelGraph, schedule: ModelSchedule,
         else:
             raise NotImplementedError(
                 f"no program lowering for {node.kind} ({node.name}); "
-                f"Program covers the CNN layer kinds and the dense-LM "
-                f"op vocabulary (embed/norm/flash_attention/matmul/mul)")
+                f"Program covers the CNN layer kinds, the dense-LM op "
+                f"vocabulary (embed/norm/flash_attention/matmul/mul) "
+                f"and the family ops (moe_dispatch/ssm_scan/wkv/"
+                f"cross_attention)")
     return Program(name=graph.name, hw_name=schedule.hw_name,
                    ops=tuple(ops), plan=plan)

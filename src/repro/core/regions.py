@@ -57,8 +57,9 @@ from dataclasses import dataclass, field, replace
 from .ir import ModelGraph
 
 __all__ = ["Region", "RegionPlan", "PersistentSpec", "PagedPlan",
-           "allocate_regions", "extend_with_persistent", "paged_kv_specs",
-           "pages_for_len", "PAGE_TABLE_REGION"]
+           "StateCaps", "allocate_regions", "extend_with_persistent",
+           "paged_kv_specs", "pages_for_len", "register_state_family",
+           "state_specs", "PAGE_TABLE_REGION"]
 
 N_PINGPONG = 2          # the paper's sequential double-buffer pair
 
@@ -77,12 +78,21 @@ class Region:
 
 @dataclass(frozen=True)
 class PersistentSpec:
-    """One named persistent buffer to reserve (e.g. a layer's K cache)."""
+    """One named persistent buffer to reserve.
+
+    Historically always a KV table; a spec is now *generic named
+    state*: an SSM recurrence ``(slots, heads, dn, dh)``, an rwkv
+    wkv/shift pair, a hybrid's conv tail, or read-only encoder memory
+    for cross-attention.  ``read_only`` marks state the decode stream
+    only ever reads (encoder memory written once at admission); the
+    executor never scatters into such a region and tests pin that.
+    """
 
     name: str
     shape: tuple
     dtype: str                   # numpy dtype name
     size_bytes: int
+    read_only: bool = False
 
 
 @dataclass(frozen=True)
@@ -384,3 +394,73 @@ def pages_for_len(length: int, page_size: int) -> int:
     """Pages a sequence of ``length`` rows occupies (host-side rule the
     runtime page allocator and the admission path share)."""
     return max(0, math.ceil(length / page_size))
+
+
+# --- generic named state: the per-family state_specs hook ----------------------
+@dataclass(frozen=True)
+class StateCaps:
+    """What the serving engine may do with a family's persistent state.
+
+    The engine's paged/COW, windowed, chunked-prefill and speculative-
+    decode gates consult these instead of assuming KV shape:
+
+    * ``paged``       — state is row-addressable KV, so the §5.1 paged
+                        plan (page pools + page table, COW prefix
+                        sharing) applies.
+    * ``windowed``    — a sliding ``attn_window`` maps onto ring
+                        eviction at ``pos % cache_len``.
+    * ``chunkable``   — prefill may be split into row chunks; true only
+                        when mid-prefill state is a pure row table (a
+                        half-written recurrence is not resumable by the
+                        chunk runner).
+    * ``speculatable``— rejected draft tokens can be rolled back by
+                        truncating ``lengths`` (KV rows are simply
+                        overwritten; a mutated recurrence cannot be
+                        un-stepped).
+    """
+
+    paged: bool = False
+    windowed: bool = False
+    chunkable: bool = False
+    speculatable: bool = False
+
+
+# family name -> fn(cfg, slots, max_len) -> (tuple[PersistentSpec], StateCaps)
+_STATE_FAMILIES: dict = {}
+
+
+def register_state_family(family: str, fn) -> None:
+    """Register a family's persistent-state minting hook.
+
+    Model modules call this at import time (``models/registry.py``
+    imports them all), keeping the allocator the only place region ids
+    are minted while the *shapes* stay family-owned.
+    """
+    _STATE_FAMILIES[family] = fn
+
+
+def state_specs(cfg, slots: int, max_len: int
+                ) -> tuple[tuple[PersistentSpec, ...], StateCaps]:
+    """Mint the persistent-state specs + capabilities for one config.
+
+    Every spec's leading axis is ``slots`` — the one engine-visible
+    invariant; everything after that is family business (KV rows, SSM
+    heads, wkv matrices, encoder memory...).  Raises
+    ``NotImplementedError`` naming the family when no hook is
+    registered, which the serving engine surfaces as its fallback
+    reason.
+    """
+    fn = _STATE_FAMILIES.get(cfg.family)
+    if fn is None:
+        raise NotImplementedError(
+            f"{cfg.name} is blocked by: family {cfg.family!r} has no "
+            f"registered state_specs hook — it still runs the scan "
+            f"forward")
+    specs, caps = fn(cfg, slots, max_len)
+    for s in specs:
+        if not s.shape or s.shape[0] != slots:
+            raise ValueError(
+                f"state spec {s.name!r} leading axis {s.shape[:1]} != "
+                f"slots ({slots}); per-slot addressing requires axis 0 "
+                f"to be the slot axis")
+    return tuple(specs), caps

@@ -132,8 +132,9 @@ def main(argv=None) -> None:
                     help="checkpoint dir to load params from")
     ap.add_argument("--program", action="store_true",
                     help="serve LM tokens through the compiled Program "
-                         "(dense family, windowed attention included; "
-                         "exits non-zero if the config cannot lower — "
+                         "(every registered state family: dense/MoE, "
+                         "windowed, hybrid SSM, rwkv, whisper; exits "
+                         "non-zero if the config cannot lower — "
                          "no silent legacy fallback when the program "
                          "path was explicitly requested)")
     ap.add_argument("--window", type=int, default=None,
@@ -245,6 +246,16 @@ def main(argv=None) -> None:
     if eng.program is not None:
         print(eng.program.listing().splitlines()[0])
     rng = np.random.default_rng(0)
+
+    def _extra():
+        # Families with a side-channel input (audio: stub encoder
+        # frames) get one per request; admission encodes it into the
+        # slot's read-only persistent memory regions.
+        if api.extra_input != "encoder_frames":
+            return None
+        return rng.standard_normal(
+            (cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+
     t0 = time.perf_counter()
     prefix = rng.integers(0, cfg.vocab,
                           size=args.shared_prefix).astype(np.int32)
@@ -254,7 +265,7 @@ def main(argv=None) -> None:
         if args.shared_prefix:
             prompt = np.concatenate([prefix, prompt])
         eng.submit(Request(uid=i, prompt=prompt,
-                           max_new_tokens=args.max_new))
+                           max_new_tokens=args.max_new, extra=_extra()))
     done = []
     if args.long_prompt:
         # Two ticks of steady decode, then the long prompt lands
@@ -266,7 +277,7 @@ def main(argv=None) -> None:
             uid=args.requests,
             prompt=rng.integers(0, cfg.vocab,
                                 size=args.long_prompt).astype(np.int32),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new, extra=_extra()))
     done += _drain(eng, args)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out_tokens) for r in done)

@@ -38,7 +38,8 @@ __all__ = ["moe_mlp"]
 
 
 def _moe_local(x, router_w, w_gate, w_up, w_down, *, top_k, cap_frac,
-               activation, gated, axes=(), model_axis=None):
+               activation, gated, valid_count=None, axes=(),
+               model_axis=None):
     """Dispatch + expert FFN on the local token block.
 
     Fully manual under shard_map: w_gate/w_up arrive F-sharded and
@@ -58,13 +59,28 @@ def _moe_local(x, router_w, w_gate, w_up, w_down, *, top_k, cap_frac,
     cap = min(cap, T)
 
     flat_e = top_e.reshape(-1)                              # (T*k,)
+    eff_cap = cap
+    if valid_count is not None:
+        # Right-padded token block (Program prefill pins (1, max_len)):
+        # pad rows route to a sentinel expert E so they never claim
+        # capacity, and the effective bound is re-derived at the *true*
+        # token count — the same `moe_capacity` arithmetic, traced — so
+        # per-expert bucketing is identical to the un-padded legacy
+        # call and parity holds bit-for-bit on the kept rows.
+        mean = valid_count.astype(jnp.float32) * top_k / E
+        dyn = jnp.maximum(jnp.ceil(mean * cap_frac / 8.0) * 8.0, 8.0)
+        eff_cap = jnp.minimum(dyn.astype(jnp.int32),
+                              valid_count.astype(jnp.int32))
+        tok_valid = jnp.arange(T) < valid_count
+        flat_e = jnp.where(jnp.repeat(tok_valid, top_k), flat_e, E)
     order = jnp.argsort(flat_e, stable=True)
-    counts = jnp.bincount(flat_e, length=E)
-    offsets = jnp.cumsum(counts) - counts
+    counts_full = jnp.bincount(flat_e, length=E + 1)
+    offsets = jnp.cumsum(counts_full) - counts_full
     ranks_sorted = jnp.arange(T * top_k) - offsets[flat_e[order]]
     ranks = jnp.zeros(T * top_k, jnp.int32).at[order].set(
         ranks_sorted.astype(jnp.int32))
-    keep = ranks < cap
+    counts = counts_full[:E]
+    keep = (ranks < eff_cap) & (flat_e < E)
     slot = jnp.where(keep, flat_e * cap + ranks, E * cap)
 
     x_rep = jnp.repeat(x, top_k, axis=0)                    # static pattern
@@ -117,8 +133,12 @@ def _moe_local(x, router_w, w_gate, w_up, w_down, *, top_k, cap_frac,
 def moe_mlp(x: jax.Array, router_w: jax.Array, w_gate: jax.Array,
             w_up: jax.Array, w_down: jax.Array, *, top_k: int,
             capacity_factor: float = 1.25, activation: str = "silu",
-            gated: bool = True):
+            gated: bool = True, valid_count=None):
     """x: (T, D); router_w: (D, E); w_gate/w_up: (E, D, F); w_down: (E, F, D).
+
+    ``valid_count`` (traced scalar) marks x as right-padded: only the
+    first ``valid_count`` rows are real tokens; pad rows neither claim
+    expert capacity nor perturb the bucketing of real ones.
 
     Returns (out (T, D), aux).
     """
@@ -126,8 +146,9 @@ def moe_mlp(x: jax.Array, router_w: jax.Array, w_gate: jax.Array,
     mesh = rules.mesh if rules is not None else None
     fn = functools.partial(_moe_local, top_k=top_k,
                            cap_frac=capacity_factor,
-                           activation=activation, gated=gated)
-    if mesh is None:
+                           activation=activation, gated=gated,
+                           valid_count=valid_count)
+    if mesh is None or valid_count is not None:
         return fn(x, router_w, w_gate, w_up, w_down)
 
     sizes = dict(mesh.shape)

@@ -18,6 +18,12 @@ class ModelApi:
     init_cache: Callable[..., dict]
     decode_step: Callable[..., tuple]
     extra_input: str | None = None   # "vision_embeds" | "encoder_frames"
+    # Admission-time writer for families whose decode Program reads
+    # *read-only* persistent memory (whisper: encoder cross K/V).
+    # Called once per admitted request with the request's extra input;
+    # returns {persistent region name: per-slot row} for the serving
+    # engine to scatter at the admitted slot.
+    encode_memory: Callable[..., dict] | None = None
 
 
 FAMILIES: dict[str, ModelApi] = {
@@ -30,7 +36,8 @@ FAMILIES: dict[str, ModelApi] = {
                     extra_input="vision_embeds"),
     "audio": ModelApi(whisper.param_defs, whisper.forward,
                       whisper.init_cache, whisper.decode_step,
-                      extra_input="encoder_frames"),
+                      extra_input="encoder_frames",
+                      encode_memory=whisper.encode_memory),
     "hybrid": ModelApi(zamba2.param_defs, zamba2.forward,
                        zamba2.init_cache, zamba2.decode_step),
     "ssm": ModelApi(rwkv.param_defs, rwkv.forward, rwkv.init_cache,

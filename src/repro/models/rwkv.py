@@ -11,12 +11,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from ..configs.base import ArchConfig
+from ..core.ir import ModelGraph, embed_node, matmul_node, norm_node, wkv_node
+from ..core.regions import PersistentSpec, StateCaps, register_state_family
 from ..kernels.rwkv6 import wkv6, wkv6_decode_step
 from ..parallel.act_sharding import shard_act
 from .common import ParamDef, layer_norm, rms_norm
 
-__all__ = ["param_defs", "forward", "init_cache", "decode_step"]
+__all__ = ["param_defs", "forward", "init_cache", "decode_step",
+           "to_graph", "to_decode_graph", "block_prefill", "block_decode"]
 
 _LORA = 64
 
@@ -79,10 +84,18 @@ def _lerp(x, xx, mu):
     return x + (xx - x) * mu[None, None]
 
 
-def _time_mix(h, p, cfg, *, impl, wkv_state=None, shift_state=None,
-              return_state=False):
+def _last_row(h, length):
+    """h (B, S, D) -> the last *valid* row (B, D): S-1, or length-1 on
+    a right-padded block (Program prefill pins (1, max_len))."""
+    if length is None:
+        return h[:, -1]
+    return h[:, length - 1]
+
+
+def _time_mix(h, p, hd, *, impl, wkv_state=None, shift_state=None,
+              length=None, return_state=False):
     B, S, D = h.shape
-    H, hd = D // cfg.hd, cfg.hd
+    H = D // hd
     xx = _shift(h, shift_state)
     r = _lerp(h, xx, p["mu_r"]) @ p["wr"]
     k = _lerp(h, xx, p["mu_k"]) @ p["wk"]
@@ -93,6 +106,14 @@ def _time_mix(h, p, cfg, *, impl, wkv_state=None, shift_state=None,
              + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(
                  jnp.float32)) @ p["w_lora_b"].astype(jnp.float32))
     w = jnp.exp(-jnp.exp(w_log))                       # (B, S, D) in (0,1)
+    if length is not None:
+        # Right-padded rows are recurrence identities: k=0 contributes
+        # nothing, w=1 decays nothing, so the state after the scan is
+        # exactly the state at the true length (pad-row *outputs* are
+        # garbage, but causality keeps them out of every valid row).
+        valid = (jnp.arange(S) < length)[None, :, None]
+        k = jnp.where(valid, k, 0.0)
+        w = jnp.where(valid, w, 1.0)
 
     def heads(a):
         return a.reshape(B, S, H, hd)
@@ -104,11 +125,12 @@ def _time_mix(h, p, cfg, *, impl, wkv_state=None, shift_state=None,
     y = rms_norm(y, p["ln_x"])                         # per-channel norm
     out = (y.astype(jnp.float32) * g).astype(h.dtype) @ p["wo"]
     if return_state:
-        return out, s_new, h[:, -1]
+        return out, s_new, _last_row(h, length)
     return out
 
 
-def _channel_mix(h, p, *, shift_state=None, return_state=False):
+def _channel_mix(h, p, *, shift_state=None, length=None,
+                 return_state=False):
     xx = _shift(h, shift_state)
     kx = _lerp(h, xx, p["mu_ck"]) @ p["wc_in"]
     k = jnp.square(jnp.maximum(kx.astype(jnp.float32), 0.0))
@@ -117,8 +139,35 @@ def _channel_mix(h, p, *, shift_state=None, return_state=False):
     out = (r * (k.astype(h.dtype) @ p["wc_out"]).astype(jnp.float32)
            ).astype(h.dtype)
     if return_state:
-        return out, h[:, -1]
+        return out, _last_row(h, length)
     return out
+
+
+def _block_seq(carry, p_i, hd, *, impl, wkv_state=None, shift_t=None,
+               shift_c=None, length=None, want_state=False):
+    """One rwkv block over a (B, S, D) sequence — ln1 + time-mix +
+    residual, ln2 + channel-mix + residual.  The single emitter behind
+    the legacy ``forward`` body, and the Program executor's ``wkv``
+    prefill op (length-masked), so the two can never drift apart."""
+    a_in = layer_norm(carry, p_i["ln1"], p_i["ln1_b"])
+    if want_state:
+        a, s_new, sh1 = _time_mix(a_in, p_i, hd, impl=impl,
+                                  wkv_state=wkv_state, shift_state=shift_t,
+                                  length=length, return_state=True)
+    else:
+        a = _time_mix(a_in, p_i, hd, impl=impl, wkv_state=wkv_state,
+                      shift_state=shift_t, length=length)
+        s_new = sh1 = None
+    carry = carry + a
+    c_in = layer_norm(carry, p_i["ln2"], p_i["ln2_b"])
+    if want_state:
+        c, sh2 = _channel_mix(c_in, p_i, shift_state=shift_c,
+                              length=length, return_state=True)
+    else:
+        c = _channel_mix(c_in, p_i, shift_state=shift_c, length=length)
+        sh2 = None
+    carry = shard_act(carry + c, "hidden")
+    return carry, (s_new, sh1, sh2)
 
 
 def forward(params, tokens, cfg: ArchConfig, *, impl: str = "auto",
@@ -130,23 +179,9 @@ def forward(params, tokens, cfg: ArchConfig, *, impl: str = "auto",
     h = shard_act(h, "hidden")
 
     def body(carry, p_i):
-        a_in = layer_norm(carry, p_i["ln1"], p_i["ln1_b"])
-        if return_cache:
-            a, s_new, sh1 = _time_mix(a_in, p_i, cfg, impl=impl,
-                                      return_state=True)
-        else:
-            a = _time_mix(a_in, p_i, cfg, impl=impl)
-            s_new = sh1 = None
-        carry = carry + a
-        c_in = layer_norm(carry, p_i["ln2"], p_i["ln2_b"])
-        if return_cache:
-            c, sh2 = _channel_mix(c_in, p_i, return_state=True)
-        else:
-            c = _channel_mix(c_in, p_i)
-            sh2 = None
-        carry = shard_act(carry + c, "hidden")
-        ys = (s_new, sh1, sh2) if return_cache else None
-        return carry, ys
+        carry, states = _block_seq(carry, p_i, cfg.hd, impl=impl,
+                                   want_state=return_cache)
+        return carry, (states if return_cache else None)
 
     if remat:
         body = jax.checkpoint(body,
@@ -178,43 +213,51 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
     }
 
 
+def _block_step(carry, p_i, s_i, sh1_i, sh2_i):
+    """One rwkv block for one token per sequence — carry (B, D), wkv
+    state (B, H, hd, hd) f32, shift rows (B, D).  Shared by the legacy
+    ``decode_step`` scan body and the executor's ``wkv`` decode op;
+    head geometry derives from the params (u is (H, hd)), so the
+    executor never consults the model config."""
+    B, D = carry.shape
+    H, hd = p_i["u"].shape
+    x1 = layer_norm(carry, p_i["ln1"], p_i["ln1_b"])
+    xx = sh1_i
+    def mix(mu):
+        return x1 + (xx - x1) * mu[None]
+    r = (mix(p_i["mu_r"]) @ p_i["wr"]).reshape(B, H, hd)
+    k = (mix(p_i["mu_k"]) @ p_i["wk"]).reshape(B, H, hd)
+    v = (mix(p_i["mu_v"]) @ p_i["wv"]).reshape(B, H, hd)
+    g = jax.nn.silu((mix(p_i["mu_g"]) @ p_i["wg"]).astype(jnp.float32))
+    w_log = (p_i["w_base"][None].astype(jnp.float32)
+             + jnp.tanh(mix(p_i["mu_w"]).astype(jnp.float32)
+                        @ p_i["w_lora_a"].astype(jnp.float32))
+             @ p_i["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, H, hd)
+    y, s_new = wkv6_decode_step(s_i, r, k, v.astype(jnp.float32), w,
+                                p_i["u"])
+    y = rms_norm(y.reshape(B, D), p_i["ln_x"])
+    carry = carry + (y.astype(jnp.float32) * g).astype(carry.dtype) \
+        @ p_i["wo"]
+    x2 = layer_norm(carry, p_i["ln2"], p_i["ln2_b"])
+    xx2 = sh2_i
+    kx = (x2 + (xx2 - x2) * p_i["mu_ck"][None]) @ p_i["wc_in"]
+    kk = jnp.square(jnp.maximum(kx.astype(jnp.float32), 0.0))
+    rr = jax.nn.sigmoid(((x2 + (xx2 - x2) * p_i["mu_cr"][None])
+                         @ p_i["wc_r"]).astype(jnp.float32))
+    carry = carry + (rr * (kk.astype(carry.dtype) @ p_i["wc_out"]
+                           ).astype(jnp.float32)).astype(carry.dtype)
+    return carry, (s_new, x1, x2)
+
+
 def decode_step(params, cache, tokens, cfg: ArchConfig, *,
                 impl: str = "auto"):
-    B = tokens.shape[0]
-    D = cfg.d_model
-    H, hd = D // cfg.hd, cfg.hd
     h = params["embed"][tokens].astype(cfg.jdtype)
     h = layer_norm(h, params["ln_in"], params["ln_in_b"])
 
     def body(carry, xs):
         p_i, s_i, sh1_i, sh2_i = xs
-        x1 = layer_norm(carry, p_i["ln1"], p_i["ln1_b"])
-        xx = sh1_i
-        def mix(mu):
-            return x1 + (xx - x1) * mu[None]
-        r = (mix(p_i["mu_r"]) @ p_i["wr"]).reshape(B, H, hd)
-        k = (mix(p_i["mu_k"]) @ p_i["wk"]).reshape(B, H, hd)
-        v = (mix(p_i["mu_v"]) @ p_i["wv"]).reshape(B, H, hd)
-        g = jax.nn.silu((mix(p_i["mu_g"]) @ p_i["wg"]).astype(jnp.float32))
-        w_log = (p_i["w_base"][None].astype(jnp.float32)
-                 + jnp.tanh(mix(p_i["mu_w"]).astype(jnp.float32)
-                            @ p_i["w_lora_a"].astype(jnp.float32))
-                 @ p_i["w_lora_b"].astype(jnp.float32))
-        w = jnp.exp(-jnp.exp(w_log)).reshape(B, H, hd)
-        y, s_new = wkv6_decode_step(s_i, r, k, v.astype(jnp.float32), w,
-                                    p_i["u"])
-        y = rms_norm(y.reshape(B, D), p_i["ln_x"])
-        carry = carry + (y.astype(jnp.float32) * g).astype(carry.dtype) \
-            @ p_i["wo"]
-        x2 = layer_norm(carry, p_i["ln2"], p_i["ln2_b"])
-        xx2 = sh2_i
-        kx = (x2 + (xx2 - x2) * p_i["mu_ck"][None]) @ p_i["wc_in"]
-        kk = jnp.square(jnp.maximum(kx.astype(jnp.float32), 0.0))
-        rr = jax.nn.sigmoid(((x2 + (xx2 - x2) * p_i["mu_cr"][None])
-                             @ p_i["wc_r"]).astype(jnp.float32))
-        carry = carry + (rr * (kk.astype(carry.dtype) @ p_i["wc_out"]
-                               ).astype(jnp.float32)).astype(carry.dtype)
-        return carry, (s_new, x1, x2)
+        return _block_step(carry, p_i, s_i, sh1_i, sh2_i)
 
     h, (s_new, sh1_new, sh2_new) = jax.lax.scan(
         body, h, (params["blocks"], cache["wkv"], cache["shift_t"],
@@ -224,3 +267,121 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, *,
     new_cache = {"wkv": s_new, "shift_t": sh1_new, "shift_c": sh2_new,
                  "pos": cache["pos"] + 1}
     return logits, new_cache
+
+
+# --- Program lowering (generic named state) ---------------------------------------
+def block_prefill(h, p_i, *, impl="auto", length=None):
+    """Executor entry for one ``wkv`` prefill op: h (B, S, D) right-
+    padded to S with ``length`` valid rows, states zero-initialised
+    (prefill always restarts a slot).  Returns (out (B, S, D),
+    (wkv (B, H, hd, hd) f32, shift_t (B, D), shift_c (B, D)))."""
+    hd = p_i["u"].shape[1]
+    out, (s, sh1, sh2) = _block_seq(h, p_i, hd, impl=impl, length=length,
+                                    want_state=True)
+    return out, (s, sh1, sh2)
+
+
+def block_decode(h, p_i, wkv_state, shift_t, shift_c):
+    """Executor entry for one ``wkv`` decode op: h (slots, D), one
+    token per slot against the per-slot states."""
+    return _block_step(h, p_i, wkv_state, shift_t, shift_c)
+
+
+def _state_names(i: int) -> tuple[str, str, str]:
+    """Per-layer persistent state names, in ProgramOp.state_regions
+    order (wkv matrix, time-mix shift row, channel-mix shift row)."""
+    return (f"l{i}.wkv_s", f"l{i}.shift_t", f"l{i}.shift_c")
+
+
+def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
+             dtype_bytes: int | None = None,
+             write_cache: bool = False) -> ModelGraph:
+    """Lower rwkv6 to the compiler IR: embed -> input LN -> one coarse
+    ``wkv`` block op per layer (ln1 + time-mix + ln2 + channel-mix,
+    both residuals internal) -> final LN -> lm head.  The block is one
+    op because its recurrence is a single fused kernel anyway
+    (kernels/rwkv6); ``write_cache`` names the per-layer persistent
+    state regions the op scatters at the admitted slot."""
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    D = cfg.d_model
+    H, hd = D // cfg.hd, cfg.hd
+    g = ModelGraph(cfg.name)
+    g.add(embed_node("embed", batch * seq, cfg.vocab, D, dtype_bytes=by,
+                     param="embed"))
+    g.add(norm_node("ln_in", batch * seq * D, dtype_bytes=by,
+                    inputs=["embed"], norm="layernorm", param="ln_in",
+                    param_b="ln_in_b"))
+    prev = "ln_in"
+    for i in range(cfg.n_layers):
+        names = _state_names(i)
+        g.add(wkv_node(
+            f"l{i}.wkv", seq=seq, heads=H, head_dim=hd, d_model=D,
+            batch=batch, dtype_bytes=by, inputs=[prev],
+            param=f"blocks:{i}",
+            **({"states": names} if write_cache else {})))
+        prev = f"l{i}.wkv"
+    g.add(norm_node("final_norm", batch * seq * D, dtype_bytes=by,
+                    inputs=[prev], norm="layernorm", param="final_norm",
+                    param_b="final_norm_b"))
+    g.add(matmul_node("lm_head", batch * seq, D, cfg.vocab,
+                      dtype_bytes=by, inputs=["final_norm"],
+                      param="lm_head"))
+    return g
+
+
+def to_decode_graph(cfg: ArchConfig, slots: int = 8,
+                    max_len: int = 256,
+                    dtype_bytes: int | None = None) -> ModelGraph:
+    """One token per slot (M = slots, seq = 1); the same coarse block
+    op reads/writes the per-slot states — O(1) in ``max_len``, which is
+    exactly why the spec shapes carry no sequence axis."""
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    D = cfg.d_model
+    H, hd = D // cfg.hd, cfg.hd
+    g = ModelGraph(cfg.name + ".decode")
+    g.add(embed_node("embed", slots, cfg.vocab, D, dtype_bytes=by,
+                     param="embed"))
+    g.add(norm_node("ln_in", slots * D, dtype_bytes=by, inputs=["embed"],
+                    norm="layernorm", param="ln_in", param_b="ln_in_b"))
+    prev = "ln_in"
+    for i in range(cfg.n_layers):
+        g.add(wkv_node(
+            f"l{i}.wkv", seq=1, heads=H, head_dim=hd, d_model=D,
+            batch=slots, dtype_bytes=by, inputs=[prev],
+            param=f"blocks:{i}", states=_state_names(i), decode=True))
+        prev = f"l{i}.wkv"
+    g.add(norm_node("final_norm", slots * D, dtype_bytes=by,
+                    inputs=[prev], norm="layernorm", param="final_norm",
+                    param_b="final_norm_b"))
+    g.add(matmul_node("lm_head", slots, D, cfg.vocab, dtype_bytes=by,
+                      inputs=["final_norm"], param="lm_head"))
+    return g
+
+
+def _rwkv_state_specs(cfg: ArchConfig, slots: int, max_len: int):
+    """Per-layer wkv matrix (f32, like the legacy cache) + the two
+    token-shift rows.  No sequence axis anywhere: rwkv state is O(1)
+    in ``max_len``, so none of the KV serving features apply — not
+    pageable (nothing row-granular to page), not windowed, not
+    chunkable (the recurrence is order-sensitive), not speculatable
+    (no length-truncation rollback)."""
+    D = cfg.d_model
+    H, hd = D // cfg.hd, cfg.hd
+    dt = jnp.dtype(cfg.jdtype)
+    specs = []
+    for i in range(cfg.n_layers):
+        wkv_name, sh1, sh2 = _state_names(i)
+        s_shape = (slots, H, hd, hd)
+        r_shape = (slots, D)
+        specs.append(PersistentSpec(
+            wkv_name, s_shape, "float32", int(np.prod(s_shape)) * 4))
+        specs.append(PersistentSpec(
+            sh1, r_shape, dt.name, int(np.prod(r_shape)) * dt.itemsize))
+        specs.append(PersistentSpec(
+            sh2, r_shape, dt.name, int(np.prod(r_shape)) * dt.itemsize))
+    return tuple(specs), StateCaps()
+
+
+register_state_family("ssm", _rwkv_state_specs)

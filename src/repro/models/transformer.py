@@ -30,11 +30,13 @@ import numpy as np
 from ..configs.base import ArchConfig
 from ..core.hw import TPU_V5E, HardwareModel
 from ..core.ir import (ModelGraph, attention_node, decode_attention_node,
-                       elementwise_node, embed_node, matmul_node, norm_node)
+                       elementwise_node, embed_node, matmul_node, moe_node,
+                       norm_node)
 from ..core.program import Program, ProgramPair, lower_to_program
-from ..core.regions import (PAGE_TABLE_REGION, PersistentSpec,
+from ..core.regions import (PAGE_TABLE_REGION, PersistentSpec, StateCaps,
                             allocate_regions, extend_with_persistent,
-                            paged_kv_specs)
+                            paged_kv_specs, register_state_family,
+                            state_specs)
 from ..core.schedule import compile_model
 from ..kernels.decode_attention import (decode_attention, ring_kv_len,
                                         ring_positions)
@@ -350,26 +352,30 @@ def _cross_kv(params, cfg, vis):
 
 # --- compile-to-Program lowering (dense family) -----------------------------------
 def _require_dense(cfg: ArchConfig) -> None:
-    """Gate non-dense features with the *specific* blocker named, so the
-    serving engine's legacy-fallback warning can say why a config is
-    unlowerable (windowed attention is NOT a blocker — it lowers as a
-    rolling-window region plan)."""
+    """Gate what the *transformer-graph* lowering cannot express, with
+    every blocker named (the serving engine's legacy-fallback warning
+    and ``serve.py --program``'s exit-2 path print the full list).
+    Dense and MoE decoder-only configs lower here; SSM / hybrid / audio
+    families lower through their own modules' graph builders, so the
+    remaining blockers are the vision-bridge features."""
     blockers = []
-    if cfg.family != "dense":
-        blockers.append(f"family={cfg.family}")
-    if cfg.n_experts:
-        blockers.append("MoE dispatch")
+    if cfg.family not in ("dense", "moe"):
+        blockers.append(f"family={cfg.family} (not a decoder-only "
+                        f"transformer graph)")
     if cfg.cross_attn_every:
-        blockers.append("cross-attention")
+        blockers.append("gated cross-attention (vision bridge)")
+    if cfg.n_vision_tokens:
+        blockers.append("vision-encoder inputs")
     if cfg.n_encoder_layers:
         blockers.append("encoder-decoder")
     if cfg.shared_attn_every:
         blockers.append("shared attention blocks")
     if blockers:
         raise NotImplementedError(
-            f"Program lowering covers the dense transformer family "
-            f"(windowed attention included); {cfg.name} is blocked by: "
-            f"{', '.join(blockers)} — it still runs the scan forward")
+            f"Program lowering covers the decoder-only transformer "
+            f"families (windowed attention and MoE included); "
+            f"{cfg.name} is blocked by: {', '.join(blockers)} — it "
+            f"still runs the scan forward")
 
 
 def kv_cache_len(cfg: ArchConfig, max_len: int) -> int:
@@ -383,6 +389,20 @@ def kv_cache_len(cfg: ArchConfig, max_len: int) -> int:
     if cfg.attn_window:
         return min(max_len, cfg.attn_window)
     return max_len
+
+
+def _block_path(cfg: ArchConfig, i: int) -> tuple[str, int, bool]:
+    """(param group, index-within-group, is_moe) for global layer ``i``
+    — the graph-side mirror of ``forward``'s interleaved llama4-style
+    grouping ((moe_every - 1) dense layers then one MoE layer, params
+    split across "blocks" / "moe_blocks") and of the all-MoE layout
+    (moe_every <= 1: every layer's experts live stacked in "blocks")."""
+    if cfg.n_experts > 0 and cfg.moe_every > 1:
+        g, r = divmod(i, cfg.moe_every)
+        if r == cfg.moe_every - 1:
+            return "moe_blocks", g, True
+        return "blocks", g * (cfg.moe_every - 1) + r, False
+    return "blocks", i, cfg.n_experts > 0
 
 
 def _build_lm_graph(cfg: ArchConfig, name: str, M: int, by: int,
@@ -409,8 +429,10 @@ def _build_lm_graph(cfg: ArchConfig, name: str, M: int, by: int,
                      param="embed"))
     resid = "embed"
     for i in range(cfg.n_layers):
-        def bp(k: str) -> str:
-            return f"blocks/{k}:{i}"
+        grp, gi, is_moe = _block_path(cfg, i)
+
+        def bp(k: str, grp=grp, gi=gi) -> str:
+            return f"{grp}/{k}:{gi}"
         an = f"l{i}.attn_norm"
         g.add(norm_node(an, M * D, dtype_bytes=by, inputs=[resid],
                         **norm_meta(bp("attn_norm"))))
@@ -428,6 +450,20 @@ def _build_lm_graph(cfg: ArchConfig, name: str, M: int, by: int,
         mn = f"l{i}.mlp_norm"
         g.add(norm_node(mn, M * D, dtype_bytes=by, inputs=[wo],
                         **norm_meta(bp("mlp_norm"))))
+        if is_moe:
+            # One capacity-bucketed dispatch op replaces the dense MLP
+            # chain; the whole block's stacked params ride the group
+            # path ("moe_blocks:2" tree-slices every leaf at index 2)
+            # and the routing config travels on the node for op_cfg.
+            g.add(moe_node(f"l{i}.moe", tokens=M, d_model=D, d_ff=F,
+                           experts=cfg.n_experts, top_k=cfg.top_k,
+                           dtype_bytes=by, inputs=[mn], bypass_of=wo,
+                           param=f"{grp}:{gi}",
+                           capacity_factor=cfg.capacity_factor,
+                           activation=cfg.activation,
+                           gated=cfg.gated_mlp))
+            resid = f"l{i}.moe"
+            continue
         g.add(matmul_node(f"l{i}.w_gate", M, D, F, dtype_bytes=by,
                           inputs=[mn], fused_activation=cfg.activation,
                           param=bp("w_gate")))
@@ -603,6 +639,23 @@ def _kv_cache_specs(cfg: ArchConfig, slots: int,
     return tuple(specs)
 
 
+# Generic named-state hooks (regions.state_specs).  Dense KV state
+# composes with every serving feature; MoE shares the KV-shaped state
+# but chunked prefill is gated (expert capacity is a whole-sequence
+# decision — a chunk boundary re-buckets routing) and so is
+# speculation (rollback re-runs routing over rolled-back tokens).
+register_state_family(
+    "dense", lambda cfg, slots, max_len: (
+        _kv_cache_specs(cfg, slots, max_len),
+        StateCaps(paged=True, windowed=True, chunkable=True,
+                  speculatable=True)))
+register_state_family(
+    "moe", lambda cfg, slots, max_len: (
+        _kv_cache_specs(cfg, slots, max_len),
+        StateCaps(paged=True, windowed=True, chunkable=False,
+                  speculatable=False)))
+
+
 def compile_program_pair(cfg: ArchConfig, slots: int = 8,
                          max_len: int = 256,
                          hw: HardwareModel = TPU_V5E, *,
@@ -649,24 +702,51 @@ def _compile_program_pair(cfg: ArchConfig, slots: int, max_len: int,
             f"paged KV and attn_window are mutually exclusive "
             f"({cfg.name} has window={cfg.attn_window}); the window "
             f"plan already bounds resident rows")
+    # Family dispatch: decoder-only transformers (dense / MoE) lower
+    # right here; the recurrent and encoder-memory families through
+    # their own modules' graph builders.  Importing the module is what
+    # registers its named-state hook, so ``state_specs`` below resolves
+    # for every dispatched family and raises the full blocker list for
+    # the rest (vlm).
+    fam = cfg.family
+    if fam == "ssm":
+        from . import rwkv as gmod
+    elif fam == "hybrid":
+        from . import zamba2 as gmod
+    elif fam == "audio":
+        from . import whisper as gmod
+    else:
+        gmod = None
+        _require_dense(cfg)
+    specs, caps = state_specs(cfg, slots, max_len)
+    if paged and not caps.paged:
+        raise NotImplementedError(
+            f"{cfg.name} is blocked by: family {fam!r} state is not "
+            f"pageable (paged plans assume KV-row granularity) — it "
+            f"still runs the scan forward")
     pre_tuned, cost_model = _tuned_context(cfg.name, 1, hw, generation)
     dec_tuned, _ = _tuned_context(cfg.name, slots, hw, generation)
     pg = page_size if paged else None
-    pre_graph = to_graph(cfg, batch=1, seq=max_len, write_cache=True,
-                         page_size=pg, kv_quant=kv_quant if paged else None)
+    if gmod is None:
+        pre_graph = to_graph(cfg, batch=1, seq=max_len, write_cache=True,
+                             page_size=pg,
+                             kv_quant=kv_quant if paged else None)
+        dec_graph = to_decode_graph(cfg, slots=slots, max_len=max_len,
+                                    page_size=pg,
+                                    kv_quant=kv_quant if paged else None)
+    else:
+        pre_graph = gmod.to_graph(cfg, seq=max_len, write_cache=True)
+        dec_graph = gmod.to_decode_graph(cfg, slots=slots, max_len=max_len)
     pre_graph.name = cfg.name + ".prefill"
-    dec_graph = to_decode_graph(cfg, slots=slots, max_len=max_len,
-                                page_size=pg,
-                                kv_quant=kv_quant if paged else None)
     pre_sched = compile_model(pre_graph, hw, tuned=pre_tuned,
                               cost_model=cost_model)
     dec_sched = compile_model(dec_graph, hw, tuned=dec_tuned,
                               cost_model=cost_model)
     pre_plan = allocate_regions(pre_graph, pre_sched)
     dec_plan = allocate_regions(dec_graph, dec_sched)
-    # One persistent table, one base: the minted KV region ids coincide
-    # across the pair (regions.py invariant), so prefill-written cache
-    # buffers are read by decode ops under the same ids.
+    # One persistent table, one base: the minted state region ids
+    # coincide across the pair (regions.py invariant), so prefill-
+    # written state buffers are read by decode ops under the same ids.
     base = max(len(pre_plan.regions), len(dec_plan.regions))
     paged_plan = None
     if paged:
@@ -676,14 +756,12 @@ def _compile_program_pair(cfg: ArchConfig, slots: int, max_len: int,
             n_pages=page_pool,
             kv_dtype=("int8" if kv_quant == "int8"
                       else jnp.dtype(cfg.kv_jdtype).name))
-    else:
-        specs = _kv_cache_specs(cfg, slots, max_len)
     pre_plan = extend_with_persistent(pre_plan, specs, base)
     dec_plan = extend_with_persistent(dec_plan, specs, base)
     return ProgramPair(
         prefill=lower_to_program(pre_graph, pre_sched, pre_plan),
         decode=lower_to_program(dec_graph, dec_sched, dec_plan),
-        slots=slots, max_len=max_len, paged=paged_plan)
+        slots=slots, max_len=max_len, paged=paged_plan, caps=caps)
 
 
 def compile_draft_pair(target_cfg: ArchConfig, draft_cfg: ArchConfig,
@@ -712,6 +790,12 @@ def compile_draft_pair(target_cfg: ArchConfig, draft_cfg: ArchConfig,
             "speculative decode over windowed attention: rollback "
             "truncates lengths, but a wrapped ring has already "
             "overwritten the rows the truncation re-exposes")
+    if target_cfg.family != "dense":
+        raise NotImplementedError(
+            f"speculative decode requires a speculatable target "
+            f"(family state caps): {target_cfg.name} is "
+            f"family={target_cfg.family}, whose state rollback is not "
+            f"length-truncation")
     _require_dense(draft_cfg)
     return compile_program_pair(draft_cfg, slots=slots, max_len=max_len,
                                 hw=hw)

@@ -14,14 +14,22 @@ import math
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from ..configs.base import ArchConfig
+from ..core.ir import (ModelGraph, attention_node, cross_attention_node,
+                       decode_attention_node, embed_node, matmul_node,
+                       norm_node)
+from ..core.regions import (PersistentSpec, StateCaps,
+                            register_state_family)
 from ..kernels.decode_attention import decode_attention
 from ..parallel.act_sharding import shard_act
 from .common import ParamDef, layer_norm
 from .transformer import (_attention, _attn_defs, _heads, _mlp,
                           _write_cache)
 
-__all__ = ["param_defs", "forward", "init_cache", "decode_step"]
+__all__ = ["param_defs", "forward", "init_cache", "decode_step",
+           "encode_memory", "to_graph", "to_decode_graph"]
 
 
 def _ln_defs(cfg, L, name):
@@ -228,3 +236,193 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, *,
     new_cache = dict(cache)
     new_cache.update({"k": k_new, "v": v_new, "pos": pos + 1})
     return logits, new_cache
+
+
+# --- Program lowering (generic named state) ---------------------------------------
+def encode_memory(params, frames, cfg: ArchConfig, *,
+                  impl: str = "auto") -> dict:
+    """Run the encoder once and project the per-layer cross K/V — the
+    admission-time write into the decoder Program's *read-only*
+    persistent memory regions.  ``frames`` is one request's (T_enc, D)
+    stub embedding (or (1, T_enc, D)); returns {region name: (T_enc,
+    KV, hd) row} for the engine to place at the admitted slot."""
+    if frames.ndim == 2:
+        frames = frames[None]
+    enc_out = encode(params, frames, cfg, impl=impl)
+    xk, xv = _cross_kv(params, cfg, enc_out)        # (L, 1, KV, Te, hd)
+    rows = {}
+    for i in range(cfg.n_layers):
+        rows[f"l{i}.cross_k"] = xk[i, 0].transpose(1, 0, 2)
+        rows[f"l{i}.cross_v"] = xv[i, 0].transpose(1, 0, 2)
+    return rows
+
+
+def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
+             dtype_bytes: int | None = None,
+             write_cache: bool = False) -> ModelGraph:
+    """Lower the whisper *decoder* to the compiler IR: pre-LN layernorm
+    blocks with a causal self-attention arm (standard dense KV plan)
+    and a ``cross_attention`` arm per layer reading the persistent
+    encoder memory (``encode_memory`` fills it at admission — the
+    encoder itself runs once per request, outside the token loop, so it
+    never appears in the per-token instruction stream).  The tied head
+    reuses the embedding table transposed."""
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    D, H, KV, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                       cfg.d_ff)
+    Te = cfg.encoder_seq
+    M = batch * seq
+    g = ModelGraph(cfg.name)
+    g.add(embed_node("embed", M, cfg.vocab, D, dtype_bytes=by,
+                     param="embed", param_b="pos_embed"))
+    resid = "embed"
+    for i in range(cfg.n_layers):
+        def bp(k, i=i):
+            return f"dec_blocks/{k}:{i}"
+        an = f"l{i}.attn_norm"
+        g.add(norm_node(an, M * D, dtype_bytes=by, inputs=[resid],
+                        norm="layernorm", param=bp("attn_norm"),
+                        param_b=bp("attn_norm_b")))
+        g.add(matmul_node(f"l{i}.wq", M, D, H * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wq")))
+        g.add(matmul_node(f"l{i}.wk", M, D, KV * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wk")))
+        g.add(matmul_node(f"l{i}.wv", M, D, KV * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wv")))
+        cache_meta = ({"k_cache": f"l{i}.k_cache",
+                       "v_cache": f"l{i}.v_cache"} if write_cache else {})
+        g.add(attention_node(
+            f"l{i}.attn", seq_q=seq, seq_kv=seq, heads=H, kv_heads=KV,
+            head_dim=hd, batch=batch, causal=True, dtype_bytes=by,
+            inputs=[f"l{i}.wq", f"l{i}.wk", f"l{i}.wv"], **cache_meta))
+        wo = f"l{i}.wo"
+        g.add(matmul_node(wo, M, H * hd, D, dtype_bytes=by,
+                          inputs=[f"l{i}.attn"], bypass_of=resid,
+                          param=bp("wo")))
+        cn = f"l{i}.cross_norm"
+        g.add(norm_node(cn, M * D, dtype_bytes=by, inputs=[wo],
+                        norm="layernorm", param=bp("cross_norm"),
+                        param_b=bp("cross_norm_b")))
+        g.add(matmul_node(f"l{i}.xwq", M, D, H * hd, dtype_bytes=by,
+                          inputs=[cn], param=bp("xwq")))
+        g.add(cross_attention_node(
+            f"l{i}.cross", seq_q=seq, mem_len=Te, heads=H, kv_heads=KV,
+            head_dim=hd, batch=batch, k_mem=f"l{i}.cross_k",
+            v_mem=f"l{i}.cross_v", dtype_bytes=by,
+            inputs=[f"l{i}.xwq"]))
+        xwo = f"l{i}.xwo"
+        g.add(matmul_node(xwo, M, H * hd, D, dtype_bytes=by,
+                          inputs=[f"l{i}.cross"], bypass_of=wo,
+                          param=bp("xwo")))
+        mn = f"l{i}.mlp_norm"
+        g.add(norm_node(mn, M * D, dtype_bytes=by, inputs=[xwo],
+                        norm="layernorm", param=bp("mlp_norm"),
+                        param_b=bp("mlp_norm_b")))
+        g.add(matmul_node(f"l{i}.w_gate", M, D, F, dtype_bytes=by,
+                          inputs=[mn], fused_activation="gelu",
+                          param=bp("w_gate")))
+        g.add(matmul_node(f"l{i}.w_down", M, F, D, dtype_bytes=by,
+                          inputs=[f"l{i}.w_gate"], bypass_of=xwo,
+                          param=bp("w_down")))
+        resid = f"l{i}.w_down"
+    g.add(norm_node("final_norm", M * D, dtype_bytes=by, inputs=[resid],
+                    norm="layernorm", param="final_norm",
+                    param_b="final_norm_b"))
+    g.add(matmul_node("lm_head", M, D, cfg.vocab, dtype_bytes=by,
+                      inputs=["final_norm"], param="embed",
+                      transpose_w=True))
+    return g
+
+
+def to_decode_graph(cfg: ArchConfig, slots: int = 8, max_len: int = 256,
+                    dtype_bytes: int | None = None) -> ModelGraph:
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    D, H, KV, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                       cfg.d_ff)
+    Te = cfg.encoder_seq
+    g = ModelGraph(cfg.name + ".decode")
+    g.add(embed_node("embed", slots, cfg.vocab, D, dtype_bytes=by,
+                     param="embed", param_b="pos_embed"))
+    resid = "embed"
+    for i in range(cfg.n_layers):
+        def bp(k, i=i):
+            return f"dec_blocks/{k}:{i}"
+        an = f"l{i}.attn_norm"
+        g.add(norm_node(an, slots * D, dtype_bytes=by, inputs=[resid],
+                        norm="layernorm", param=bp("attn_norm"),
+                        param_b=bp("attn_norm_b")))
+        g.add(matmul_node(f"l{i}.wq", slots, D, H * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wq")))
+        g.add(matmul_node(f"l{i}.wk", slots, D, KV * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wk")))
+        g.add(matmul_node(f"l{i}.wv", slots, D, KV * hd, dtype_bytes=by,
+                          inputs=[an], param=bp("wv")))
+        g.add(decode_attention_node(
+            f"l{i}.attn", cache_len=max_len, heads=H, kv_heads=KV,
+            head_dim=hd, slots=slots, dtype_bytes=by,
+            inputs=[f"l{i}.wq", f"l{i}.wk", f"l{i}.wv"],
+            k_cache=f"l{i}.k_cache", v_cache=f"l{i}.v_cache"))
+        wo = f"l{i}.wo"
+        g.add(matmul_node(wo, slots, H * hd, D, dtype_bytes=by,
+                          inputs=[f"l{i}.attn"], bypass_of=resid,
+                          param=bp("wo")))
+        cn = f"l{i}.cross_norm"
+        g.add(norm_node(cn, slots * D, dtype_bytes=by, inputs=[wo],
+                        norm="layernorm", param=bp("cross_norm"),
+                        param_b=bp("cross_norm_b")))
+        g.add(matmul_node(f"l{i}.xwq", slots, D, H * hd, dtype_bytes=by,
+                          inputs=[cn], param=bp("xwq")))
+        g.add(cross_attention_node(
+            f"l{i}.cross", seq_q=1, mem_len=Te, heads=H, kv_heads=KV,
+            head_dim=hd, batch=slots, k_mem=f"l{i}.cross_k",
+            v_mem=f"l{i}.cross_v", dtype_bytes=by, decode=True,
+            inputs=[f"l{i}.xwq"]))
+        xwo = f"l{i}.xwo"
+        g.add(matmul_node(xwo, slots, H * hd, D, dtype_bytes=by,
+                          inputs=[f"l{i}.cross"], bypass_of=wo,
+                          param=bp("xwo")))
+        mn = f"l{i}.mlp_norm"
+        g.add(norm_node(mn, slots * D, dtype_bytes=by, inputs=[xwo],
+                        norm="layernorm", param=bp("mlp_norm"),
+                        param_b=bp("mlp_norm_b")))
+        g.add(matmul_node(f"l{i}.w_gate", slots, D, F, dtype_bytes=by,
+                          inputs=[mn], fused_activation="gelu",
+                          param=bp("w_gate")))
+        g.add(matmul_node(f"l{i}.w_down", slots, F, D, dtype_bytes=by,
+                          inputs=[f"l{i}.w_gate"], bypass_of=xwo,
+                          param=bp("w_down")))
+        resid = f"l{i}.w_down"
+    g.add(norm_node("final_norm", slots * D, dtype_bytes=by,
+                    inputs=[resid], norm="layernorm", param="final_norm",
+                    param_b="final_norm_b"))
+    g.add(matmul_node("lm_head", slots, D, cfg.vocab, dtype_bytes=by,
+                      inputs=["final_norm"], param="embed",
+                      transpose_w=True))
+    return g
+
+
+def _audio_state_specs(cfg: ArchConfig, slots: int, max_len: int):
+    """Per-layer self-attention KV (standard dense ring) plus the
+    *read-only* encoder memory pair written once at admission.  No
+    serving capability survives the encoder coupling: memory rows are
+    admission-bound (not pageable/speculatable) and the cross arm needs
+    them before the first decoder row computes (not chunkable)."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    kdt = jnp.dtype(cfg.kv_jdtype)
+    Te = cfg.encoder_seq
+    specs = []
+    for i in range(cfg.n_layers):
+        for side, rows, ro in (("k_cache", max_len, False),
+                               ("v_cache", max_len, False),
+                               ("cross_k", Te, True),
+                               ("cross_v", Te, True)):
+            shape = (slots, rows, KV, hd)
+            specs.append(PersistentSpec(
+                f"l{i}.{side}", shape, kdt.name,
+                int(np.prod(shape)) * kdt.itemsize, read_only=ro))
+    return tuple(specs), StateCaps()
+
+
+register_state_family("audio", _audio_state_specs)

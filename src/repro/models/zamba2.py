@@ -13,20 +13,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from ..configs.base import ArchConfig
+from ..core.ir import (ModelGraph, attention_node, decode_attention_node,
+                       elementwise_node, embed_node, matmul_node, norm_node,
+                       ssm_scan_node)
+from ..core.regions import PersistentSpec, StateCaps, register_state_family
 from ..kernels.mamba2 import mamba2_decode_step, mamba2_scan
 from ..parallel.act_sharding import shard_act
 from .common import ParamDef, Rotary, rms_norm
 from .transformer import (_attention, _attention_decode, _attn_defs, _mlp,
                           _norm)
 
-__all__ = ["param_defs", "forward", "init_cache", "decode_step"]
+__all__ = ["param_defs", "forward", "init_cache", "decode_step",
+           "to_graph", "to_decode_graph", "block_prefill", "block_decode"]
 
 _CONV_K = 4
 
 
 def _n_apps(cfg: ArchConfig) -> int:
     e = cfg.shared_attn_every
+    if not e:          # pure-mamba2 config: no shared attention at all
+        return 0
     return (cfg.n_layers + e - 1) // e
 
 
@@ -47,25 +56,37 @@ def param_defs(cfg: ArchConfig) -> dict:
         "gate_norm": ParamDef((L, di), ("layers", "ff"), dt, "ones"),
         "out_proj": ParamDef((L, di, D), ("layers", "ff", "embed"), dt),
     }
-    shared = {}
-    shared["attn_norm"] = ParamDef((D,), ("embed",), dt, "ones")
-    shared.update({k: ParamDef(v.shape[1:], v.axes[1:], v.dtype)
-                   for k, v in _attn_defs(cfg, L).items()})
-    shared["mlp_norm"] = ParamDef((D,), ("embed",), dt, "ones")
-    shared["w_gate"] = ParamDef((D, cfg.d_ff), ("embed", "ff"), dt)
-    shared["w_up"] = ParamDef((D, cfg.d_ff), ("embed", "ff"), dt)
-    shared["w_down"] = ParamDef((cfg.d_ff, D), ("ff", "embed"), dt)
-    return {
+    defs = {
         "embed": ParamDef((cfg.vocab, D), ("vocab", "embed"), dt, "embed"),
         "blocks": blocks,
-        "shared": shared,
         "final_norm": ParamDef((D,), ("embed",), dt, "ones"),
         "lm_head": ParamDef((D, cfg.vocab), ("embed", "vocab"), dt),
     }
+    if cfg.shared_attn_every:
+        shared = {}
+        shared["attn_norm"] = ParamDef((D,), ("embed",), dt, "ones")
+        shared.update({k: ParamDef(v.shape[1:], v.axes[1:], v.dtype)
+                       for k, v in _attn_defs(cfg, L).items()})
+        shared["mlp_norm"] = ParamDef((D,), ("embed",), dt, "ones")
+        shared["w_gate"] = ParamDef((D, cfg.d_ff), ("embed", "ff"), dt)
+        shared["w_up"] = ParamDef((D, cfg.d_ff), ("embed", "ff"), dt)
+        shared["w_down"] = ParamDef((cfg.d_ff, D), ("ff", "embed"), dt)
+        defs["shared"] = shared
+    return defs
 
 
-def _split_proj(zxbcdt, cfg):
-    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+def _mixer_dims(p) -> tuple[int, int, int, int]:
+    """(d_inner, ssm_state, ssm_heads, ssm_head_dim) from the param
+    shapes alone, so the executor's block entry points never consult
+    the model config: A_log is (H,), gate_norm is (di,), and in_proj's
+    output splits as [z(di) | x(di) | B(N) | C(N) | dt(H)]."""
+    H = p["A_log"].shape[-1]
+    di = p["gate_norm"].shape[-1]
+    N = (p["in_proj"].shape[-1] - 2 * di - H) // 2
+    return di, N, H, di // H
+
+
+def _split_proj(zxbcdt, di, N):
     z = zxbcdt[..., :di]
     xBC = zxbcdt[..., di:di + di + 2 * N]
     dt = zxbcdt[..., di + di + 2 * N:]
@@ -81,15 +102,28 @@ def _causal_conv(xBC, conv_w):
     return jax.nn.silu(out.astype(jnp.float32)).astype(xBC.dtype)
 
 
-def _mamba_mixer(h, p, cfg, *, impl, state=None, conv_state=None):
-    """h (B, S, D) -> (out, new_ssm_state, new_conv_state)."""
+def _mamba_mixer(h, p, *, impl, state=None, conv_state=None, length=None):
+    """h (B, S, D) -> (out, new_ssm_state, new_conv_state).
+
+    ``length`` marks h as right-padded (Program prefill pins
+    (1, max_len)): pad rows become scan identities — dt=0 after the
+    softplus makes the decay exp(A*0)=1 and the dB*x contribution 0 —
+    so the returned recurrent state is exactly the state at the true
+    length, and the conv taps are gathered at rows
+    [length-K+1, length) instead of the block tail."""
     B, S, D = h.shape
-    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
-    z, xBC, dt = _split_proj(h @ p["in_proj"], cfg)
+    di, N, H, P = _mixer_dims(p)
+    z, xBC, dt = _split_proj(h @ p["in_proj"], di, N)
     if conv_state is not None:      # decode: roll the conv window
         window = jnp.concatenate([conv_state, xBC], axis=1)   # (B, K-1+S, C)
         new_conv_state = window[:, -(_CONV_K - 1):]
         xBC = _causal_conv(window, p["conv_w"])[:, -S:]
+    elif length is not None:
+        idx = length - (_CONV_K - 1) + jnp.arange(_CONV_K - 1)
+        rows = xBC[:, jnp.clip(idx, 0, S - 1)]
+        new_conv_state = jnp.where((idx >= 0)[None, :, None], rows,
+                                   jnp.zeros((), xBC.dtype))
+        xBC = _causal_conv(xBC, p["conv_w"])
     else:
         zeros = jnp.zeros((B, _CONV_K - 1, xBC.shape[-1]), xBC.dtype)
         new_conv_state = jnp.concatenate([zeros, xBC],
@@ -99,6 +133,8 @@ def _mamba_mixer(h, p, cfg, *, impl, state=None, conv_state=None):
     xh = x.reshape(B, S, H, P)
     dtv = jax.nn.softplus(dt.astype(jnp.float32)
                           + p["dt_bias"][None, None])          # (B,S,H)
+    if length is not None:
+        dtv = jnp.where((jnp.arange(S) < length)[None, :, None], dtv, 0.0)
     A = -jnp.exp(p["A_log"])
     y, h_fin = mamba2_scan(xh, dtv, A, Bm, Cm, D_skip=p["D_skip"],
                            h0=state, return_state=True, impl=impl)
@@ -106,6 +142,25 @@ def _mamba_mixer(h, p, cfg, *, impl, state=None, conv_state=None):
     y = rms_norm(y, p["gate_norm"]) * jax.nn.silu(z.astype(jnp.float32)
                                                   ).astype(y.dtype)
     return y @ p["out_proj"], h_fin, new_conv_state
+
+
+def block_prefill(h, p_i, *, impl="auto", length=None):
+    """Executor entry for one ``ssm_scan`` prefill op — the whole
+    mamba block (pre-norm + mixer + residual) on (B, S, D), recurrent
+    state zero-initialised (prefill always restarts a slot).  Returns
+    (out, (ssm (B, H, N, P) f32, conv (B, K-1, di+2N)))."""
+    mixed, s_fin, c_fin = _mamba_mixer(rms_norm(h, p_i["norm"]), p_i,
+                                       impl=impl, length=length)
+    return shard_act(h + mixed, "hidden"), (s_fin, c_fin)
+
+
+def block_decode(h, p_i, ssm_state, conv_state, *, impl="auto"):
+    """Executor entry for one ``ssm_scan`` decode op: h (slots, D),
+    one token per slot against the per-slot recurrent states."""
+    mixed, s_new, c_new = _mamba_mixer(
+        rms_norm(h, p_i["norm"])[:, None], p_i, impl=impl,
+        state=ssm_state, conv_state=conv_state)
+    return h + mixed[:, 0], (s_new, c_new)
 
 
 def forward(params, tokens, cfg: ArchConfig, *, impl: str = "auto",
@@ -117,7 +172,7 @@ def forward(params, tokens, cfg: ArchConfig, *, impl: str = "auto",
     h = shard_act(h, "hidden")
     rot = Rotary(cfg.hd, cfg.rope_theta)
     cos, sin = rot.freqs(jnp.arange(S))
-    shared = params["shared"]
+    shared = params.get("shared")
 
     def shared_block(x):
         if return_cache:
@@ -135,23 +190,24 @@ def forward(params, tokens, cfg: ArchConfig, *, impl: str = "auto",
 
     def body(carry, xs):
         p_i, idx = xs
-        is_attn = idx % e == 0
-        if return_cache:
-            def yes(x):
-                return shared_block(x)
-            def no(x):
-                KV, hd = cfg.n_kv_heads, cfg.hd
-                zero = (jnp.zeros((B, KV, S, hd), cfg.jdtype),) * 2
-                return x, zero
-            carry, kv = jax.lax.cond(is_attn, yes, no, carry)
+        if e:
+            is_attn = idx % e == 0
+            if return_cache:
+                def yes(x):
+                    return shared_block(x)
+                def no(x):
+                    KV, hd = cfg.n_kv_heads, cfg.hd
+                    zero = (jnp.zeros((B, KV, S, hd), cfg.jdtype),) * 2
+                    return x, zero
+                carry, kv = jax.lax.cond(is_attn, yes, no, carry)
+            else:
+                carry = jax.lax.cond(is_attn,
+                                     lambda x: shared_block(x)[0],
+                                     lambda x: x, carry)
+                kv = None
         else:
-            carry = jax.lax.cond(is_attn,
-                                 lambda x: shared_block(x)[0],
-                                 lambda x: x, carry)
             kv = None
-        mixed, s_fin, c_fin = _mamba_mixer(rms_norm(carry, p_i["norm"]),
-                                           p_i, cfg, impl=impl)
-        carry = shard_act(carry + mixed, "hidden")
+        carry, (s_fin, c_fin) = block_prefill(carry, p_i, impl=impl)
         ys = (kv, s_fin, c_fin) if return_cache else kv
         return carry, ys
 
@@ -169,10 +225,15 @@ def forward(params, tokens, cfg: ArchConfig, *, impl: str = "auto",
         out["hidden"] = h
     if return_cache:
         kvs, ssm_stack, conv_stack = ys
-        # keep only the layers where the shared block actually ran
-        app_layers = jnp.arange(0, cfg.n_layers, e)
-        k_stack = kvs[0][app_layers]
-        v_stack = kvs[1][app_layers]
+        if e:
+            # keep only the layers where the shared block actually ran
+            app_layers = jnp.arange(0, cfg.n_layers, e)
+            k_stack = kvs[0][app_layers]
+            v_stack = kvs[1][app_layers]
+        else:
+            KV, hd = cfg.n_kv_heads, cfg.hd
+            k_stack = jnp.zeros((0, B, KV, S, hd), cfg.jdtype)
+            v_stack = k_stack
         cache = _prefill_cache(cfg, k_stack, v_stack, B, S)
         cache["ssm"] = ssm_stack
         cache["conv"] = conv_stack
@@ -240,8 +301,7 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, *,
     h = params["embed"][tokens].astype(cfg.jdtype)
     rot = Rotary(cfg.hd, cfg.rope_theta)
     cos, sin = rot.freqs(pos)
-    shared = params["shared"]
-    napp = _n_apps(cfg)
+    shared = params.get("shared")
 
     # Shared attention applications, gathered outside the mamba scan so
     # each application indexes its own rolling KV slot.
@@ -260,15 +320,13 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, *,
     def body(carry, xs):
         p_i, s_i, c_i, idx = xs
         h_c, kc, vc = carry
-        def yes(args):
-            h_c, kc, vc = args
-            return shared_apply(h_c, idx // e, kc, vc)
-        h_c, kc, vc = jax.lax.cond(idx % e == 0, yes,
-                                   lambda a: a, (h_c, kc, vc))
-        mixed, s_new, c_new = _mamba_mixer(
-            rms_norm(h_c, p_i["norm"])[:, None], p_i, cfg, impl=impl,
-            state=s_i, conv_state=c_i)
-        h_c = h_c + mixed[:, 0]
+        if e:
+            def yes(args):
+                h_c, kc, vc = args
+                return shared_apply(h_c, idx // e, kc, vc)
+            h_c, kc, vc = jax.lax.cond(idx % e == 0, yes,
+                                       lambda a: a, (h_c, kc, vc))
+        h_c, (s_new, c_new) = block_decode(h_c, p_i, s_i, c_i, impl=impl)
         return (h_c, kc, vc), (s_new, c_new)
 
     idxs = jnp.arange(cfg.n_layers)
@@ -280,3 +338,168 @@ def decode_step(params, cache, tokens, cfg: ArchConfig, *,
     new_cache = {"ssm": ssm_new, "conv": conv_new, "attn_k": kc,
                  "attn_v": vc, "pos": pos + 1}
     return logits, new_cache
+
+
+# --- Program lowering (generic named state) ---------------------------------------
+def _emit_shared_block(g, cfg, a: int, resid: str, M: int, by: int,
+                       add_attention) -> str:
+    """Emit one application of the shared attention block — standard
+    transformer ops against the *unstacked* "shared/..." params (the
+    same weights at every application; only the KV regions differ per
+    application index ``a``)."""
+    D, H, KV, hd, F = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                       cfg.d_ff)
+    an = f"app{a}.attn_norm"
+    g.add(norm_node(an, M * D, dtype_bytes=by, inputs=[resid],
+                    norm="rmsnorm", param="shared/attn_norm"))
+    g.add(matmul_node(f"app{a}.wq", M, D, H * hd, dtype_bytes=by,
+                      inputs=[an], param="shared/wq"))
+    g.add(matmul_node(f"app{a}.wk", M, D, KV * hd, dtype_bytes=by,
+                      inputs=[an], param="shared/wk"))
+    g.add(matmul_node(f"app{a}.wv", M, D, KV * hd, dtype_bytes=by,
+                      inputs=[an], param="shared/wv"))
+    add_attention(g, a, [f"app{a}.wq", f"app{a}.wk", f"app{a}.wv"])
+    wo = f"app{a}.wo"
+    g.add(matmul_node(wo, M, H * hd, D, dtype_bytes=by,
+                      inputs=[f"app{a}.attn"], bypass_of=resid,
+                      param="shared/wo"))
+    mn = f"app{a}.mlp_norm"
+    g.add(norm_node(mn, M * D, dtype_bytes=by, inputs=[wo],
+                    norm="rmsnorm", param="shared/mlp_norm"))
+    g.add(matmul_node(f"app{a}.w_gate", M, D, F, dtype_bytes=by,
+                      inputs=[mn], fused_activation=cfg.activation,
+                      param="shared/w_gate"))
+    g.add(matmul_node(f"app{a}.w_up", M, D, F, dtype_bytes=by,
+                      inputs=[mn], param="shared/w_up"))
+    g.add(elementwise_node(f"app{a}.glu_mul", "mul", M * F, dtype_bytes=by,
+                           inputs=[f"app{a}.w_gate", f"app{a}.w_up"]))
+    g.add(matmul_node(f"app{a}.w_down", M, F, D, dtype_bytes=by,
+                      inputs=[f"app{a}.glu_mul"], bypass_of=wo,
+                      param="shared/w_down"))
+    return f"app{a}.w_down"
+
+
+def _mamba_state_names(i: int) -> tuple[str, str]:
+    """Per-layer persistent state names, in ProgramOp.state_regions
+    order (recurrent SSM state, conv taps)."""
+    return (f"l{i}.ssm", f"l{i}.conv")
+
+
+def to_graph(cfg: ArchConfig, batch: int = 1, seq: int = 64,
+             dtype_bytes: int | None = None,
+             write_cache: bool = False) -> ModelGraph:
+    """Lower the zamba2 hybrid to the compiler IR: the shared attention
+    block (every ``shared_attn_every`` layers, *before* that layer's
+    mamba block) lowers fine-grained — it IS a transformer block, so it
+    reuses the whole dense op vocabulary including the windowed ring KV
+    plan, one pair of KV regions per application — while each mamba
+    block is one coarse ``ssm_scan`` op (pre-norm + conv + selective
+    scan + gated out-proj + residual) against its recurrent state."""
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    D = cfg.d_model
+    e = cfg.shared_attn_every
+    M = batch * seq
+
+    def add_attention(g, a, qkv):
+        cache_meta = ({"k_cache": f"app{a}.k_cache",
+                       "v_cache": f"app{a}.v_cache"} if write_cache else {})
+        g.add(attention_node(
+            f"app{a}.attn", seq_q=seq, seq_kv=seq, heads=cfg.n_heads,
+            kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, batch=batch,
+            causal=True, dtype_bytes=by, inputs=qkv,
+            window=cfg.attn_window, rope_theta=cfg.rope_theta,
+            **cache_meta))
+
+    g = ModelGraph(cfg.name)
+    g.add(embed_node("embed", M, cfg.vocab, D, dtype_bytes=by,
+                     param="embed"))
+    resid = "embed"
+    for i in range(cfg.n_layers):
+        if e and i % e == 0:
+            resid = _emit_shared_block(g, cfg, i // e, resid, M, by,
+                                       add_attention)
+        g.add(ssm_scan_node(
+            f"l{i}.mamba", seq=seq, heads=cfg.ssm_heads,
+            head_dim=cfg.ssm_head_dim, state=cfg.ssm_state, d_model=D,
+            batch=batch, dtype_bytes=by, inputs=[resid],
+            param=f"blocks:{i}",
+            **({"states": _mamba_state_names(i)} if write_cache else {})))
+        resid = f"l{i}.mamba"
+    g.add(norm_node("final_norm", M * D, dtype_bytes=by, inputs=[resid],
+                    norm="rmsnorm", param="final_norm"))
+    g.add(matmul_node("lm_head", M, D, cfg.vocab, dtype_bytes=by,
+                      inputs=["final_norm"], param="lm_head"))
+    return g
+
+
+def to_decode_graph(cfg: ArchConfig, slots: int = 8, max_len: int = 256,
+                    dtype_bytes: int | None = None) -> ModelGraph:
+    by = (dtype_bytes if dtype_bytes is not None
+          else jnp.dtype(cfg.jdtype).itemsize)
+    D = cfg.d_model
+    e = cfg.shared_attn_every
+    W = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+
+    def add_attention(g, a, qkv):
+        g.add(decode_attention_node(
+            f"app{a}.attn", cache_len=W, heads=cfg.n_heads,
+            kv_heads=cfg.n_kv_heads, head_dim=cfg.hd, slots=slots,
+            dtype_bytes=by, inputs=qkv, window=cfg.attn_window,
+            rope_theta=cfg.rope_theta, k_cache=f"app{a}.k_cache",
+            v_cache=f"app{a}.v_cache"))
+
+    g = ModelGraph(cfg.name + ".decode")
+    g.add(embed_node("embed", slots, cfg.vocab, D, dtype_bytes=by,
+                     param="embed"))
+    resid = "embed"
+    for i in range(cfg.n_layers):
+        if e and i % e == 0:
+            resid = _emit_shared_block(g, cfg, i // e, resid, slots, by,
+                                       add_attention)
+        g.add(ssm_scan_node(
+            f"l{i}.mamba", seq=1, heads=cfg.ssm_heads,
+            head_dim=cfg.ssm_head_dim, state=cfg.ssm_state, d_model=D,
+            batch=slots, dtype_bytes=by, inputs=[resid],
+            param=f"blocks:{i}", states=_mamba_state_names(i),
+            decode=True))
+        resid = f"l{i}.mamba"
+    g.add(norm_node("final_norm", slots * D, dtype_bytes=by,
+                    inputs=[resid], norm="rmsnorm", param="final_norm"))
+    g.add(matmul_node("lm_head", slots, D, cfg.vocab, dtype_bytes=by,
+                      inputs=["final_norm"], param="lm_head"))
+    return g
+
+
+def _hybrid_state_specs(cfg: ArchConfig, slots: int, max_len: int):
+    """Per-layer SSM recurrent state (f32, O(1) in ``max_len``) + conv
+    taps, plus one ring KV pair per shared-attention *application*.
+    Windowed is the only serving capability that survives the mix: the
+    ring KV slides, but the recurrent state is neither pageable nor
+    chunkable nor rollback-truncatable."""
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    dt = jnp.dtype(cfg.jdtype)
+    kdt = jnp.dtype(cfg.kv_jdtype)
+    W = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    kv_shape = (slots, W, cfg.n_kv_heads, cfg.hd)
+    kv_size = int(np.prod(kv_shape)) * kdt.itemsize
+    specs = []
+    for a in range(_n_apps(cfg)):
+        specs.append(PersistentSpec(f"app{a}.k_cache", kv_shape, kdt.name,
+                                    kv_size))
+        specs.append(PersistentSpec(f"app{a}.v_cache", kv_shape, kdt.name,
+                                    kv_size))
+    s_shape = (slots, H, N, P)
+    c_shape = (slots, _CONV_K - 1, di + 2 * N)
+    for i in range(cfg.n_layers):
+        ssm_name, conv_name = _mamba_state_names(i)
+        specs.append(PersistentSpec(
+            ssm_name, s_shape, "float32", int(np.prod(s_shape)) * 4))
+        specs.append(PersistentSpec(
+            conv_name, c_shape, dt.name,
+            int(np.prod(c_shape)) * dt.itemsize))
+    return tuple(specs), StateCaps(windowed=True)
+
+
+register_state_family("hybrid", _hybrid_state_specs)

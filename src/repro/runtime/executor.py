@@ -74,6 +74,8 @@ def _param(params, key: str | None):
 
     ``"layer_03"``       -> params["layer_03"]           (CNN groups)
     ``"blocks/wq:3"``    -> params["blocks"]["wq"][3]    (stacked LM blocks)
+    ``"blocks:3"``       -> every leaf of params["blocks"] at index 3
+                            (whole-block group path — coarse family ops)
     ``"final_norm"``     -> params["final_norm"]
     """
     if key is None:
@@ -82,7 +84,12 @@ def _param(params, key: str | None):
     p = params
     for part in path.split("/"):
         p = p[part]
-    return p[int(idx)] if idx else p
+    if not idx:
+        return p
+    i = int(idx)
+    if isinstance(p, dict):
+        return jax.tree.map(lambda a: a[i], p)
+    return p[i]
 
 
 def _attention_heads(op: ProgramOp, regions: dict):
@@ -135,8 +142,115 @@ def _run_norm(op: ProgramOp, src: jax.Array, params) -> jax.Array:
     return rms_norm(src, w)
 
 
+_FAMILY_KERNELS = ("wkv", "ssm_scan", "moe_dispatch", "cross_attention")
+
+
+def _write_state_row(caches: dict, rid: int, val: jax.Array, slot) -> None:
+    """Scatter a prefill op's (1, ...) final state into the
+    (slots, ...) persistent region at the admitted slot."""
+    buf = caches[rid]
+    row = val[0].astype(buf.dtype)
+    caches[rid] = jax.lax.dynamic_update_slice(
+        buf, row[None], (slot,) + (0,) * row.ndim)
+
+
+def _run_family_op(op: ProgramOp, src: jax.Array, regions: dict, params,
+                   caches: dict | None, *, slot=None, length=None,
+                   live=None, impl: str, interpret: bool | None):
+    """Dispatch one family op (coarse recurrent block, MoE dispatch, or
+    cross-attention over read-only encoder memory).
+
+    Prefill and decode share one arm per kernel, split on the operand
+    rank — (B, S, D) is a prefill pass, (slots, D) a decode tick —
+    because the instruction stream is the only difference the lowering
+    leaves between the two.  State-carrying ops resolve their buffers
+    through ``op.state_regions`` (the allocator's generic persistent
+    rids, in the family's documented order) and never assume a KV
+    shape; prefill scatters the block's final state at the admitted
+    slot, decode reads/writes all slots with dead ones masked to their
+    old rows via ``live``.  ``caches=None`` (stateless ``run``) skips
+    the writes — the recurrent blocks still compute from their zero
+    init, matching the legacy scan forward."""
+    if op.kernel == "moe_dispatch":
+        from ..models.moe import moe_mlp
+        c = dict(op.op_cfg)
+        p = _param(params, op.param_key)
+        shp = src.shape
+        vc = None
+        if length is not None and src.ndim == 3:
+            # Right-padded prefill rows: pad tokens must not claim
+            # expert capacity (models/moe sentinel-expert path).
+            vc = jnp.asarray(length, jnp.int32)
+        out, _ = moe_mlp(src.reshape(-1, shp[-1]), p["router"],
+                         p["w_gate"], p.get("w_up", p["w_gate"]),
+                         p["w_down"], top_k=c["top_k"],
+                         capacity_factor=c["capacity_factor"],
+                         activation=c["activation"], gated=c["gated"],
+                         valid_count=vc)
+        out = out.reshape(shp).astype(src.dtype)
+        if op.fuse_bypass and op.bypass_region is not None:
+            out = out + regions[op.bypass_region]
+        return out
+    if op.kernel == "cross_attention":
+        if caches is None:
+            raise ValueError(
+                f"op {op.name} reads persistent encoder memory; use "
+                f"run_prefill/run_decode with a ProgramState")
+        a = op.attn
+        ck, cv = caches[op.k_cache_region], caches[op.v_cache_region]
+        if src.ndim == 3:                         # prefill: one slot
+            B, S = src.shape[:2]
+            q = src.reshape(B, S, a.heads, a.head_dim).transpose(0, 2, 1, 3)
+            km = jax.lax.dynamic_slice_in_dim(ck, slot, 1, axis=0)
+            vm = jax.lax.dynamic_slice_in_dim(cv, slot, 1, axis=0)
+            out = flash_attention(
+                q, km.transpose(0, 2, 1, 3).astype(q.dtype),
+                vm.transpose(0, 2, 1, 3).astype(q.dtype),
+                causal=False, block_q=a.block_q, block_kv=a.block_kv,
+                impl=impl, interpret=interpret)
+            return (out.transpose(0, 2, 1, 3)
+                    .reshape(B, S, a.heads * a.head_dim))
+        B = src.shape[0]                          # decode: all slots
+        q = src.reshape(B, a.heads, a.head_dim)
+        out = decode_attention(
+            q, ck.transpose(0, 2, 1, 3).astype(q.dtype),
+            cv.transpose(0, 2, 1, 3).astype(q.dtype),
+            block_kv=a.block_kv, impl=impl, interpret=interpret)
+        return out.reshape(B, a.heads * a.head_dim)
+    # coarse recurrent block ops ("wkv" | "ssm_scan")
+    p = _param(params, op.param_key)
+    if src.ndim == 3:                             # prefill pass
+        if op.kernel == "wkv":
+            from ..models.rwkv import block_prefill
+        else:
+            from ..models.zamba2 import block_prefill
+        out, states = block_prefill(src, p, impl=impl, length=length)
+        if caches is not None and op.state_regions:
+            for rid, val in zip(op.state_regions, states):
+                _write_state_row(caches, rid, val, slot)
+        return out
+    if caches is None:
+        raise ValueError(
+            f"op {op.name} needs a ProgramState (persistent state "
+            f"regions); use run_decode for decode Programs")
+    states = [caches[r] for r in op.state_regions]
+    if op.kernel == "wkv":
+        from ..models.rwkv import block_decode
+        out, new = block_decode(src, p, *states)
+    else:
+        from ..models.zamba2 import block_decode
+        out, new = block_decode(src, p, states[0], states[1], impl=impl)
+    for rid, old, fresh in zip(op.state_regions, states, new):
+        fresh = fresh.astype(old.dtype)
+        if live is not None:
+            keep = live.reshape((-1,) + (1,) * (old.ndim - 1))
+            fresh = jnp.where(keep, fresh, old)
+        caches[rid] = fresh
+    return out
+
+
 def _run_op(op: ProgramOp, src: jax.Array, regions: dict, params, *,
-            impl: str, interpret: bool | None) -> jax.Array:
+            impl: str, interpret: bool | None, pos=None) -> jax.Array:
     """Dispatch one (stateless) op with its pre-resolved schedule."""
     if op.kernel == "conv2d":
         p = _param(params, op.param_key)
@@ -174,7 +288,14 @@ def _run_op(op: ProgramOp, src: jax.Array, regions: dict, params, *,
         return _run_attention(op, regions, impl=impl, interpret=interpret)
     if op.kernel == "embed":
         table = _param(params, op.param_key)
-        return table[src]
+        out = table[src]
+        if op.param_key_b is not None:
+            pe = _param(params, op.param_key_b)
+            if src.ndim >= 2:      # prefill/stateless: rows [0, S)
+                out = out + pe[: src.shape[1]][None].astype(out.dtype)
+            else:                  # decode: each slot's absolute position
+                out = out + pe[pos].astype(out.dtype)
+        return out
     if op.kernel == "norm":
         return _run_norm(op, src, params)
     if op.kernel == "mul":
@@ -207,6 +328,11 @@ def run(program: Program, params, x: jax.Array, *, impl: str = "auto",
             raise ValueError(
                 f"op {op.name} needs a ProgramState (persistent KV "
                 f"regions); use run_decode for decode Programs")
+        if op.kernel in _FAMILY_KERNELS:
+            regions[op.out_region] = _run_family_op(
+                op, regions[op.in_region], regions, params, None,
+                impl=impl, interpret=interpret)
+            continue
         regions[op.out_region] = _run_op(op, regions[op.in_region], regions,
                                          params, impl=impl,
                                          interpret=interpret)
@@ -354,6 +480,11 @@ def run_prefill(program: Program, params, tokens: jax.Array,
             else:
                 _write_prefill_cache(caches, op, k, v, slot, length)
             regions[op.out_region] = out
+            continue
+        if op.kernel in _FAMILY_KERNELS:
+            regions[op.out_region] = _run_family_op(
+                op, src, regions, params, caches, slot=slot,
+                length=length, impl=impl, interpret=interpret)
             continue
         regions[op.out_region] = _run_op(op, src, regions, params,
                                          impl=impl, interpret=interpret)
@@ -729,8 +860,14 @@ def run_decode(program: Program, params, tokens: jax.Array,
             caches[op.v_cache_region] = cv
             regions[op.out_region] = out
             continue
+        if op.kernel in _FAMILY_KERNELS:
+            regions[op.out_region] = _run_family_op(
+                op, src, regions, params, caches, live=live,
+                impl=impl, interpret=interpret)
+            continue
         regions[op.out_region] = _run_op(op, src, regions, params,
-                                         impl=impl, interpret=interpret)
+                                         impl=impl, interpret=interpret,
+                                         pos=pos)
     return (regions[program.output_region],
             ProgramState(caches, jnp.where(live, pos + 1, pos)))
 
@@ -991,18 +1128,28 @@ def _op_operands(op: ProgramOp, regions: dict, params,
         out["bypass"] = _shape_dtype(regions[op.bypass_region])
     if op.param_key is not None:
         p = _param(params, op.param_key)
-        if isinstance(p, dict):
+        if isinstance(p, dict) and "w" not in p:
+            # Family ops (wkv / ssm_scan / moe_dispatch) carry a whole
+            # block subtree, not a w/b pair; record the leaf count —
+            # these kinds are not rebuildable in isolation (replay
+            # raises, the autotuner keeps them identity-only).
+            out["param_dict"] = [[len(jax.tree.leaves(p))], "tree"]
+        elif isinstance(p, dict):
             out["w"] = _shape_dtype(p["w"])
             if "b" in p:
                 out["b"] = _shape_dtype(p["b"])
+            out["param_dict"] = [[], "dict"]
         else:
             out["w"] = _shape_dtype(p)
-        out["param_dict"] = [[], "dict" if isinstance(p, dict) else "array"]
+            out["param_dict"] = [[], "array"]
     if op.param_key_b is not None:
         out["b"] = _shape_dtype(_param(params, op.param_key_b))
     if caches is not None and op.k_cache_region is not None:
         out["k_cache"] = _shape_dtype(caches[op.k_cache_region])
         out["v_cache"] = _shape_dtype(caches[op.v_cache_region])
+    if caches is not None and op.state_regions:
+        for j, rid in enumerate(op.state_regions):
+            out[f"state{j}"] = _shape_dtype(caches[rid])
     return out
 
 
@@ -1137,14 +1284,15 @@ def trace_program(program: Program, params, x: jax.Array, *,
     that *is* the op's memory traffic.  ``measure=False`` skips the
     timing loops (schema-only traces, e.g. on CI).
     """
-    is_decode = any(op.kernel == "decode_attention" for op in program.ops)
+    is_decode = (any(op.kernel == "decode_attention" for op in program.ops)
+                 or program.name.endswith(".decode"))
     if is_decode and state is None:
         raise ValueError("decode Programs need state=; see run_decode")
     regions: dict[int, jax.Array] = {program.input_region: x}
     caches = dict(state.caches) if state is not None else None
     pos = state.lengths if state is not None else None
     live = None
-    if is_decode:
+    if state is not None:
         live = (jnp.ones(pos.shape, bool) if mask is None
                 else jnp.asarray(mask, bool))
     trace = ExecutorTrace(program=program.name, hw=program.hw_name,
@@ -1180,10 +1328,27 @@ def trace_program(program: Program, params, x: jax.Array, *,
                 out, ck, cv = thunk()
             caches[op.k_cache_region] = ck
             caches[op.v_cache_region] = cv
+        elif op.kernel in _FAMILY_KERNELS:
+            # Each call works on a fresh copy of the pre-op cache dict
+            # so repeated timing runs are idempotent; the real state
+            # advance is applied once from the first call's copy.
+            snap = dict(caches) if caches is not None else None
+
+            def thunk(op=op, src=src, snap=snap):
+                cc = dict(snap) if snap is not None else None
+                res = _run_family_op(op, src, regions, params, cc,
+                                     slot=0, live=live, impl=impl,
+                                     interpret=interpret)
+                return res, cc
+
+            out, cc = thunk()
+            if caches is not None:
+                caches.update(cc)
         else:
             def thunk(op=op, src=src):
                 return _run_op(op, src, regions, params, impl=impl,
-                               interpret=interpret)
+                               interpret=interpret,
+                               pos=pos if is_decode else None)
 
             out = thunk()
         regions[op.out_region] = out

@@ -36,8 +36,8 @@ import jax.numpy as jnp
 from ..core.dataflow import Dataflow
 from ..core.program import AttentionSpec, ProgramOp
 from ..core.tiling import ConvTiling
-from .executor import (TraceRecord, _run_decode_attention, _run_op,
-                       _time_thunk)
+from .executor import (_FAMILY_KERNELS, TraceRecord,
+                       _run_decode_attention, _run_op, _time_thunk)
 
 __all__ = ["op_from_record", "synth_operands", "replay_record",
            "replay_outputs", "error_report"]
@@ -174,6 +174,17 @@ def replay_record(record: TraceRecord | dict, *,
     """
     r = record if isinstance(record, TraceRecord) else \
         TraceRecord.from_dict(record)
+    if r.kind in _FAMILY_KERNELS:
+        # Family ops carry whole-block param subtrees and persistent
+        # state rows the record does not serialize, so they cannot be
+        # rebuilt in isolation.  The autotuner never proposes
+        # candidates for them (autotune.TUNABLE), and the error-table
+        # path (``error_report``) is record-dict based — calibration
+        # still fits these kinds from their traced measurements.
+        raise NotImplementedError(
+            f"replay of family op kind {r.kind!r}: not rebuildable "
+            f"from a trace record (block param subtree + persistent "
+            f"state); these kinds are identity-only in the autotuner")
     op = op_from_record(r, candidate)
     regions, params = synth_operands(r, seed)
     if r.kind == "decode_attention":

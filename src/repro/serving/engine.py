@@ -36,10 +36,20 @@ pools plus a per-slot page table, with admission, copy-on-write prefix
 sharing, and on-demand page allocation decided host-side by a
 ``runtime/executor.py::PagePool`` between jitted calls
 (``n_shared_pages`` / ``n_cow_forks`` count the wins; ``kv_quant=
-"int8"`` additionally halves resident page bytes).  Families without
-a lowering fall back to the legacy ``decode_step`` loop with a single
-warning at engine construction naming the specific blocker
-(``fallback_reason``).
+"int8"`` additionally halves resident page bytes).
+
+Persistent state is *generic named state*, not KV rows: each family's
+``regions.state_specs`` hook mints its own per-slot specs — recurrent
+SSM/conv state (hybrid, O(1) in sequence length), wkv matrices +
+token-shift rows (rwkv), read-only encoder memory written at admission
+by ``ModelApi.encode_memory`` (whisper) — and a ``StateCaps`` record
+that gates the serving features per family: ``paged``/COW needs
+KV-row-granular state, ``chunkable`` prefill needs resumable state
+(``pair.chunk_blocker``), ``speculatable`` needs rollback-by-length-
+truncation.  The engine consults the caps instead of assuming every
+family is KV-shaped.  Families without a lowering (vlm) fall back to
+the legacy ``decode_step`` loop with a single warning at engine
+construction naming the *full* blocker list (``fallback_reason``).
 
 The tick loop itself is throughput-grade (see docs/ARCHITECTURE.md,
 "Serving loop"):
@@ -101,6 +111,10 @@ class Request:
     uid: int
     prompt: np.ndarray               # (len,) int32 tokens, or (H, W, C) image
     max_new_tokens: int = 16
+    # Family side-channel input (ModelApi.extra_input): encoder frames
+    # for audio configs — admission runs ``encode_memory`` over it and
+    # writes the result into the slot's read-only persistent regions.
+    extra: np.ndarray | None = None
     out_tokens: list = field(default_factory=list)
     done: bool = False
 
@@ -166,6 +180,8 @@ class ServingEngine:
         self._pool = None                 # runtime/executor.py::PagePool
         self._slot_prompts: dict[int, tuple] = {}   # donor registry
         self._slot_len: dict[int, int] = {}         # host length mirror
+        self._memory_writer = None        # ModelApi.encode_memory
+        self._memory_input = None         # ModelApi.extra_input
         lm = isinstance(cfg, ArchConfig)
         if (program is not None or use_program) and lm:
             # Stateful LM program path: (prefill, decode) Program pair
@@ -187,7 +203,6 @@ class ServingEngine:
                 # count collapses to the window), so prefer the
                 # recorded geometry and fall back to the region shape
                 # for externally assembled pairs that left it unset.
-                from ..models.transformer import kv_cache_len
                 if program.paged is not None:
                     # Paged plans: pools are slot-agnostic, so geometry
                     # lives in the page table (slots rows) and the
@@ -200,9 +215,21 @@ class ServingEngine:
                                (slots, program.paged.pages_per_slot)),
                               ((program.paged.cache_len,), (max_len,))]
                 else:
-                    checks = [((program.decode.plan
-                                .persistent_regions()[0].shape[:2]),
-                               (slots, kv_cache_len(cfg, max_len)))]
+                    # Generic named state: re-mint the engine config's
+                    # own state specs through the family hook and
+                    # demand the pair's persistent regions match name
+                    # for name, shape for shape.  This catches what the
+                    # recorded geometry alone cannot — a pair compiled
+                    # from a *different* config (e.g. a windowed pair
+                    # handed to a dense engine) whose slots/max_len
+                    # happen to agree but whose region rows do not.
+                    from ..core import regions as _regions
+                    specs, _ = _regions.state_specs(cfg, slots, max_len)
+                    want_specs = {s.name: s.shape for s in specs}
+                    got_specs = {s.name: s.shape
+                                 for s in (program.decode.plan
+                                           .persistent_regions())}
+                    checks = [(got_specs, want_specs)]
                 if program.max_len is not None:
                     checks.append(((program.slots, program.max_len),
                                    (slots, max_len)))
@@ -246,6 +273,15 @@ class ServingEngine:
                 self.cache = None
                 self.program = pair
                 self.state = executor.init_program_state(pair)
+                # Families with admission-written persistent memory
+                # (audio: read-only encoder cross K/V) expose
+                # ``encode_memory`` on their ModelApi; admission runs
+                # it once per request and scatters the returned rows
+                # at the admitted slot *before* the prefill Program's
+                # cross ops read them.
+                fam_api = get_model(cfg)
+                self._memory_writer = fam_api.encode_memory
+                self._memory_input = fam_api.extra_input
                 self._prefill = executor.jitted_prefill_runner(
                     pair.prefill, impl=impl)
                 self._decode = executor.jitted_decode_runner(
@@ -414,6 +450,12 @@ class ServingEngine:
                 "speculative decode over paged KV: the verify burst "
                 "would need per-row page preparation (COW forks) "
                 "inside the tick; serve paged configs without spec_k")
+        if pair.caps is not None and not pair.caps.speculatable:
+            raise NotImplementedError(
+                f"speculative decode needs speculatable family state "
+                f"({self.cfg.name} is family={self.cfg.family}): "
+                f"rollback truncates lengths, which cannot rewind "
+                f"recurrent or capacity-routed state")
         from ..models.transformer import compile_draft_pair
         from ..runtime import executor
         if draft_cfg is None:
@@ -664,6 +706,8 @@ class ServingEngine:
                     break
             flight.event("prefill_start", uid=req.uid, slot=slot,
                          length=len(win), write_from=write_from)
+            if self._memory_writer is not None:
+                self._write_encoder_memory(slot, req)
             if self.chunk_size is not None:
                 padded = np.zeros((self.max_len,), np.int32)
                 padded[:len(win)] = win
@@ -684,6 +728,29 @@ class ServingEngine:
             self._finish_prefill(slot, req, padded,
                                  np.asarray(logits[0, len(win) - 1]),
                                  len(win), finished)
+
+    def _write_encoder_memory(self, slot: int, req: Request) -> None:
+        """Run the family's admission-time memory writer (the whisper
+        encoder + cross K/V projection) over the request's ``extra``
+        input and scatter the returned rows into the pair's read-only
+        persistent regions at the admitted slot.  Happens before the
+        prefill Program runs — its cross-attention ops read these
+        regions — and exactly once per admission: the regions are
+        ``read_only`` in the §5.1 plan, so no decode tick touches
+        them until the slot is re-admitted."""
+        if req.extra is None:
+            raise ValueError(
+                f"request {req.uid}: {self.cfg.family} serving needs "
+                f"Request.extra ({self._memory_input}) to fill the "
+                f"persistent encoder memory at admission")
+        rows = self._memory_writer(
+            self.params, jnp.asarray(req.extra, self.cfg.jdtype),
+            self.cfg, impl=self.impl)
+        persistent = self.program.persistent
+        for name, row in rows.items():
+            rid = persistent[name]
+            buf = self.state.caches[rid]
+            self.state.caches[rid] = buf.at[slot].set(row.astype(buf.dtype))
 
     def _finish_prefill(self, slot: int, req: Request, padded,
                         last_logits, length: int, finished: list) -> None:

@@ -327,18 +327,20 @@ def test_lm_admit_reuses_slot_freed_same_tick():
     assert eng.n_prefills == 2 and eng.n_prefill_recomputes == 0
 
 
-def test_unlowerable_family_warns_with_specific_reason():
-    """Fallback to the legacy loop names the *specific* blocker (here
-    MoE dispatch), never a generic 'not lowered' — and the engine
-    records it for callers that require the program path."""
+def test_unlowerable_family_warns_with_full_blocker_list():
+    """Fallback to the legacy loop names *every* blocker (vlm: family,
+    gated cross-attention, vision inputs), never a generic 'not
+    lowered' or just the first hit — and the engine records the full
+    list for callers that require the program path."""
     from repro.serving import ServingEngine
-    cfg = _cfg(n_experts=2, top_k=1)
+    cfg = REGISTRY["llama-3.2-vision-11b"].smoke()
     params = init_params(transformer.param_defs(cfg), K0)
-    with pytest.warns(RuntimeWarning, match="MoE dispatch"):
+    with pytest.warns(RuntimeWarning, match="family=vlm"):
         eng = ServingEngine(cfg, params, slots=1, max_len=8,
                             impl="reference", use_program=True)
     assert not eng._lm_program
-    assert "MoE dispatch" in eng.fallback_reason
+    for blocker in ("family=vlm", "cross-attention", "vision-encoder"):
+        assert blocker in eng.fallback_reason
 
 
 def test_serve_program_exits_nonzero_on_fallback():
@@ -346,8 +348,9 @@ def test_serve_program_exits_nonzero_on_fallback():
     explicitly-requested program path through the legacy loop."""
     from repro.launch import serve
     with pytest.warns(RuntimeWarning), pytest.raises(SystemExit) as ei:
-        serve.main(["--arch", "zamba2-7b", "--smoke", "--program",
-                    "--slots", "1", "--max-len", "8", "--requests", "0"])
+        serve.main(["--arch", "llama-3.2-vision-11b", "--smoke",
+                    "--program", "--slots", "1", "--max-len", "8",
+                    "--requests", "0"])
     assert ei.value.code == 2
 
 

@@ -80,11 +80,20 @@ def test_program_pallas_interpret_parity():
                                rtol=1e-4, atol=1e-4)
 
 
-def test_non_dense_families_are_gated():
+def test_family_gating_on_transformer_graph():
+    """transformer.to_graph is the dense/MoE lowering: MoE configs lower
+    here now; SSM configs raise (they lower via their own family module,
+    dispatched at compile_program_pair); vlm remains gated and the
+    blocker message names *every* blocker, not just the first."""
+    g = transformer.to_graph(REGISTRY["granite-moe-1b-a400m"].smoke())
+    assert any(n.kind is LayerKind.MOE for n in g.nodes)
     with pytest.raises(NotImplementedError):
         transformer.to_graph(REGISTRY["rwkv6-7b"].smoke())
-    with pytest.raises(NotImplementedError):
-        transformer.to_graph(REGISTRY["granite-moe-1b-a400m"].smoke())
+    with pytest.raises(NotImplementedError) as ei:
+        transformer.to_graph(REGISTRY["llama-3.2-vision-11b"].smoke())
+    msg = str(ei.value)
+    for blocker in ("family=vlm", "cross-attention", "vision-encoder"):
+        assert blocker in msg
 
 
 # --- graph + schedule --------------------------------------------------------------
